@@ -1,0 +1,47 @@
+"""Paper Figure 3 (+ SM-F Figure 4): computed elements vs N and d.
+
+Left: uniform [0,1]^d for d in {2,...,6}; right: shell-weighted unit
+ball for d in {2, 6}. Reports n_computed for trimed (sequential
+paper-faithful AND block TPU variant) vs TOPRANK, and the sqrt(N) fit
+constant xi = n_computed / sqrt(N)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import toprank, trimed_block, trimed_sequential
+
+from .common import save_csv, shell_ball, timed
+
+
+def run(quick: bool = True):
+    ns = [1000, 4000, 16000] if quick else [1000, 4000, 16000, 64000]
+    dims = [2, 4, 6]
+    rows = []
+    for dist in ("uniform", "shell"):
+        for d in dims if dist == "uniform" else [2, 6]:
+            for n in ns:
+                rng = np.random.default_rng(n + d)
+                X = (rng.random((n, d)) if dist == "uniform"
+                     else shell_ball(n, d, seed=n + d))
+                X = X.astype(np.float32)
+                r_seq, t_seq = timed(trimed_sequential, X, seed=0)
+                r_blk, t_blk = timed(trimed_block, X, block=128, seed=0)
+                r_top, t_top = timed(toprank, X, seed=0)
+                assert r_seq.index == r_blk.index == r_top.index
+                xi = r_blk.n_computed / np.sqrt(n)
+                rows.append([
+                    dist, d, n, r_seq.n_computed, r_blk.n_computed,
+                    r_top.n_computed, round(xi, 2),
+                    round(t_seq * 1e6 / n), round(t_blk * 1e6 / n),
+                ])
+                print(f"fig3 {dist} d={d} N={n}: seq={r_seq.n_computed} "
+                      f"blk={r_blk.n_computed} toprank={r_top.n_computed} "
+                      f"xi={xi:.1f}")
+    path = save_csv("fig3", ["dist", "d", "N", "ncomp_seq", "ncomp_block",
+                             "ncomp_toprank", "xi_sqrtN",
+                             "us_per_elem_seq", "us_per_elem_block"], rows)
+    return rows, path
+
+
+if __name__ == "__main__":
+    run()

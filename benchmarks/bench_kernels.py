@@ -1,0 +1,57 @@
+"""Kernel micro-bench: trimed round variants.
+
+On this CPU container the Pallas kernels run in interpret mode (Python),
+so wall-clock is reported for the jnp/XLA-CPU paths; the Pallas paths
+are validated for correctness and their HBM-traffic *model* is reported
+(the quantity that matters on the TPU target): materialised round moves
+(B*N + N*d + B*d) * 4 bytes through HBM, the fused round moves
+(2*N*d + 2*N) * 4 (no D block) — the ratio is the predicted TPU win for
+memory-bound regimes."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import pairwise, sq_norms
+
+from .common import save_csv, timed
+
+
+def run(quick: bool = True):
+    rows = []
+    cases = [(128, 65536, 8), (128, 262144, 8), (128, 65536, 128)]
+    if not quick:
+        cases.append((128, 1048576, 8))
+    for b, n, d in cases:
+        rng = np.random.default_rng(0)
+        xb = jnp.asarray(rng.standard_normal((b, d)), jnp.float32)
+        x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+        xsq = sq_norms(x)
+
+        @jax.jit
+        def jnp_round(xb, x, xsq):
+            dblk = pairwise(xb, x, "l2", b_sq=xsq)
+            e = dblk.sum(axis=1) / x.shape[0]
+            gap = jnp.abs(e[:, None] - dblk)
+            return e, gap.max(axis=0)
+
+        jnp_round(xb, x, xsq)[0].block_until_ready()
+        _, dt = timed(lambda: jax.block_until_ready(jnp_round(xb, x, xsq)),
+                      repeats=3)
+        mat_bytes = (b * n + n * d + b * d + n) * 4
+        fused_bytes = (2 * n * d + 2 * n + 2 * b * d) * 4
+        rows.append([f"round_b{b}_n{n}_d{d}", round(dt * 1e6),
+                     mat_bytes, fused_bytes,
+                     round(mat_bytes / fused_bytes, 2)])
+        print(f"kernels b={b} n={n} d={d}: {dt*1e3:.1f} ms/round, "
+              f"HBM model {mat_bytes/1e6:.0f}MB -> {fused_bytes/1e6:.0f}MB "
+              f"({mat_bytes/fused_bytes:.1f}x)")
+    path = save_csv("kernels", ["name", "us_per_call", "hbm_bytes_mat",
+                                "hbm_bytes_fused", "predicted_tpu_win"],
+                    rows)
+    return rows, path
+
+
+if __name__ == "__main__":
+    run()

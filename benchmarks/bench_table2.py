@@ -1,0 +1,56 @@
+"""Paper Table 2: trikmeds-eps vs KMEDS distance-calculation counts.
+
+Columns mirror the paper: N_c/N^2 (trikmeds-0 distances relative to
+KMEDS's N^2), then phi_c (distances vs eps=0) and phi_E (final energy vs
+eps=0) for eps in {0.01, 0.1}, at K = 10 and K = ceil(sqrt(N))."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import trikmeds
+
+from .common import save_csv
+
+
+def _datasets(n, quick):
+    rng = np.random.default_rng(0)
+    out = {
+        "europe_like2d": rng.random((n, 2)),
+        "conflong_like3d": rng.random((n, 3)),
+        "colormo_like9d": rng.standard_normal((n, 9)),
+    }
+    if not quick:
+        out["mnist50_like"] = rng.standard_normal((n, 50))
+    return out
+
+
+def run(quick: bool = True):
+    n = 2000 if quick else 10000
+    rows = []
+    for name, X in _datasets(n, quick).items():
+        for k in (10, int(np.ceil(np.sqrt(n)))):
+            init = np.random.default_rng(7).choice(len(X), size=k,
+                                                   replace=False)
+            res = {}
+            for eps in (0.0, 0.01, 0.1):
+                res[eps] = trikmeds(X, k, eps=eps, seed=7,
+                                    init_medoids=init)
+            nc_n2 = res[0.0].n_distances / (len(X) ** 2)
+            phi_c1 = res[0.01].n_distances / res[0.0].n_distances
+            phi_e1 = res[0.01].energy / res[0.0].energy
+            phi_c2 = res[0.1].n_distances / res[0.0].n_distances
+            phi_e2 = res[0.1].energy / res[0.0].energy
+            rows.append([name, len(X), k, round(nc_n2, 4),
+                         round(phi_c1, 3), round(phi_e1, 4),
+                         round(phi_c2, 3), round(phi_e2, 4)])
+            print(f"table2 {name:16s} K={k:3d}: Nc/N^2={nc_n2:.3f} "
+                  f"phi_c(.01)={phi_c1:.2f} phi_E(.01)={phi_e1:.3f} "
+                  f"phi_c(.1)={phi_c2:.2f} phi_E(.1)={phi_e2:.3f}")
+    path = save_csv("table2", ["dataset", "N", "K", "Nc_over_N2",
+                               "phi_c_001", "phi_E_001", "phi_c_01",
+                               "phi_E_01"], rows)
+    return rows, path
+
+
+if __name__ == "__main__":
+    run()

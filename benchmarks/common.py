@@ -1,0 +1,49 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+RESULTS_DIR = Path(__file__).resolve().parent.parent / "results"
+
+
+def save_csv(name: str, header: list[str], rows: list[list]):
+    RESULTS_DIR.mkdir(exist_ok=True)
+    path = RESULTS_DIR / f"{name}.csv"
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt
+
+
+def shell_ball(n: int, d: int, seed: int = 0, inner_prob: float = 1 / 20):
+    """Paper SM-F distribution 2: unit ball with density ~19x higher
+    beyond radius (1/2)^(1/d)."""
+    rng = np.random.default_rng(seed)
+    g = rng.standard_normal((n, d))
+    g /= np.linalg.norm(g, axis=1, keepdims=True)
+    u = rng.random(n) ** (1.0 / d)
+    x = g * u[:, None]
+    r_in = 0.5 ** (1.0 / d)
+    inside = np.linalg.norm(x, axis=1) < r_in
+    resample = inside & (rng.random(n) > inner_prob * 10)
+    m = resample.sum()
+    if m:
+        g2 = rng.standard_normal((m, d))
+        g2 /= np.linalg.norm(g2, axis=1, keepdims=True)
+        u2 = (r_in ** d + rng.random(m) * (1 - r_in ** d)) ** (1.0 / d)
+        x[resample] = g2 * u2[:, None]
+    return x

@@ -1,0 +1,63 @@
+"""Render results/dryrun.json into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import RESULTS_DIR
+
+
+def load(path=None):
+    path = Path(path or RESULTS_DIR / "dryrun.json")
+    return json.loads(path.read_text())
+
+
+def table(results: dict, mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | kind | compute_s | memory_s | collective_s |"
+        " dominant | useful | roofline | peak GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key, v in sorted(results.items()):
+        if v.get("mesh") != mesh:
+            continue
+        if v["status"] == "skipped":
+            lines.append(f"| {v['arch']} | {v['shape']} | — | — | — | — | "
+                         f"SKIP: {v['reason']} | — | — | — |")
+            continue
+        if v["status"] != "ok":
+            lines.append(f"| {v['arch']} | {v['shape']} | — | — | — | — | "
+                         f"ERROR | — | — | — |")
+            continue
+        r = v["roofline"]
+        peak = v["memory"]["peak_bytes"] / 2**30
+        lines.append(
+            f"| {v['arch']} | {v['shape']} | {v['kind']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['dominant']} "
+            f"| {r['useful_flop_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+            f"| {peak:.2f} |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = True):
+    try:
+        res = load()
+    except FileNotFoundError:
+        print("roofline: results/dryrun.json missing — run "
+              "`python -m repro.launch.dryrun` first")
+        return [], None
+    ok = sum(1 for v in res.values() if v["status"] == "ok")
+    skip = sum(1 for v in res.values() if v["status"] == "skipped")
+    err = sum(1 for v in res.values() if v["status"] == "error")
+    print(f"roofline cells: {ok} ok, {skip} skipped, {err} error")
+    for mesh in ("single", "multi"):
+        t = table(res, mesh)
+        out = RESULTS_DIR / f"roofline_{mesh}.md"
+        out.write_text(t + "\n")
+        print(f"wrote {out}")
+    return [[k, v["status"]] for k, v in res.items()], None
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints a ``name,us_per_call,derived`` CSV summary line per benchmark and
+writes detailed CSVs under results/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    quick = not args.full
+
+    from . import (bench_fig3, bench_kernels, bench_sme_init, bench_table1,
+                   bench_table2, roofline_report)
+
+    benches = {
+        "fig3_scaling": bench_fig3.run,
+        "table1_datasets": bench_table1.run,
+        "table2_trikmeds": bench_table2.run,
+        "sme_init": bench_sme_init.run,
+        "kernels": bench_kernels.run,
+        "roofline": roofline_report.run,
+    }
+    if args.only:
+        benches = {k: v for k, v in benches.items() if args.only in k}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        t0 = time.perf_counter()
+        try:
+            rows, path = fn(quick=quick)
+            dt = (time.perf_counter() - t0) * 1e6
+            print(f"{name},{dt:.0f},rows={len(rows)};csv={path}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},FAILED,{type(e).__name__}: {e}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

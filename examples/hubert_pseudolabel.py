@@ -1,0 +1,63 @@
+"""Paper-technique-in-the-loop: HuBERT-style masked prediction where the
+training targets are trikmeds MEDOID cluster codes of frame embeddings
+(upstream HuBERT uses k-means — medoids are metric-general and robust).
+
+    PYTHONPATH=src python examples/hubert_pseudolabel.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.data.pseudolabel import assign_targets, build_codebook
+from repro.models import model as M
+from repro.optim import adamw
+
+cfg = get_smoke_config("hubert_xlarge").replace(vocab=32)
+rng = np.random.default_rng(0)
+
+# 1) calibration pass: pool frame embeddings, build the medoid codebook
+calib = rng.standard_normal((2000, M.FRAME_DIM)).astype(np.float32)
+codebook, med_idx = build_codebook(calib, k=cfg.vocab, seed=0)
+print(f"codebook: {codebook.shape[0]} medoid codes "
+      f"(elements {med_idx[:6]}...)")
+
+# 2) label a training batch by nearest-medoid assignment
+B, S = 4, 128
+frames = rng.standard_normal((B, S, M.FRAME_DIM)).astype(np.float32)
+targets = assign_targets(frames, codebook)
+print(f"targets: shape={targets.shape}, "
+      f"{len(np.unique(targets))} distinct codes used")
+
+# 3) masked-prediction training steps
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+opt_cfg = adamw.AdamWConfig(lr=3e-4, warmup_steps=5, total_steps=60)
+opt_state = adamw.init_state(params)
+
+
+@jax.jit
+def step(params, opt_state, frames, mask, targets):
+    def loss_fn(p):
+        return M.train_loss(cfg, p, {"frames": frames, "mask": mask,
+                                     "targets": targets})
+    (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    params, opt_state, _ = adamw.apply_updates(opt_cfg, params, grads,
+                                               opt_state)
+    return params, opt_state, loss
+
+
+mask = jnp.asarray(rng.random((B, S)) < 0.4)
+losses = []
+for i in range(60):
+    params, opt_state, loss = step(params, opt_state,
+                                   jnp.asarray(frames), mask,
+                                   jnp.asarray(targets))
+    losses.append(float(loss))
+    if i % 10 == 0:
+        print(f"step {i:3d} masked-prediction loss {loss:.4f}")
+print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+assert losses[-1] < losses[0]
+print("OK — trikmeds pseudo-labels train the encoder")

@@ -1,0 +1,30 @@
+"""Network centrality: exact medoid (closeness-centrality argmax) of a
+spatial sensor network via trimed + Dijkstra — the paper's Table-1
+setting. Also demos the distributed sharded trimed on a host mesh.
+
+    PYTHONPATH=src python examples/medoid_network.py
+"""
+import os, sys
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core import sensor_network, trimed_sequential
+from repro.core.distributed import trimed_sharded
+
+# --- graph medoid (shortest-path metric, Dijkstra oracle) ---
+g, pts = sensor_network(3000, seed=0, radius_scale=1.6)
+r = trimed_sequential(g, seed=0)
+print(f"sensor network: |V|={g.n}, medoid node={r.index}, "
+      f"energy={r.energy:.4f}, Dijkstra sweeps={r.n_computed} "
+      f"({g.n / r.n_computed:.0f}x fewer than brute force)")
+
+# --- distributed vector medoid on an 8-way data-parallel mesh ---
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+X = np.random.default_rng(0).random((65536, 3)).astype(np.float32)
+rs = trimed_sharded(X, mesh, axis="data", block=128)
+print(f"sharded trimed over {mesh.size} devices: medoid={rs.index} "
+      f"computed={rs.n_computed} rounds={rs.n_rounds}")

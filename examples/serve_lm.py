@@ -1,0 +1,51 @@
+"""Batched serving with continuous batching + medoid KV compression demo.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.models import model as M
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.kv_compress import (compress_cache,
+                                     compressed_decode_attention)
+
+cfg = get_smoke_config("qwen3_4b")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+# --- continuous-batching engine ---
+eng = ServeEngine(cfg, params, n_slots=4, max_len=128)
+rng = np.random.default_rng(0)
+for i in range(6):
+    eng.submit(Request(uid=i, prompt=rng.integers(0, cfg.vocab, 12 + i),
+                       max_new_tokens=8))
+done = eng.run()
+print(f"served {len(done)} requests, e.g. req0 -> {done[0].out_tokens}")
+
+# --- medoid KV compression (beyond-paper, repro.serve.kv_compress) ---
+# Long-context KV caches cluster (attention sinks, local topics): model
+# that with prototype-structured keys; compression is near-exact when
+# the structure exists and degrades gracefully when it doesn't.
+B, S, KV, HD = 1, 256, cfg.n_kv_heads, cfg.head_dim_
+kproto = jax.random.normal(jax.random.PRNGKey(4), (16, KV, HD)) * 2.0
+assign = jax.random.randint(jax.random.PRNGKey(5), (S,), 0, 16)
+keys = (kproto[assign]
+        + 0.05 * jax.random.normal(jax.random.PRNGKey(1), (S, KV, HD)))[None]
+vals = (kproto[assign] * 0.5)[None]
+q = jax.random.normal(jax.random.PRNGKey(3), (B, 1, cfg.n_heads, HD))
+
+from repro.models.attention import decode_attention
+exact = decode_attention(q, keys, vals,
+                         q_position=None, kv_len=jnp.array([S]))
+med_k, mean_v, logm = compress_cache(keys, vals, k=32, n_iter=8)
+approx = compressed_decode_attention(q, med_k, mean_v, logm)
+err = float(jnp.mean(jnp.abs(exact - approx)) / jnp.mean(jnp.abs(exact)))
+print(f"medoid KV compression 256->32 clusters: rel-L1 err {err:.3f}, "
+      f"decode attention cost 8x lower")
+assert err < 0.2, err
+print("OK")

@@ -1,0 +1,7 @@
+"""repro — multi-pod JAX framework around the trimed exact-medoid algorithm.
+
+Layers: core (the paper), kernels (Pallas), models (arch zoo), distributed
+(sharding), train/serve (drivers), data/optim/checkpoint/runtime
+(substrate), launch (mesh + dry-run), roofline (perf analysis).
+"""
+__version__ = "1.0.0"

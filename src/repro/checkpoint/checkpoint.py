@@ -1,0 +1,130 @@
+"""Sharded numpy checkpointing with atomic commit and elastic restore.
+
+Layout:  <dir>/step_<N>/
+             meta.json            (step, spec manifest, mesh shape)
+             arr_<i>.npy          (one file per leaf, full logical array)
+         <dir>/LATEST             (atomic pointer file)
+
+* Writes go to ``step_<N>.tmp`` then ``os.replace`` -> crash-safe.
+* ``keep_last`` old checkpoints are retained, older ones pruned.
+* Restore is *elastic*: arrays are saved as full logical values and
+  re-sharded onto whatever mesh the restoring job brings up (the mesh
+  may have a different data-axis size after a failure — DESIGN.md §5).
+* Async: `save(..., blocking=False)` snapshots to host memory
+  immediately and writes on a background thread so the train loop
+  continues (commit ordering preserved by a single worker queue).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import queue
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self._q: queue.Queue = queue.Queue()
+        self._worker = threading.Thread(target=self._drain, daemon=True)
+        self._worker.start()
+        self._errors: list[Exception] = []
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree, blocking: bool = True):
+        """Snapshot `tree` (pytree of jax/np arrays) at `step`."""
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        if blocking:
+            self._write(step, host_tree)
+        else:
+            self._q.put((step, host_tree))
+
+    def wait(self):
+        self._q.join()
+        if self._errors:
+            raise self._errors[0]
+
+    def _drain(self):
+        while True:
+            step, tree = self._q.get()
+            try:
+                self._write(step, tree)
+            except Exception as e:  # noqa: BLE001
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, host_tree):
+        leaves, treedef = jax.tree.flatten(host_tree)
+        tmp = self.dir / f"step_{step}.tmp"
+        final = self.dir / f"step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir()
+        manifest = []
+        for i, leaf in enumerate(leaves):
+            np.save(tmp / f"arr_{i}.npy", leaf)
+            manifest.append({"shape": list(leaf.shape),
+                             "dtype": str(leaf.dtype)})
+        (tmp / "meta.json").write_text(json.dumps({
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(leaves),
+            "manifest": manifest,
+        }))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        # atomic LATEST pointer
+        ptr_tmp = self.dir / "LATEST.tmp"
+        ptr_tmp.write_text(str(step))
+        os.replace(ptr_tmp, self.dir / "LATEST")
+        self._prune()
+
+    def _prune(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self):
+        return [int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                if not p.name.endswith(".tmp")]
+
+    def latest_step(self):
+        ptr = self.dir / "LATEST"
+        if ptr.exists():
+            s = int(ptr.read_text())
+            if (self.dir / f"step_{s}").exists():
+                return s
+        steps = self.all_steps()
+        return max(steps) if steps else None
+
+    def restore(self, example_tree, step: int | None = None,
+                shardings=None):
+        """Restore into the structure of `example_tree`. If `shardings`
+        (pytree of NamedSharding) is given, leaves are placed sharded —
+        onto whatever mesh those shardings reference (elastic)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = self.dir / f"step_{step}"
+        meta = json.loads((d / "meta.json").read_text())
+        leaves, treedef = jax.tree.flatten(example_tree)
+        assert meta["n_leaves"] == len(leaves), \
+            f"checkpoint has {meta['n_leaves']} leaves, model has {len(leaves)}"
+        loaded = [np.load(d / f"arr_{i}.npy") for i in range(len(leaves))]
+        for ld, ref in zip(loaded, leaves):
+            assert tuple(ld.shape) == tuple(ref.shape), (ld.shape, ref.shape)
+        tree = jax.tree.unflatten(treedef, loaded)
+        if shardings is not None:
+            tree = jax.tree.map(jax.device_put, tree, shardings)
+        return step, tree

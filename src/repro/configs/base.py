@@ -1,0 +1,166 @@
+"""Model/shape configuration system.
+
+``ModelConfig`` is a frozen dataclass covering every assigned architecture
+family (dense / MLA / MoE / SSM / hybrid / encoder / VLM). One module per
+architecture in this package defines ``CONFIG`` (the exact published
+config) and ``smoke()`` (a reduced same-family config for CPU tests).
+
+``SHAPES`` defines the four assigned input shapes; applicability per arch
+is resolved by :func:`cells_for` (DESIGN.md §6 skip table).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0           # routed experts
+    top_k: int = 0
+    d_expert: int = 0            # per-expert ffn hidden
+    n_shared: int = 0            # shared (always-on) experts
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3
+    aux_loss_coef: float = 1e-2
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64            # SSM state size per head
+    d_conv: int = 4              # causal conv window
+    expand: int = 2              # d_inner = expand * d_model
+    head_dim: int = 64           # mamba2 head dim
+    chunk: int = 64              # SSD chunk length
+    attn_every: int = 0          # hybrid: shared attn block period (0 = off)
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64         # lora rank for data-dependent decay w
+    mix_lora: int = 32           # lora rank for token-shift interpolation
+    gate_lora: int = 64
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | encoder | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    attention: str = "gqa"       # gqa | mla | none
+    norm: str = "rms"            # rms | ln
+    act: str = "swiglu"          # swiglu | gelu
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    mla: MLAConfig = field(default_factory=MLAConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    rwkv: RWKVConfig = field(default_factory=RWKVConfig)
+    # vlm / audio frontends are STUBS: inputs are precomputed embeddings
+    n_patches: int = 0           # vlm: image patch embeddings per example
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    moe_ep: bool = False         # shard_map expert-parallel MoE (§Perf)
+    attn_seq_shard: bool = False  # shard attention scores over q-sequence
+    attn_bf16_scores: bool = False  # store scores/probs in bf16 (§Perf)
+    remat_policy: str = "full"   # full | dots (checkpoint_policies)
+    attn_chunk: int = 1024       # blockwise-attention KV chunk
+    eps: float = 1e-5
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_causal(self) -> bool:
+        return self.family != "encoder"
+
+    @property
+    def supports_decode(self) -> bool:
+        return self.family != "encoder"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when long-context decode is admissible (SSM/hybrid/linear)."""
+        return self.family in ("ssm", "hybrid")
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+ARCHS = [
+    "minicpm3_4b",
+    "starcoder2_7b",
+    "codeqwen15_7b",
+    "qwen3_4b",
+    "rwkv6_7b",
+    "internvl2_26b",
+    "hubert_xlarge",
+    "qwen2_moe_a2_7b",
+    "granite_moe_3b_a800m",
+    "zamba2_1_2b",
+]
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.smoke()
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) — DESIGN.md §6 cell accounting."""
+    if shape.kind == "decode" and not cfg.supports_decode:
+        return False, "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: 500k dense decode excluded"
+    return True, ""
+
+
+def cells_for(arch: str) -> list[tuple[ShapeSpec, bool, str]]:
+    cfg = get_config(arch)
+    return [(s, *shape_applicable(cfg, s)) for s in SHAPES.values()]

@@ -1,0 +1,24 @@
+"""codeqwen1.5-7b — qwen1.5-arch dense decoder, MHA (kv=H), SwiGLU.
+[hf:Qwen/CodeQwen1.5-7B] 32L d_model=4096 32H (kv=32) d_ff=13440 vocab=92416."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen15_7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=13440,
+    vocab=92416,
+    rope_theta=1000000.0,
+    # §Perf-validated defaults (EXPERIMENTS.md):
+    attn_seq_shard=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=160,
+        vocab=128, dtype="float32", attn_chunk=32,
+    )

@@ -1,0 +1,28 @@
+"""granite-moe-3b-a800m — MoE decoder: 40 routed experts top-8.
+[hf:ibm-granite/granite-3.0 family] 32L d_model=1536 24H (kv=8)
+d_ff=512/expert vocab=49155."""
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite_moe_3b_a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab=49155,
+    moe=MoEConfig(n_experts=40, top_k=8, d_expert=512, n_shared=0),
+    rope_theta=10000.0,
+    # §Perf-validated defaults (EXPERIMENTS.md):
+    moe_ep=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=48, n_heads=4, n_kv_heads=2, d_ff=64,
+        vocab=128, moe=MoEConfig(n_experts=8, top_k=2, d_expert=64,
+                                 n_shared=0),
+        dtype="float32", attn_chunk=32,
+    )

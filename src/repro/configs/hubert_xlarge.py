@@ -1,0 +1,29 @@
+"""hubert-xlarge — encoder-only audio transformer (w2v2 arch).
+[arXiv:2106.07447] 48L d_model=1280 16H d_ff=5120 vocab=504 (cluster codes).
+Frontend (conv feature extractor) is a STUB: input_specs() supplies
+precomputed frame embeddings. Targets are medoid-cluster codes produced by
+trikmeds (repro.data.pseudolabel) — the paper's technique in the loop.
+Encoder-only: decode shapes are skipped."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert_xlarge",
+    family="encoder",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab=504,
+    norm="ln",
+    act="gelu",
+    # §Perf-validated defaults (EXPERIMENTS.md):
+    remat_policy="dots",
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab=32, dtype="float32", attn_chunk=32,
+    )

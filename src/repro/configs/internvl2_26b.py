@@ -1,0 +1,26 @@
+"""internvl2-26b — VLM: InternLM2-20B text backbone, InternViT frontend STUB.
+[arXiv:2404.16821] 48L d_model=6144 48H (kv=8) d_ff=16384 vocab=92553.
+The modality frontend is a stub: input_specs() supplies 256 precomputed
+patch embeddings per example, linearly projected and prepended to text."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2_26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=92553,
+    n_patches=256,
+    rope_theta=1000000.0,
+    # §Perf-validated defaults (EXPERIMENTS.md):
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab=128, n_patches=8, dtype="float32", attn_chunk=32,
+    )

@@ -1,0 +1,39 @@
+"""minicpm3-4b — dense decoder with Multi-head Latent Attention (MLA).
+[hf:openbmb/MiniCPM3-4B] 62L d_model=2560 40H d_ff=6400 vocab=73448."""
+from .base import MLAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3_4b",
+    family="dense",
+    n_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=6400,
+    vocab=73448,
+    attention="mla",
+    mla=MLAConfig(
+        q_lora_rank=768,
+        kv_lora_rank=256,
+        qk_nope_head_dim=64,
+        qk_rope_head_dim=32,
+        v_head_dim=64,
+    ),
+    rope_theta=10000.0,
+    # §Perf-validated defaults (EXPERIMENTS.md):
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab=257,
+        mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                      qk_nope_head_dim=8, qk_rope_head_dim=8, v_head_dim=8),
+        dtype="float32",
+        attn_chunk=32,
+    )

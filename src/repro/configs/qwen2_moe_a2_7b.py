@@ -1,0 +1,29 @@
+"""qwen2-moe-a2.7b — MoE decoder: 60 routed experts top-4 + 4 shared.
+[hf:Qwen/Qwen1.5-MoE-A2.7B] 24L d_model=2048 16H d_ff=1408/expert
+vocab=151936."""
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen2_moe_a2_7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab=151936,
+    moe=MoEConfig(n_experts=60, top_k=4, d_expert=1408, n_shared=4),
+    rope_theta=1000000.0,
+    # §Perf-validated defaults (EXPERIMENTS.md):
+    attn_seq_shard=True,
+    moe_ep=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=96,
+        vocab=128, moe=MoEConfig(n_experts=8, top_k=2, d_expert=96,
+                                 n_shared=1),
+        dtype="float32", attn_chunk=32,
+    )

@@ -1,0 +1,26 @@
+"""qwen3-4b — dense decoder, GQA kv=8, per-head RMS qk-norm.
+[hf:Qwen/Qwen3 family] 36L d_model=2560 32H (kv=8) d_ff=9728 vocab=151936."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3_4b",
+    family="dense",
+    n_layers=36,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=9728,
+    vocab=151936,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1000000.0,
+    # §Perf-validated defaults (EXPERIMENTS.md):
+    attn_seq_shard=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab=128, head_dim=16, dtype="float32", attn_chunk=32,
+    )

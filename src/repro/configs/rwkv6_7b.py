@@ -1,0 +1,26 @@
+"""rwkv6-7b (Finch) — attention-free RNN with data-dependent decay.
+[arXiv:2404.05892] 32L d_model=4096 d_ff=14336 vocab=65536.
+Sub-quadratic: long_500k decode RUNS for this arch."""
+from .base import ModelConfig, RWKVConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6_7b",
+    family="ssm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,              # wkv heads = d_model / head_dim
+    n_kv_heads=64,
+    d_ff=14336,
+    vocab=65536,
+    attention="none",
+    rwkv=RWKVConfig(head_dim=64, decay_lora=64, mix_lora=32, gate_lora=64),
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab=128, rwkv=RWKVConfig(head_dim=16, decay_lora=8, mix_lora=4,
+                                   gate_lora=8),
+        dtype="float32",
+    )

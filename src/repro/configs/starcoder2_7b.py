@@ -1,0 +1,26 @@
+"""starcoder2-7b — dense decoder, GQA kv=4, RoPE, LN + gelu FFN.
+[arXiv:2402.19173] 32L d_model=4608 36H (kv=4) d_ff=18432 vocab=49152."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2_7b",
+    family="dense",
+    n_layers=32,
+    d_model=4608,
+    n_heads=36,
+    n_kv_heads=4,
+    d_ff=18432,
+    vocab=49152,
+    norm="ln",
+    act="gelu",
+    rope_theta=100000.0,
+    # §Perf-validated defaults (EXPERIMENTS.md):
+    attn_seq_shard=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=72, n_heads=6, n_kv_heads=2, d_ff=144,
+        vocab=128, dtype="float32", attn_chunk=32,
+    )

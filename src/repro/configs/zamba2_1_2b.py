@@ -1,0 +1,29 @@
+"""zamba2-1.2b — hybrid: Mamba2 backbone + shared attention block every 6
+layers (zamba-style weight sharing). [arXiv:2411.15242]
+38L d_model=2048 32H d_ff=8192 vocab=32000 ssm_state=64.
+Sub-quadratic: long_500k decode RUNS for this arch."""
+from .base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2_1_2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32000,
+    ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64, chunk=64,
+                  attn_every=6),
+    # §Perf-validated defaults (EXPERIMENTS.md):
+    attn_seq_shard=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab=128, ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16,
+                                 chunk=16, attn_every=2),
+        dtype="float32", attn_chunk=32,
+    )

@@ -1,0 +1,47 @@
+"""repro.core — the paper's contribution: trimed / trikmeds and baselines."""
+from .distances import (
+    VectorOracle,
+    exact_energies,
+    exact_medoid,
+    pairwise,
+    sq_norms,
+)
+from .trimed import (MedoidResult, TopKResult, medoid, trimed_block,
+                     trimed_sequential, trimed_topk)
+from .trikmeds import TrikmedsResult, kmedoids_jax, trikmeds
+from .baselines import (
+    BaselineResult,
+    KMedoidsResult,
+    kmeds,
+    parkjun_init,
+    rand_medoid,
+    toprank,
+    toprank2,
+)
+from .graph import GraphOracle, sensor_network
+
+__all__ = [
+    "VectorOracle",
+    "GraphOracle",
+    "MedoidResult",
+    "BaselineResult",
+    "KMedoidsResult",
+    "TrikmedsResult",
+    "medoid",
+    "trimed_block",
+    "trimed_sequential",
+    "trimed_topk",
+    "TopKResult",
+    "trikmeds",
+    "kmedoids_jax",
+    "kmeds",
+    "parkjun_init",
+    "rand_medoid",
+    "toprank",
+    "toprank2",
+    "exact_energies",
+    "exact_medoid",
+    "pairwise",
+    "sq_norms",
+    "sensor_network",
+]

@@ -1,0 +1,227 @@
+"""Baselines the paper compares against: RAND, TOPRANK, TOPRANK2, KMEDS.
+
+All host-side (numpy) and instrumented with the same cost unit the paper
+reports — *computed elements* (full distance rows). TOPRANK/TOPRANK2 follow
+the pseudocode in SM-C (Alg. 3-5), including the parameter choices the
+paper uses in its experiments: ``q = 1`` anchor-count constant and
+``alpha' = 1`` for the threshold, ``l0 = sqrt(N)`` / increment ``log N``
+for TOPRANK2.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .distances import VectorOracle
+
+
+@dataclass
+class BaselineResult:
+    index: int
+    energy: float
+    n_computed: int
+    extras: dict = field(default_factory=dict)
+
+
+def _as_oracle(oracle_or_X, metric):
+    if isinstance(oracle_or_X, np.ndarray):
+        return VectorOracle(oracle_or_X, metric)
+    return oracle_or_X
+
+
+# ---------------------------------------------------------------------------
+# RAND (Eppstein & Wang 2004) — Alg. 3
+# ---------------------------------------------------------------------------
+def rand_energies(oracle, n_anchors: int, rng) -> tuple[np.ndarray, np.ndarray]:
+    """Estimate all energies from ``n_anchors`` uniformly sampled anchors.
+    Returns (E_hat, anchor_indices). Distance rows are computed *from* the
+    anchors (Dijkstra-friendly on graphs), giving dist(anchor, j) for all j."""
+    n = oracle.n
+    anchors = rng.choice(n, size=min(n_anchors, n), replace=False)
+    rows = np.stack([oracle.row(i) for i in anchors])      # (A, N)
+    # E_hat(j) = N / (|I| (N-1)) * sum_i dist(x(j), x(i))
+    e_hat = rows.sum(axis=0) * n / (len(anchors) * (n - 1))
+    return e_hat, anchors, rows
+
+
+def rand_medoid(
+    oracle_or_X, epsilon: float = 0.05, seed: int = 0, metric: str = "l2"
+) -> BaselineResult:
+    """RAND used as an approximate medoid finder: log(N)/eps^2 anchors."""
+    oracle = _as_oracle(oracle_or_X, metric)
+    rng = np.random.default_rng(seed)
+    n_anchors = int(np.ceil(np.log(oracle.n) / epsilon**2))
+    e_hat, anchors, _ = rand_energies(oracle, n_anchors, rng)
+    idx = int(np.argmin(e_hat))
+    return BaselineResult(idx, float(e_hat[idx]), oracle.rows_computed)
+
+
+# ---------------------------------------------------------------------------
+# TOPRANK (Okamoto et al. 2008) — Alg. 4
+# ---------------------------------------------------------------------------
+def toprank(
+    oracle_or_X,
+    k: int = 1,
+    alpha: float = 1.0,
+    q: float = 1.0,
+    seed: int = 0,
+    metric: str = "l2",
+) -> BaselineResult:
+    oracle = _as_oracle(oracle_or_X, metric)
+    n = oracle.n
+    rng = np.random.default_rng(seed)
+
+    n_anchors = int(np.ceil(q * n ** (2.0 / 3.0) * np.log(n) ** (1.0 / 3.0)))
+    n_anchors = min(n_anchors, n)
+    e_hat, anchors, rows = rand_energies(oracle, n_anchors, rng)
+
+    # Delta_hat = 2 min_i max_j d(i, j) over anchor rows
+    delta_hat = 2.0 * rows.max(axis=1).min()
+    kth = np.partition(e_hat, k - 1)[k - 1]
+    tau = kth + 2.0 * alpha * delta_hat * np.sqrt(np.log(n) / n_anchors)
+
+    candidates = np.flatnonzero(e_hat <= tau)
+    anchor_set = set(int(a) for a in anchors)
+    best_i, best_e = -1, np.inf
+    for i in candidates:
+        d = oracle.row(int(i))
+        e = d.sum() / (n - 1)
+        if e < best_e:
+            best_i, best_e = int(i), float(e)
+    return BaselineResult(
+        best_i,
+        best_e,
+        oracle.rows_computed,
+        {"n_anchors": n_anchors, "n_candidates": len(candidates), "tau": tau},
+    )
+
+
+# ---------------------------------------------------------------------------
+# TOPRANK2 (Okamoto et al. 2008) — Alg. 5
+# ---------------------------------------------------------------------------
+def toprank2(
+    oracle_or_X,
+    k: int = 1,
+    alpha: float = 1.0,
+    seed: int = 0,
+    metric: str = "l2",
+) -> BaselineResult:
+    oracle = _as_oracle(oracle_or_X, metric)
+    n = oracle.n
+    rng = np.random.default_rng(seed)
+
+    l0 = max(int(np.sqrt(n)), 1)          # SM-C.3: l0 = sqrt(N)
+    q = max(int(np.log(n)), 1)            # increment log(N)
+
+    remaining = rng.permutation(n).tolist()
+    anchors: list[int] = []
+    rows_sum = np.zeros(n)
+    row_max_min = np.inf
+
+    def add_anchors(count):
+        nonlocal row_max_min
+        for _ in range(count):
+            if not remaining:
+                return
+            a = remaining.pop()
+            anchors.append(a)
+            r = oracle.row(a)
+            rows_sum[:] += r
+            row_max_min = min(row_max_min, r.max())
+
+    add_anchors(l0)
+
+    def candidate_set():
+        e_hat = rows_sum * n / (len(anchors) * (n - 1))
+        delta_hat = 2.0 * row_max_min
+        kth = np.partition(e_hat, k - 1)[k - 1]
+        tau = kth + 2.0 * alpha * delta_hat * np.sqrt(np.log(n) / len(anchors))
+        return np.flatnonzero(e_hat <= tau)
+
+    cand = candidate_set()
+    while len(anchors) < n:
+        prev = len(cand)
+        add_anchors(q)
+        cand = candidate_set()
+        if prev - len(cand) < np.log(n):   # break-out criterion (Alg. 5)
+            break
+
+    best_i, best_e = -1, np.inf
+    for i in cand:
+        d = oracle.row(int(i))
+        e = d.sum() / (n - 1)
+        if e < best_e:
+            best_i, best_e = int(i), float(e)
+    return BaselineResult(
+        best_i,
+        best_e,
+        oracle.rows_computed,
+        {"n_anchors": len(anchors), "n_candidates": len(cand)},
+    )
+
+
+# ---------------------------------------------------------------------------
+# KMEDS (Park & Jun 2009) — Alg. 2, with both init schemes
+# ---------------------------------------------------------------------------
+@dataclass
+class KMedoidsResult:
+    medoids: np.ndarray           # (K,) element indices
+    assignment: np.ndarray        # (N,)
+    energy: float                 # sum over elements of dist to its medoid
+    n_distances: int              # scalar distance computations
+    n_iterations: int
+
+
+def parkjun_init(D: np.ndarray, k: int) -> np.ndarray:
+    """Park–Jun initialisation: pick K minimisers of
+    f(i) = sum_j D(i,j) / S(j)."""
+    s = D.sum(axis=0)
+    f = (D / s[None, :]).sum(axis=1)
+    return np.argsort(f)[:k]
+
+
+def kmeds(
+    X: np.ndarray,
+    k: int,
+    init: str = "parkjun",
+    max_iter: int = 100,
+    seed: int = 0,
+    metric: str = "l2",
+    init_medoids: np.ndarray | None = None,
+) -> KMedoidsResult:
+    """The quadratic Voronoi-iteration baseline: all N^2 distances upfront."""
+    oracle = VectorOracle(X, metric)
+    n = oracle.n
+    rng = np.random.default_rng(seed)
+    D = np.stack([oracle.row(i) for i in range(n)])   # Theta(N^2)
+
+    if init_medoids is not None:
+        medoids = np.array(init_medoids, dtype=int).copy()
+    elif init == "parkjun":
+        medoids = parkjun_init(D, k)
+    elif init == "uniform":
+        medoids = rng.choice(n, size=k, replace=False)
+    else:
+        raise ValueError(f"unknown init {init!r}")
+
+    assignment = np.argmin(D[medoids], axis=0)
+    for it in range(max_iter):
+        new_medoids = medoids.copy()
+        for c in range(k):
+            members = np.flatnonzero(assignment == c)
+            if len(members) == 0:
+                continue
+            sub = D[np.ix_(members, members)]
+            new_medoids[c] = members[np.argmin(sub.sum(axis=1))]
+        new_assignment = np.argmin(D[new_medoids], axis=0)
+        converged = np.array_equal(new_medoids, medoids) and np.array_equal(
+            new_assignment, assignment
+        )
+        medoids, assignment = new_medoids, new_assignment
+        if converged:
+            break
+    energy = float(D[medoids][assignment, np.arange(n)].sum())
+    return KMedoidsResult(
+        medoids, assignment, energy, oracle.scalar_distances, it + 1
+    )

@@ -1,0 +1,140 @@
+"""Distributed (sharded) block-trimed via shard_map.
+
+The element set is sharded over one mesh axis (the ``data`` axis of the
+production mesh). Per round (DESIGN.md §2):
+
+* candidate selection: each shard proposes its local top-``B`` surviving
+  bounds; an ``all_gather`` of ``(B,)`` scores + ``(B, d)`` vectors is
+  followed by a replicated global top-``B`` — communication ``O(P·B·d)``,
+  tiny next to the ``B·N/P·d`` local distance block;
+* energies: local partial row-sums + ``psum`` over the axis;
+* bound updates: fully local;
+* termination: ``psum`` of local survivor counts.
+
+Every shard finishes with identical ``(medoid_index, energy)``, so the
+mapped function's outputs are replicated.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .distances import pairwise, sq_norms
+from .trimed import MedoidResult
+
+
+def _sharded_round(axis, metric, block, body_state):
+    (xl, sql, l, computed, e_cl, m_cl, n_computed, n_rounds) = body_state
+    n_local, d = xl.shape
+    p_idx = jax.lax.axis_index(axis)
+    n_shards = jax.lax.axis_size(axis)
+    gbase = p_idx.astype(jnp.int32) * n_local
+
+    # --- local candidate proposal ---
+    survivor = jnp.logical_and(~computed, l < e_cl)
+    score = jnp.where(survivor, -l, -jnp.inf)
+    loc_top, loc_idx = jax.lax.top_k(score, block)
+
+    # --- global candidate election (replicated on every shard) ---
+    all_scores = jax.lax.all_gather(loc_top, axis)                 # (P, B)
+    all_gidx = jax.lax.all_gather(loc_idx.astype(jnp.int32) + gbase, axis)
+    all_vecs = jax.lax.all_gather(jnp.take(xl, loc_idx, axis=0), axis)
+    flat_scores = all_scores.reshape(-1)
+    top, flat_pos = jax.lax.top_k(flat_scores, block)              # (B,)
+    valid = top > -jnp.inf
+    cand_gidx = all_gidx.reshape(-1)[flat_pos]                     # (B,)
+    xb = all_vecs.reshape(-1, d)[flat_pos]                         # (B, d)
+
+    # --- distance block against local shard + global energy psum ---
+    d_blk = pairwise(
+        xb, xl, metric,
+        a_sq=sq_norms(xb) if metric in ("l2", "sqeuclidean") else None,
+        b_sq=sql if metric in ("l2", "sqeuclidean") else None,
+    )                                                              # (B, n_local)
+    e_blk = jax.lax.psum(d_blk.sum(axis=1), axis) / (n_local * n_shards)
+    e_blk = jnp.where(valid, e_blk, jnp.inf)
+
+    b_best = jnp.argmin(e_blk)
+    better = e_blk[b_best] < e_cl
+    e_cl = jnp.where(better, e_blk[b_best], e_cl)
+    m_cl = jnp.where(better, cand_gidx[b_best], m_cl)
+
+    # --- local bound update against all B pivots ---
+    gap = jnp.abs(e_blk[:, None] - d_blk)
+    gap = jnp.where(valid[:, None], gap, -jnp.inf)
+    l = jnp.maximum(l, gap.max(axis=0))
+
+    # --- mark computed candidates owned by this shard; tighten their bound
+    owned = jnp.logical_and(
+        valid,
+        jnp.logical_and(cand_gidx >= gbase, cand_gidx < gbase + n_local),
+    )
+    local_pos = jnp.clip(cand_gidx - gbase, 0, n_local - 1)
+    l = l.at[local_pos].set(
+        jnp.where(owned, jnp.where(jnp.isfinite(e_blk), e_blk, l[local_pos]), l[local_pos])
+    )
+    computed = computed.at[local_pos].set(
+        jnp.logical_or(computed[local_pos], owned)
+    )
+    n_computed = n_computed + valid.sum()
+    return (xl, sql, l, computed, e_cl, m_cl, n_computed, n_rounds + 1)
+
+
+def _trimed_sharded_fn(xl, axis, metric, block):
+    n_local = xl.shape[0]
+    sql = sq_norms(xl) if metric in ("l2", "sqeuclidean") else jnp.zeros(n_local, xl.dtype)
+    state = (
+        xl,
+        sql,
+        jnp.zeros(n_local, xl.dtype),            # l
+        jnp.zeros(n_local, bool),                # computed
+        jnp.asarray(jnp.inf, xl.dtype),          # e_cl
+        jnp.asarray(-1, jnp.int32),              # m_cl
+        jnp.asarray(0, jnp.int32),               # n_computed
+        jnp.asarray(0, jnp.int32),               # n_rounds
+    )
+
+    def cond(state):
+        _, _, l, computed, e_cl = state[:5]
+        local_alive = jnp.logical_and(~computed, l < e_cl).sum()
+        return jax.lax.psum(local_alive, axis) > 0
+
+    state = jax.lax.while_loop(
+        cond, functools.partial(_sharded_round, axis, metric, block), state
+    )
+    _, _, _, _, e_cl, m_cl, n_computed, n_rounds = state
+    return m_cl, e_cl, n_computed, n_rounds
+
+
+def trimed_sharded(
+    X,
+    mesh: Mesh,
+    axis: str = "data",
+    block: int = 128,
+    metric: str = "l2",
+) -> MedoidResult:
+    """Exact medoid of ``X`` sharded over ``mesh[axis]``. ``X.shape[0]``
+    must divide evenly by the axis size (pad upstream with +inf-energy
+    sentinels if needed; `repro.data.coreset` does this)."""
+    n, d = X.shape
+    n_shards = mesh.shape[axis]
+    if n % n_shards:
+        raise ValueError(f"N={n} not divisible by axis size {n_shards}")
+    spec_in = P(axis)
+    fn = jax.shard_map(
+        functools.partial(_trimed_sharded_fn, axis=axis, metric=metric,
+                          block=int(min(block, n // n_shards))),
+        mesh=mesh,
+        in_specs=(spec_in,),
+        out_specs=(P(), P(), P(), P()),
+        check_vma=False,
+    )
+    X = jax.device_put(X, NamedSharding(mesh, spec_in))
+    m, e, n_comp, n_rounds = jax.jit(fn)(X)
+    e_paper = float(e) * n / max(n - 1, 1)
+    return MedoidResult(int(m), e_paper, int(n_comp), int(n_rounds), int(n_comp) * n)

@@ -1,0 +1,187 @@
+"""Graph distance oracle — shortest-path metric for spatial-network data.
+
+The paper's Table 1 runs trimed on road/rail/sensor networks where
+``dist`` is shortest-path length and "computing an element" means one
+Dijkstra sweep. Shortest-path is pointer-chasing work with no TPU
+analogue (DESIGN.md §7), so this oracle is host-side; the *algorithmic*
+layer (trimed's bound logic) is shared with the vector path.
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+
+class GraphOracle:
+    """Instrumented Dijkstra oracle over an adjacency list.
+
+    ``adj`` maps node -> list of (neighbor, weight). Unreachable nodes get
+    distance ``inf``; trimed handles this correctly (their bound only ever
+    grows, and an element with infinite energy is never a medoid candidate
+    in a connected component).
+    """
+
+    def __init__(self, adj: dict[int, list[tuple[int, float]]], n: int):
+        self.adj = adj
+        self.n = n
+        self.rows_computed = 0
+        self.scalar_distances = 0
+
+    def row(self, i: int) -> np.ndarray:
+        self.rows_computed += 1
+        self.scalar_distances += self.n
+        dist = np.full(self.n, np.inf)
+        dist[i] = 0.0
+        heap = [(0.0, i)]
+        while heap:
+            d, u = heapq.heappop(heap)
+            if d > dist[u]:
+                continue
+            for v, w in self.adj.get(u, ()):
+                nd = d + w
+                if nd < dist[v]:
+                    dist[v] = nd
+                    heapq.heappush(heap, (nd, v))
+        return dist
+
+    def pair(self, i: int, j: int) -> float:
+        # single-pair shortest path: run Dijkstra with early exit
+        self.scalar_distances += 1
+        dist = {i: 0.0}
+        heap = [(0.0, i)]
+        while heap:
+            d, u = heapq.heappop(heap)
+            if u == j:
+                return d
+            if d > dist.get(u, np.inf):
+                continue
+            for v, w in self.adj.get(u, ()):
+                nd = d + w
+                if nd < dist.get(v, np.inf):
+                    dist[v] = nd
+                    heapq.heappush(heap, (nd, v))
+        return float("inf")
+
+    def subrow(self, i: int, idx: np.ndarray) -> np.ndarray:
+        self.scalar_distances += len(idx) - self.n  # row() adds n below
+        return self.row(i)[idx]
+
+
+def largest_component(
+    adj: dict[int, list[tuple[int, float]]], n: int, directed: bool = False
+) -> tuple[dict[int, list[tuple[int, float]]], np.ndarray]:
+    """Restrict a graph to its largest (strongly) connected component and
+    relabel nodes 0..m-1. The paper's network datasets are connected; random
+    sensor nets near the connectivity threshold are not, and the medoid is
+    undefined on a disconnected graph (all energies infinite)."""
+    if not directed:
+        # union-find
+        parent = list(range(n))
+
+        def find(x):
+            while parent[x] != x:
+                parent[x] = parent[parent[x]]
+                x = parent[x]
+            return x
+
+        for u, edges in adj.items():
+            for v, _ in edges:
+                ru, rv = find(u), find(v)
+                if ru != rv:
+                    parent[ru] = rv
+        comp: dict[int, list[int]] = {}
+        for i in range(n):
+            comp.setdefault(find(i), []).append(i)
+        keep = max(comp.values(), key=len)
+    else:
+        # Kosaraju (iterative) for largest SCC
+        order: list[int] = []
+        seen = [False] * n
+        for s in range(n):
+            if seen[s]:
+                continue
+            stack = [(s, iter(adj.get(s, ())))]
+            seen[s] = True
+            while stack:
+                u, it = stack[-1]
+                advanced = False
+                for v, _ in it:
+                    if not seen[v]:
+                        seen[v] = True
+                        stack.append((v, iter(adj.get(v, ()))))
+                        advanced = True
+                        break
+                if not advanced:
+                    order.append(u)
+                    stack.pop()
+        radj: dict[int, list[int]] = {i: [] for i in range(n)}
+        for u, edges in adj.items():
+            for v, _ in edges:
+                radj[v].append(u)
+        comp_id = [-1] * n
+        comps: list[list[int]] = []
+        for s in reversed(order):
+            if comp_id[s] != -1:
+                continue
+            cid = len(comps)
+            comps.append([])
+            stack2 = [s]
+            comp_id[s] = cid
+            while stack2:
+                u = stack2.pop()
+                comps[cid].append(u)
+                for v in radj[u]:
+                    if comp_id[v] == -1:
+                        comp_id[v] = cid
+                        stack2.append(v)
+        keep = max(comps, key=len)
+
+    keep_sorted = sorted(keep)
+    remap = {old: new for new, old in enumerate(keep_sorted)}
+    new_adj: dict[int, list[tuple[int, float]]] = {i: [] for i in range(len(keep_sorted))}
+    for old in keep_sorted:
+        for v, w in adj.get(old, ()):
+            if v in remap:
+                new_adj[remap[old]].append((remap[v], w))
+    return new_adj, np.array(keep_sorted)
+
+
+def sensor_network(
+    n: int, seed: int = 0, directed: bool = False, radius_scale: float = 1.25
+) -> tuple[GraphOracle, np.ndarray]:
+    """The paper's U-/D-Sensor Net generator (SM-I): n points uniform in the
+    unit square, edge when distance < radius_scale / sqrt(n) (the paper
+    writes ``1.25 sqrt(N)`` — with unit-square density this is the
+    connectivity-threshold scaling ``c / sqrt(N)``). Euclidean edge weights;
+    directed edges get a random direction."""
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, 2))
+    r = radius_scale / np.sqrt(n)
+    # grid binning for near-neighbour search
+    cell = r
+    grid: dict[tuple[int, int], list[int]] = {}
+    for i, p in enumerate(pts):
+        grid.setdefault((int(p[0] / cell), int(p[1] / cell)), []).append(i)
+    adj: dict[int, list[tuple[int, float]]] = {i: [] for i in range(n)}
+    for (cx, cy), members in grid.items():
+        neigh = []
+        for dx in (-1, 0, 1):
+            for dy in (-1, 0, 1):
+                neigh.extend(grid.get((cx + dx, cy + dy), ()))
+        for i in members:
+            for j in neigh:
+                if j <= i:
+                    continue
+                w = float(np.linalg.norm(pts[i] - pts[j]))
+                if w < r:
+                    if directed:
+                        if rng.random() < 0.5:
+                            adj[i].append((j, w))
+                        else:
+                            adj[j].append((i, w))
+                    else:
+                        adj[i].append((j, w))
+                        adj[j].append((i, w))
+    adj, keep = largest_component(adj, n, directed=directed)
+    return GraphOracle(adj, len(keep)), pts[keep]

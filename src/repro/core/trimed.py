@@ -1,0 +1,267 @@
+"""trimed — the paper's sub-quadratic exact medoid algorithm.
+
+Two implementations:
+
+* :func:`trimed_sequential` — paper-faithful Alg. 1 (host-side, any metric
+  via an oracle). This is the validation oracle and the *paper-faithful
+  baseline* in EXPERIMENTS.md §Perf. One pivot per step, random shuffle
+  order, bounds updated after every computed element.
+
+* :func:`trimed_block` — the TPU-native block-synchronous adaptation
+  (DESIGN.md §2): per round, the ``B`` surviving candidates with the
+  smallest lower bounds are computed together as one matmul-shaped
+  ``(B, N)`` distance block, energies are row-reductions, and all ``N``
+  bounds are tightened against all ``B`` pivots in one fused update.
+  Exactness is preserved — bounds only ever take values that Theorem 3.1's
+  triangle-inequality argument proves are valid lower bounds — at a waste
+  of at most ``B-1`` extra computed elements per round.
+
+Energies use the sum-including-self convention ``E = S/N`` (see
+``distances.py``) under which ``E(j) >= |E(i) - d(i,j)|`` holds exactly.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .distances import VectorOracle, pairwise, sq_norms
+
+
+@dataclass
+class MedoidResult:
+    index: int                 # argmin element
+    energy: float              # E = S/(N-1): the paper's normalisation
+    n_computed: int            # number of computed elements (full rows)
+    n_rounds: int = 0          # block rounds (block variant only)
+    n_distances: int = 0       # scalar distance evaluations
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful sequential algorithm (Alg. 1)
+# ---------------------------------------------------------------------------
+def trimed_sequential(
+    oracle_or_X,
+    seed: int = 0,
+    metric: str = "l2",
+    eps: float = 0.0,
+    order: np.ndarray | None = None,
+) -> MedoidResult:
+    """Alg. 1 of the paper. ``eps > 0`` gives the §4 relaxation: element
+    ``i`` is computed only if ``l(i) * (1 + eps) < E_cl``, guaranteeing a
+    ``(1+eps)``-approximate medoid."""
+    if isinstance(oracle_or_X, (np.ndarray, jnp.ndarray)):
+        oracle = VectorOracle(np.asarray(oracle_or_X), metric)
+    else:
+        oracle = oracle_or_X
+    n = oracle.n
+    if n == 1:
+        return MedoidResult(0, 0.0, 1, 0, oracle.scalar_distances)
+
+    rng = np.random.default_rng(seed)
+    if order is None:
+        order = rng.permutation(n)          # line 3: shuffle
+    l = np.zeros(n)                          # line 1: lower bounds
+    m_cl, e_cl = -1, np.inf                  # line 2
+    n_computed = 0
+    for i in order:
+        if l[i] * (1.0 + eps) < e_cl:        # line 4 (+ §4 relaxation)
+            d = oracle.row(i)                # lines 5-7
+            n_computed += 1
+            e_i = d.sum() / n                # line 8 (tight bound, E=S/N)
+            l[i] = e_i
+            if e_i < e_cl:                   # lines 9-11
+                m_cl, e_cl = int(i), float(e_i)
+            gap = np.abs(e_i - d)            # lines 12-14
+            # inf-energy pivots carry no information about elements at
+            # infinite distance (|inf - inf| = nan): drop those bounds.
+            if not np.isfinite(e_i):
+                gap = np.where(np.isnan(gap), 0.0, gap)
+            np.maximum(l, gap, out=l)
+            l[i] = e_i                       # keep own bound tight
+    energy = e_cl * n / (n - 1)              # report paper normalisation
+    return MedoidResult(m_cl, energy, n_computed, 0, oracle.scalar_distances)
+
+
+# ---------------------------------------------------------------------------
+# TPU block-synchronous algorithm
+# ---------------------------------------------------------------------------
+def _select_candidates(l, computed, e_cl, block, policy, key):
+    """Pick up to ``block`` surviving candidates. Returns (idx, valid)."""
+    survivor = jnp.logical_and(~computed, l < e_cl)
+    if policy == "lowest_bound":
+        score = jnp.where(survivor, -l, -jnp.inf)
+    elif policy == "random":
+        score = jnp.where(
+            survivor, jax.random.uniform(key, l.shape), -jnp.inf
+        )
+    else:
+        raise ValueError(f"unknown candidate policy {policy!r}")
+    top, idx = jax.lax.top_k(score, block)
+    valid = top > -jnp.inf
+    return idx, valid
+
+
+def _round_body(X, x_sq, metric, block, policy, distance_fn, fused_round_fn,
+                state):
+    l, computed, e_cl, m_cl, n_computed, n_rounds, key = state
+    n = X.shape[0]
+    key, sub = jax.random.split(key)
+    idx, valid = _select_candidates(l, computed, e_cl, block, policy, sub)
+
+    xb = jnp.take(X, idx, axis=0)                     # (B, d) pivot block
+    if fused_round_fn is not None:
+        # Pallas fused path: (B, N) block never materialised in HBM.
+        e_blk, l = fused_round_fn(xb, X, l, valid)
+        e_blk = jnp.where(valid, e_blk, jnp.inf)
+    else:
+        if distance_fn is None:
+            d_blk = pairwise(xb, X, metric, a_sq=jnp.take(x_sq, idx), b_sq=x_sq)
+        else:
+            d_blk = distance_fn(xb, X)                # (B, N) — Pallas path
+        e_blk = d_blk.sum(axis=1) / n                 # exact energies E=S/N
+        e_blk = jnp.where(valid, e_blk, jnp.inf)
+        # fused bound tightening: l(j) <- max(l(j), max_b |E(b) - D(b,j)|)
+        gap = jnp.abs(e_blk[:, None] - d_blk)         # (B, N)
+        gap = jnp.where(valid[:, None], gap, -jnp.inf)
+        l = jnp.maximum(l, gap.max(axis=0))
+
+    # best candidate in this round vs. incumbent
+    b_best = jnp.argmin(e_blk)
+    e_best = e_blk[b_best]
+    better = e_best < e_cl
+    e_cl = jnp.where(better, e_best, e_cl)
+    m_cl = jnp.where(better, idx[b_best], m_cl)
+
+    # computed candidates: bound is now tight (their exact energy)
+    l = l.at[idx].set(jnp.where(valid, jnp.where(jnp.isinf(e_blk), l[idx], e_blk), l[idx]))
+    computed = computed.at[idx].set(jnp.logical_or(computed[idx], valid))
+    n_computed = n_computed + valid.sum()
+    return (l, computed, e_cl, m_cl, n_computed, n_rounds + 1, key)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "metric", "policy", "distance_fn",
+                     "fused_round_fn"),
+)
+def _trimed_block_jit(X, seed, block, metric, policy, distance_fn,
+                      fused_round_fn):
+    n = X.shape[0]
+    x_sq = sq_norms(X) if metric in ("l2", "sqeuclidean") else jnp.zeros(n)
+    key = jax.random.PRNGKey(seed)
+
+    state = (
+        jnp.zeros(n, X.dtype),                    # l
+        jnp.zeros(n, bool),                       # computed
+        jnp.asarray(jnp.inf, X.dtype),            # e_cl
+        jnp.asarray(-1, jnp.int32),               # m_cl
+        jnp.asarray(0, jnp.int32),                # n_computed
+        jnp.asarray(0, jnp.int32),                # n_rounds
+        key,
+    )
+
+    def cond(state):
+        l, computed, e_cl = state[0], state[1], state[2]
+        return jnp.any(jnp.logical_and(~computed, l < e_cl))
+
+    body = functools.partial(
+        _round_body, X, x_sq, metric, block, policy, distance_fn,
+        fused_round_fn,
+    )
+    state = jax.lax.while_loop(cond, body, state)
+    l, computed, e_cl, m_cl, n_computed, n_rounds, _ = state
+    return m_cl, e_cl, n_computed, n_rounds
+
+
+def trimed_block(
+    X,
+    seed: int = 0,
+    block: int = 128,
+    metric: str = "l2",
+    policy: str = "lowest_bound",
+    distance_fn: Callable | None = None,
+    fused_round_fn: Callable | None = None,
+) -> MedoidResult:
+    """Block-synchronous exact medoid on device. ``distance_fn`` overrides
+    the ``(B, N)`` distance-block computation; ``fused_round_fn`` (see
+    ``repro.kernels.ops.fused_round``) replaces the whole round with the
+    Pallas distance-block-free kernels."""
+    X = jnp.asarray(X)
+    n = X.shape[0]
+    block = int(min(block, n))
+    m, e, n_comp, n_rounds = _trimed_block_jit(
+        X, seed, block, metric, policy, distance_fn, fused_round_fn
+    )
+    e_paper = float(e) * n / max(n - 1, 1)
+    return MedoidResult(
+        int(m), e_paper, int(n_comp), int(n_rounds), int(n_comp) * n
+    )
+
+
+def medoid(X, backend: str = "block", **kw) -> MedoidResult:
+    """Convenience dispatcher used by the public API and examples."""
+    if backend == "block":
+        return trimed_block(X, **kw)
+    if backend == "sequential":
+        return trimed_sequential(np.asarray(X), **kw)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+# ---------------------------------------------------------------------------
+# Exact top-k ranking (the paper's §6 extension)
+# ---------------------------------------------------------------------------
+@dataclass
+class TopKResult:
+    indices: np.ndarray          # (k,) lowest-energy elements, ascending
+    energies: np.ndarray         # (k,) paper normalisation S/(N-1)
+    n_computed: int
+
+
+def trimed_topk(
+    oracle_or_X,
+    k: int,
+    seed: int = 0,
+    metric: str = "l2",
+) -> TopKResult:
+    """Exact k lowest-energy elements ("ranking of closeness centrality",
+    TOPRANK's original task). Same bound machinery as trimed, with the
+    elimination threshold being the k-th best computed energy: when
+    ``l(i) >= E_k`` the true energy is also >= E_k, so ``i`` cannot enter
+    the top-k. The paper's §6 notes this extension is immediate."""
+    if isinstance(oracle_or_X, (np.ndarray, jnp.ndarray)):
+        oracle = VectorOracle(np.asarray(oracle_or_X), metric)
+    else:
+        oracle = oracle_or_X
+    n = oracle.n
+    k = min(k, n)
+    rng = np.random.default_rng(seed)
+    l = np.zeros(n)
+    best: list[tuple[float, int]] = []     # (energy, index), len <= k
+    e_k = np.inf                           # k-th best energy so far
+    n_computed = 0
+    for i in rng.permutation(n):
+        if l[i] < e_k:
+            d = oracle.row(i)
+            n_computed += 1
+            e_i = d.sum() / n
+            l[i] = e_i
+            best.append((e_i, int(i)))
+            best.sort()
+            if len(best) > k:
+                best.pop()
+            if len(best) == k:
+                e_k = best[-1][0]
+            gap = np.abs(e_i - d)
+            if not np.isfinite(e_i):
+                gap = np.where(np.isnan(gap), 0.0, gap)
+            np.maximum(l, gap, out=l)
+            l[i] = e_i
+    idx = np.array([i for _, i in best])
+    en = np.array([e for e, _ in best]) * n / max(n - 1, 1)
+    return TopKResult(idx, en, n_computed)

@@ -1,0 +1,40 @@
+"""Medoid coreset selection / dedup for the data pipeline (paper hook).
+
+Given a stream of sequence embeddings, pick K representative sequences
+(medoids) per pool and optionally drop near-duplicates (elements within
+``dedup_eps`` of a medoid other than itself). Runs the device-side
+K-medoids (`core.trikmeds.kmedoids_jax`) per pool; for multi-device
+pools the sharded trimed (`core.distributed`) finds the global medoid of
+each pool shard-locally with only O(B d) communication per round."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distances import pairwise
+from repro.core.trikmeds import kmedoids_jax
+
+
+def mean_pool_embed(params_embed: jnp.ndarray, tokens: jnp.ndarray):
+    """Cheap sequence embedding: mean-pooled token embeddings."""
+    emb = jnp.take(params_embed, tokens, axis=0)   # (B, S, D)
+    return emb.mean(axis=1)
+
+
+def select_coreset(embeddings, k: int, seed: int = 0):
+    """Returns indices of K medoid sequences in the pool."""
+    m_idx, assign, energy = kmedoids_jax(
+        jnp.asarray(embeddings, jnp.float32), k, seed=seed)
+    return np.asarray(m_idx), np.asarray(assign), float(energy)
+
+
+def dedup(embeddings, medoid_idx, assign, eps: float):
+    """Keep medoids + all elements farther than eps from their medoid."""
+    X = jnp.asarray(embeddings, jnp.float32)
+    med = jnp.take(X, jnp.asarray(medoid_idx), axis=0)
+    d = pairwise(X, med)                            # (N, K)
+    dmed = jnp.take_along_axis(d, jnp.asarray(assign)[:, None], 1)[:, 0]
+    keep = np.asarray(dmed) > eps
+    keep[np.asarray(medoid_idx)] = True
+    return np.flatnonzero(keep)

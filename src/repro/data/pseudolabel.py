@@ -1,0 +1,36 @@
+"""HuBERT-style pseudo-labels from trikmeds medoid clustering.
+
+HuBERT's training targets are cluster codes of (masked) audio frames.
+Upstream uses k-means; here the codebook is the set of K *medoids*
+(paper technique — valid in any metric, robust to outliers):
+
+1. pool a calibration set of frame embeddings,
+2. run device-side K-medoids (K = codebook size, e.g. the 504-tier),
+3. targets = nearest-medoid index per frame.
+
+The returned codebook is reusable across the corpus (targets for new
+frames are a single (T, K) distance argmin)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distances import pairwise
+from repro.core.trikmeds import kmedoids_jax
+
+
+def build_codebook(frames: np.ndarray, k: int, seed: int = 0,
+                   n_iter: int = 8):
+    """frames: (N, F) pooled calibration frames. Returns (codebook
+    (K, F) medoid vectors, medoid indices)."""
+    X = jnp.asarray(frames, jnp.float32)
+    m_idx, _, _ = kmedoids_jax(X, k, seed=seed, n_iter=n_iter)
+    return np.asarray(jnp.take(X, m_idx, axis=0)), np.asarray(m_idx)
+
+
+def assign_targets(frames: np.ndarray, codebook: np.ndarray):
+    """frames: (B, T, F) -> targets (B, T) int32 nearest-medoid codes."""
+    b, t, f = frames.shape
+    d = pairwise(jnp.asarray(frames.reshape(b * t, f), jnp.float32),
+                 jnp.asarray(codebook, jnp.float32))
+    return np.asarray(jnp.argmin(d, axis=1).reshape(b, t).astype(jnp.int32))

@@ -1,0 +1,101 @@
+"""Pipeline parallelism utility (GPipe-style, collective_permute ring).
+
+The assigned production meshes spend their axes on (pod, data, model),
+so PP is not enabled for the 40 dry-run cells — this module provides the
+stage-loop for deeper meshes (e.g. ("data", "stage", "model") on 1000+
+node jobs, where a 62-layer minicpm3 pipeline cuts the per-chip layer
+count and with it the weight-streaming floor).
+
+Schedule: classic GPipe — M microbatches flow through S stages inside a
+`shard_map` over the `stage` axis; activations hop stages with
+`collective_permute`; each chip runs only its own stage's layer slice
+(selected by `axis_index`). Bubble fraction = (S-1)/(M+S-1). The
+backward pass is jax-autodiff'd through the whole schedule
+(collective_permute transposes to the reverse permutation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _stage_slice(stacked, stage, per_stage):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, stage * per_stage,
+                                               per_stage, 0), stacked)
+
+
+def pipeline_apply(layer_fn, stacked_params, x, *, n_stages: int,
+                   microbatches: int, axis: str = "stage"):
+    """Run ``layer_fn(params_i, h) -> h`` for every layer, pipelined.
+
+    stacked_params: pytree with leading layer dim L (L % n_stages == 0);
+    x: (B, ...) global microbatchable input (B % microbatches == 0).
+    Must be called under shard_map/jit with mesh axis ``axis`` of size
+    ``n_stages`` (see ``make_pipeline_fn``).
+    """
+    L = jax.tree.leaves(stacked_params)[0].shape[0]
+    per_stage = L // n_stages
+    stage = jax.lax.axis_index(axis)
+    my_params = _stage_slice(stacked_params, stage, per_stage)
+
+    def run_stage(h):
+        def body(h, lp):
+            return layer_fn(lp, h), None
+        h, _ = jax.lax.scan(body, h, my_params)
+        return h
+
+    b = x.shape[0]
+    mb = b // microbatches
+    xs = x.reshape(microbatches, mb, *x.shape[1:])
+    n_ticks = microbatches + n_stages - 1
+    fwd_perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    buf = jnp.zeros_like(xs[0])
+    outs = jnp.zeros_like(xs)
+
+    def tick(carry, t):
+        buf, outs = carry
+        # stage 0 ingests microbatch t (if in range)
+        take = jnp.clip(t, 0, microbatches - 1)
+        injected = jnp.where(
+            (stage == 0) & (t < microbatches), xs[take], buf)
+        h = run_stage(injected)
+        # last stage emits result for microbatch t - (S-1)
+        emit_idx = t - (n_stages - 1)
+        emit = (stage == n_stages - 1) & (emit_idx >= 0)
+        outs = jax.lax.cond(
+            emit,
+            lambda o: o.at[jnp.clip(emit_idx, 0, microbatches - 1)].set(h),
+            lambda o: o,
+            outs)
+        # hop to the next stage
+        buf = jax.lax.ppermute(h, axis, fwd_perm)
+        return (buf, outs), None
+
+    (buf, outs), _ = jax.lax.scan(tick, (buf, outs),
+                                  jnp.arange(n_ticks))
+    # results live on the last stage; broadcast around the ring so every
+    # stage returns the same value (replicated out_spec)
+    outs = jax.lax.psum(
+        jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs)), axis)
+    return outs.reshape(b, *x.shape[1:])
+
+
+def make_pipeline_fn(layer_fn, mesh, *, n_stages: int, microbatches: int,
+                     axis: str = "stage"):
+    """Wrap `pipeline_apply` in shard_map over the stage axis: params
+    arrive replicated, activations replicated (batch sharding over other
+    axes composes outside)."""
+    fn = functools.partial(pipeline_apply, layer_fn,
+                           n_stages=n_stages, microbatches=microbatches,
+                           axis=axis)
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(), P()),
+        out_specs=P(),
+        check_vma=False,
+    )

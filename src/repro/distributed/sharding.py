@@ -1,0 +1,205 @@
+"""Sharding rules: param/optimizer/batch/cache PartitionSpecs.
+
+Parallelism layout on the production mesh (DESIGN.md §5):
+
+* ``model`` axis — tensor parallel (attention heads, FFN hidden, vocab)
+  and expert parallel (MoE expert dim);
+* ``data`` (× ``pod``) — data parallel for activations; ZeRO-1 for
+  optimizer state (fp32 master/m/v sharded on ``data`` over the first
+  large replicated dim); optional FSDP (params sharded on ``data`` too);
+* decode caches: batch on ``data`` normally; the ``long_500k`` cell
+  (batch=1) shards the *sequence* axis of the KV cache on ``data``
+  instead (flash-decode style).
+
+Rules are name-based over the param tree; everything under ``layers``
+gets a leading ``None`` for the stacked layer dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL = "model"
+
+# last-path-component -> rule kind
+_COL = {  # (in, out) with out sharded on `model`
+    "wq", "wk", "wv", "wg", "wr", "ck", "cr", "w_gate", "w_up",
+    "wuq", "wuk", "wuv", "w_in", "frontend_proj", "vision_proj", "wdq",
+}
+_ROW = {  # (in, out) with in sharded on `model`
+    "wo", "w_down", "cv", "w_out",
+}
+_REPL = {  # always replicated
+    "router", "mix_a", "mix_b", "decay_a", "decay_b", "wdkv",
+}
+
+
+def batch_axes(mesh: Mesh):
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+def _leaf_spec(path, leaf, cfg, fsdp: bool, msize: int):
+    names = [p.key for p in path if hasattr(p, "key")]
+    name = names[-1] if names else ""
+    stacked = bool(names) and names[0] == "layers"
+    nd = leaf.ndim - (1 if stacked else 0)
+    shape = leaf.shape[1:] if stacked else leaf.shape
+    fs = "data" if fsdp else None
+
+    def ok(dim):  # jax.jit requires input dims divide the partition count
+        return dim % msize == 0
+
+    if name == "embed":
+        if ok(shape[0]):
+            spec = (MODEL, None)          # vocab-sharded
+        elif ok(shape[1]):
+            spec = (None, MODEL)          # fallback: d_model-sharded
+        else:
+            spec = (None, None)
+    elif name == "lm_head":
+        if ok(shape[1]):
+            spec = (None, MODEL)
+        elif ok(shape[0]):
+            spec = (MODEL, None)          # row-parallel fallback
+        else:
+            spec = (None, None)
+    elif name in _REPL or nd <= 1:
+        spec = (None,) * nd
+    elif name in _COL:
+        if nd == 3:          # MoE expert tensors (E, d, h)
+            if ok(shape[0]):
+                spec = (MODEL, None, None)          # EP
+            elif ok(shape[2]):
+                spec = (None, None, MODEL)          # TP-within-expert
+            else:
+                spec = (None, None, None)
+        else:
+            spec = (fs, MODEL) if ok(shape[1]) else (
+                (MODEL, None) if ok(shape[0]) else (None, None))
+    elif name in _ROW:
+        if nd == 3:          # (E, h, d)
+            if ok(shape[0]):
+                spec = (MODEL, None, None)
+            elif ok(shape[1]):
+                spec = (None, MODEL, None)
+            else:
+                spec = (None, None, None)
+        else:
+            spec = (MODEL, fs) if ok(shape[0]) else (
+                (None, MODEL) if ok(shape[1]) else (None, None))
+    elif name == "conv_w":   # depthwise conv (K, C): channels on model
+        spec = (None, MODEL) if ok(shape[1]) else (None, None)
+    else:
+        spec = (None,) * nd
+    if stacked:
+        spec = (None, *spec)
+    return P(*spec)
+
+
+def param_specs(cfg, params_tree, fsdp: bool = False, msize: int = 16):
+    """PartitionSpec pytree matching `params_tree` (arrays or
+    ShapeDtypeStructs). ``msize`` = model-axis size (for divisibility
+    fallbacks)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, cfg, fsdp, msize),
+        params_tree)
+
+
+def zero1_spec(spec: P, shape, data_size: int, min_size: int = 1024) -> P:
+    """Add `data` (ZeRO-1) on the first unsharded dim that divides."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (ax, dim) in enumerate(zip(parts, shape)):
+        if ax is None and dim % data_size == 0 and dim >= min_size:
+            parts[i] = "data"
+            return P(*parts)
+    return P(*parts)
+
+
+def opt_specs(cfg, params_tree, data_size: int, fsdp: bool = False,
+              msize: int = 16):
+    """Specs for AdamWState: step replicated; master/m/v ZeRO-1."""
+    pspecs = param_specs(cfg, params_tree, fsdp, msize)
+    z = jax.tree.map(
+        lambda spec, leaf: zero1_spec(spec, leaf.shape, data_size),
+        pspecs, params_tree)
+    from repro.optim.adamw import AdamWState
+
+    return AdamWState(step=P(), master=z, m=z, v=z)
+
+
+def batch_specs(cfg, batch_tree, mesh: Mesh, shard_batch: bool = True):
+    bx = batch_axes(mesh) if shard_batch else ()
+
+    def leaf(path, x):
+        if not shard_batch or x.shape[0] == 1:
+            return P(*(None,) * x.ndim)
+        return P(bx, *(None,) * (x.ndim - 1))
+
+    return jax.tree_util.tree_map_with_path(leaf, batch_tree)
+
+
+def cache_specs(cfg, cache_tree, mesh: Mesh, *, seq_sharded: bool):
+    """Decode-cache specs. Leaves have a stacked leading dim (layers or
+    attn groups). Heuristics by rank/name:
+
+    * gqa kv (L, B, S, KV, hd): B on data / S on data (long ctx), KV on model
+    * mla   (L, B, S, r):       B on data / S on data
+    * rwkv wkv (L, B, H, hd, hd): H on model
+    * conv/ssm states: feature dims on model
+    """
+    bx = batch_axes(mesh)
+
+    msize = mesh.shape.get(MODEL, 1)
+    bsize = 1
+    for ax in bx:
+        bsize *= mesh.shape.get(ax, 1)
+
+    def leaf(path, x):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        nd = x.ndim
+
+        def ok_b(dim):
+            return dim % bsize == 0 and dim > 1
+
+        def ok_m(dim):
+            return dim % msize == 0
+
+        if name in ("k", "v"):            # (G/L, B, S, KV, hd)
+            _, b, s, kv, hd = x.shape
+            bax = bx if (not seq_sharded and ok_b(b)) else None
+            sax = bx if seq_sharded else None
+            if ok_m(kv):                  # head-sharded cache
+                return P(None, bax, sax, MODEL, None)
+            if sax is None and ok_m(s):   # flash-decode: seq on model
+                return P(None, bax, MODEL, None, None)
+            if ok_m(hd):                  # last resort: head_dim
+                return P(None, bax, sax, None, MODEL)
+            return P(None, bax, sax, None, None)
+        if name in ("c_kv", "k_rope"):    # (L, B, S, r) — MLA latent
+            _, b, s, r = x.shape
+            bax = bx if (not seq_sharded and ok_b(b)) else None
+            sax = bx if seq_sharded else (MODEL if ok_m(s) else None)
+            return P(None, bax, sax, None)
+        bax = bx if (not seq_sharded and ok_b(x.shape[1])) else None
+        if name == "wkv":                 # (L, B, H, hd, hd)
+            return P(None, bax, MODEL if ok_m(x.shape[2]) else None,
+                     None, None)
+        if name in ("sx_t", "sx_c"):      # (L, B, 1, D)
+            return P(None, bax, None, MODEL if ok_m(x.shape[3]) else None)
+        if name == "conv":                # (L, B, K-1, C)
+            return P(None, bax, None, MODEL if ok_m(x.shape[3]) else None)
+        if name == "ssm":                 # (L, B, H, P, N)
+            return P(None, bax, MODEL if ok_m(x.shape[2]) else None,
+                     None, None)
+        return P(*(None,) * nd)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_tree)
+
+
+def shard_tree(tree, specs, mesh: Mesh):
+    """device_put a pytree according to specs."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)

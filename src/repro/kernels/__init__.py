@@ -1,0 +1,17 @@
+"""repro.kernels — Pallas TPU kernels (validated in interpret mode on CPU).
+
+* pairwise / energy / bound-update: the trimed block round (fused variant
+  never materialises the (B, N) distance block in HBM);
+* flash_attention: GQA forward attention, online softmax in VMEM scratch.
+ops.py holds the jit'd public wrappers; ref.py the pure-jnp oracles.
+"""
+from . import ops, pairwise, ref
+from .flash_attention import flash_attention
+from .ops import (block_energies, bound_update, fused_round,
+                  make_pallas_distance_fn, pairwise_distances)
+
+__all__ = [
+    "ops", "pairwise", "ref", "flash_attention", "block_energies",
+    "bound_update", "fused_round", "make_pallas_distance_fn",
+    "pairwise_distances",
+]

@@ -1,0 +1,125 @@
+"""Pallas flash-attention forward kernel (GQA, causal/bidirectional).
+
+The §Perf analysis shows every dense LM cell is memory-term dominated by
+materialised attention scores; this kernel is the documented next lever:
+scores/probs live only in VMEM (same recompute-over-materialise trade as
+the trimed fused round). HBM traffic per (batch, head): Q + K + V + O
+— no S^2 tensor.
+
+Layout: q is reshaped to (B*KV*G, Sq, hd) and k/v to (B*KV, Sk, hd);
+grid = (B*KV*G, nq, nk) with the KV-block axis innermost so the online-
+softmax accumulators (m, l, acc) persist in VMEM scratch across the kv
+sweep of each (head, q-block). Causal masking is applied per element;
+fully-masked blocks short-circuit via `pl.when` (on TPU Mosaic this
+skips the MXU work; interpret mode just branches).
+
+Forward only: the training path keeps the jnp blockwise formulation
+(autodiff), serving/prefill can adopt this kernel on TPU. Validated
+against `models.attention.blockwise_attention` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_body(causal, sq_real, sk_real, bq, bk, scale,
+                q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    live = jnp.logical_and(q_pos < sq_real, k_pos < sk_real)
+    if causal:
+        live = jnp.logical_and(live, q_pos >= k_pos)
+
+    # block is relevant unless completely masked (causal upper triangle)
+    relevant = (not causal) or (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale        # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)         # (bq, bk)
+        s = jnp.where(live, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        v = v_ref[0].astype(jnp.float32)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool | None = None):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd); H % KV == 0.
+    Returns (B, Sq, H, hd) attention output, fp32 accumulation."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = hd ** -0.5
+
+    bq = min(bq, max(8, sq))
+    bk = min(bk, max(8, sk))
+    pq, pk = (-sq) % bq, (-sk) % bk
+    sq_p, sk_p = sq + pq, sk + pk
+
+    # heads-major layout: (B*KV*G, S, hd) for q, (B*KV, S, hd) for k/v
+    qh = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, hd)
+    kh = jnp.moveaxis(k, 2, 1).reshape(b * kv, sk, hd)
+    vh = jnp.moveaxis(v, 2, 1).reshape(b * kv, sk, hd)
+    if pq:
+        qh = jnp.pad(qh, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        kh = jnp.pad(kh, ((0, 0), (0, pk), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pk), (0, 0)))
+
+    grid = (b * h, sq_p // bq, sk_p // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_body, causal, sq, sk, bq, bk, scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda i, qi, ki: (i, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda i, qi, ki: (i // g, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda i, qi, ki: (i // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda i, qi, ki: (i, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max m
+            pltpu.VMEM((bq,), jnp.float32),       # running denom l
+            pltpu.VMEM((bq, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    out = out[:, :sq].reshape(b, h, sq, hd)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,111 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles padding (``d`` to a multiple of 128 lanes, ``N`` to a multiple of
+the tile), fp32 norm precomputation, and CPU fallback via
+``interpret=True`` (the kernel body runs in Python on CPU — numerically
+identical, used by tests and this container). On TPU the same code path
+compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import pairwise as _pk
+from .pairwise import DEFAULT_TN, LANE
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _prep(xb, x, tn):
+    """Pad operands: d -> multiple of LANE, N -> multiple of tn."""
+    xb = xb.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    b, d = xb.shape
+    n = x.shape[0]
+    d_pad = (-d) % LANE
+    n_pad = (-n) % tn
+    if d_pad:
+        xb = jnp.pad(xb, ((0, 0), (0, d_pad)))
+        x = jnp.pad(x, ((0, 0), (0, d_pad)))
+    if n_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, 0)))
+    bsq = jnp.sum(xb * xb, axis=1)[None, :]          # (1, B)
+    xsq = jnp.sum(x * x, axis=1)[None, :]            # (1, Npad)
+    return xb, x, bsq, xsq, n
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "tn", "interpret"))
+def pairwise_distances(xb, x, metric="l2", tn=DEFAULT_TN, interpret=None):
+    """(B, N) distance block via the Pallas kernel."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = x.shape[0]
+    tn = min(tn, max(LANE, n))
+    xb_p, x_p, bsq, xsq, n_real = _prep(xb, x, tn)
+    out = _pk.pairwise_kernel(
+        xb_p, x_p, bsq, xsq, n_real=n_real, tn=tn, metric=metric,
+        interpret=interpret,
+    )
+    return out[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "tn", "interpret"))
+def block_energies(xb, x, metric="l2", tn=DEFAULT_TN, interpret=None):
+    """(B,) un-normalised energies (row sums) without materialising D."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = x.shape[0]
+    tn = min(tn, max(LANE, n))
+    xb_p, x_p, bsq, xsq, n_real = _prep(xb, x, tn)
+    return _pk.energy_kernel(
+        xb_p, x_p, bsq, xsq, n_real=n_real, tn=tn, metric=metric,
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "tn", "interpret"))
+def bound_update(xb, x, e, valid, l, metric="l2", tn=DEFAULT_TN,
+                 interpret=None):
+    """Fused l(j) <- max(l(j), max_b |E(b) - D(b, j)|) without
+    materialising D. ``valid`` masks padded/dead pivots."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = x.shape[0]
+    tn = min(tn, max(LANE, n))
+    xb_p, x_p, bsq, xsq, n_real = _prep(xb, x, tn)
+    n_pad = x_p.shape[0] - n
+    l_p = jnp.pad(l.astype(jnp.float32), (0, n_pad))[None, :]
+    e_p = e.astype(jnp.float32)[None, :]
+    v_p = valid.astype(jnp.int32)[None, :]
+    out = _pk.bound_update_kernel(
+        xb_p, x_p, bsq, xsq, e_p, v_p, l_p, n_real=n_real, tn=tn,
+        metric=metric, interpret=interpret,
+    )
+    return out[:n]
+
+
+def fused_round(xb, x, l, valid, metric="l2", tn=DEFAULT_TN, interpret=None):
+    """One trimed block round: exact pivot energies (normalised by N) and
+    the tightened bound vector — the ``(B, N)`` distance block never
+    touches HBM. Drop-in ``distance-free`` replacement for the jnp round
+    in ``core.trimed`` (wired up via ``trimed_block_pallas``)."""
+    n = x.shape[0]
+    e_sum = block_energies(xb, x, metric=metric, tn=tn, interpret=interpret)
+    e = e_sum / n
+    l_new = bound_update(xb, x, e, valid, l, metric=metric, tn=tn,
+                         interpret=interpret)
+    return e, l_new
+
+
+def make_pallas_distance_fn(metric="l2", tn=DEFAULT_TN, interpret=None):
+    """Adapter for ``core.trimed.trimed_block(distance_fn=...)``: computes
+    the materialised (B, N) block with the Pallas kernel."""
+    def fn(xb, x):
+        return pairwise_distances(xb, x, metric=metric, tn=tn,
+                                  interpret=interpret)
+    return fn

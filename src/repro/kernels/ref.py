@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose references)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_ref(xb: jnp.ndarray, x: jnp.ndarray, metric: str = "l2") -> jnp.ndarray:
+    """(B, N) distance block, fp32 accumulation."""
+    xb = xb.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    if metric in ("l2", "sqeuclidean"):
+        d2 = (
+            jnp.sum(xb * xb, axis=1)[:, None]
+            + jnp.sum(x * x, axis=1)[None, :]
+            - 2.0 * (xb @ x.T)
+        )
+        d2 = jnp.maximum(d2, 0.0)
+        return d2 if metric == "sqeuclidean" else jnp.sqrt(d2)
+    if metric == "l1":
+        return jnp.abs(xb[:, None, :] - x[None, :, :]).sum(-1)
+    raise ValueError(metric)
+
+
+def energy_ref(xb: jnp.ndarray, x: jnp.ndarray, metric: str = "l2") -> jnp.ndarray:
+    """(B,) row-sums of the distance block (un-normalised energies)."""
+    return pairwise_ref(xb, x, metric).sum(axis=1)
+
+
+def bound_update_ref(
+    xb: jnp.ndarray,
+    x: jnp.ndarray,
+    e: jnp.ndarray,
+    l: jnp.ndarray,
+    valid: jnp.ndarray,
+    metric: str = "l2",
+) -> jnp.ndarray:
+    """l(j) <- max(l(j), max_b |E(b) - D(b, j)|), only over valid pivots."""
+    d = pairwise_ref(xb, x, metric)
+    gap = jnp.abs(e.astype(jnp.float32)[:, None] - d)
+    gap = jnp.where(valid[:, None], gap, -jnp.inf)
+    return jnp.maximum(l.astype(jnp.float32), gap.max(axis=0))
+
+
+def fused_round_ref(xb, x, l, valid, metric: str = "l2"):
+    """Reference for the fused trimed round: energies + bound update,
+    normalising E by N (sum-including-self convention)."""
+    n = x.shape[0]
+    e_sum = energy_ref(xb, x, metric)
+    e = e_sum / n
+    l_new = bound_update_ref(xb, x, e, l, valid, metric)
+    return e, l_new

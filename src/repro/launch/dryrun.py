@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax import/init: jax locks the device count on first
+# initialisation, and the production dry-run needs 512 placeholder
+# devices (2 pods x 16 x 16). Smoke tests / benches run in separate
+# processes and see the single real CPU device.
+
+"""Multi-pod dry-run: lower + compile every applicable
+(architecture x input-shape x mesh) cell against the production mesh and
+record memory/cost/collective statistics for the roofline analysis.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--out results/dryrun.json]
+
+Each cell is lowered with ShapeDtypeStruct stand-ins (no allocation),
+compiled for the 16x16 (and 2x16x16) SPMD mesh, and the compiled
+artifact's ``memory_analysis()`` / ``cost_analysis()`` plus a parse of
+its HLO collectives are appended to the output JSON (incremental — safe
+to re-run; finished cells are skipped unless --force).
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+
+def _compile_once(cfg, shape, mesh, *, fsdp, microbatches, compress,
+                  save_hlo=None):
+    import jax
+
+    from repro.launch import specs as sp
+    from repro.roofline.analysis import collective_bytes
+
+    with jax.set_mesh(mesh):   # ambient mesh: GSPMD + shard_map(EP) see it
+        kind, args = sp.input_specs(cfg, shape, mesh, fsdp=fsdp)
+        fn = sp.step_fn(cfg, kind, microbatches=microbatches,
+                        compress=compress)
+        # buffer donation (§Perf): train steps update params/opt/err
+        # in place; decode/prefill update the KV cache in place — without
+        # donation XLA copies the whole state every step.
+        donate = {"train": (0, 1, 2), "decode": (2,), "prefill": (2,),
+                  "encode": ()}[kind]
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        if save_hlo:
+            Path(save_hlo).write_text(hlo)
+    return {
+        "kind": kind,
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "collective_bytes": coll["total"],
+        "collectives": coll["by_kind"],
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+    }
+
+
+def _probe_costs(cfg, shape, mesh, **kw):
+    """Layer-extrapolated costs.
+
+    XLA's cost_analysis counts a while-loop body once, so the production
+    (scan-over-layers) compile under-reports flops/collectives. We lower
+    two small UNROLLED probes (n1 and n2 layers, dense single-chunk
+    attention so no inner scans hide cost) on the same mesh/sharding and
+    extrapolate linearly over layers — exact for homogeneous stacks.
+    Residual undercount: RWKV's WKV time-scan (<1% of its flops) and
+    Mamba2's SSD chunk scan (~4%), both documented in EXPERIMENTS.md.
+    """
+    if cfg.family == "hybrid":
+        n1, n2 = cfg.ssm.attn_every, 2 * cfg.ssm.attn_every
+    else:
+        n1, n2 = 1, 2
+    dense_chunk = max(cfg.attn_chunk, shape.seq_len)
+    probe_cfg = cfg.replace(scan_layers=False, attn_chunk=dense_chunk)
+    r1 = _compile_once(probe_cfg.replace(n_layers=n1), shape, mesh, **kw)
+    r2 = _compile_once(probe_cfg.replace(n_layers=n2), shape, mesh, **kw)
+    scale = (cfg.n_layers - n1) / (n2 - n1)
+
+    def extrap(a, b):
+        return a + (b - a) * scale
+
+    kinds = set(r1["collectives"]) | set(r2["collectives"])
+    return {
+        "flops": extrap(r1["flops"], r2["flops"]),
+        "bytes_accessed": extrap(r1["bytes_accessed"],
+                                 r2["bytes_accessed"]),
+        "collective_bytes": extrap(r1["collective_bytes"],
+                                   r2["collective_bytes"]),
+        "collectives": {k: extrap(r1["collectives"].get(k, 0),
+                                  r2["collectives"].get(k, 0))
+                        for k in kinds},
+        "probe_layers": [n1, n2],
+    }
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               *, fsdp: bool = False, microbatches: int = 1,
+               compress: bool = False, save_hlo: str | None = None,
+               probes: bool = True, cfg_override=None):
+    from repro.configs.base import SHAPES, get_config, shape_applicable
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline.analysis import roofline_terms
+
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kw = dict(fsdp=fsdp, microbatches=microbatches, compress=compress)
+    t0 = time.time()
+    # 1) full production compile: proves the cell lowers + fits memory
+    full = _compile_once(cfg, shape, mesh, save_hlo=save_hlo, **kw)
+    t_full = time.time() - t0
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "kind": full["kind"],
+        "status": "ok",
+        "n_chips": mesh.size,
+        "compile_s": round(t_full, 1),
+        "memory": full["memory"],
+        "scanned_body_flops": full["flops"],
+    }
+    # 2) unrolled probes for layer-true cost numbers
+    if probes:
+        t1 = time.time()
+        costs = _probe_costs(cfg, shape, mesh, **kw)
+        rec.update(costs)
+        rec["probe_s"] = round(time.time() - t1, 1)
+    else:
+        rec.update({k: full[k] for k in
+                    ("flops", "bytes_accessed", "collective_bytes",
+                     "collectives")})
+    rec["roofline"] = roofline_terms(cfg, shape, rec)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--baseline", action="store_true",
+                    help="strip §Perf optimization flags (moe_ep, "
+                         "attn_seq_shard, remat policy) to regenerate "
+                         "the pre-hillclimb baseline artifact")
+    args = ap.parse_args(argv)
+
+    from repro.configs.base import ARCHS, SHAPES, get_config
+
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = {}
+    if out_path.exists():
+        results = {tuple(k.split("|")): v
+                   for k, v in json.loads(out_path.read_text()).items()}
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                key = (arch, shape, "multi" if multi else "single")
+                if key in results and results[key]["status"] in (
+                        "ok", "skipped") and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[lower ] {key} ...", flush=True)
+                try:
+                    cfg_override = None
+                    if args.baseline:
+                        cfg_override = get_config(arch).replace(
+                            moe_ep=False, attn_seq_shard=False,
+                            remat_policy="full")
+                    rec = lower_cell(arch, shape, multi, fsdp=args.fsdp,
+                                     microbatches=args.microbatches,
+                                     compress=args.compress,
+                                     save_hlo=args.save_hlo,
+                                     cfg_override=cfg_override)
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                    n_fail += 1
+                results[key] = rec
+                out_path.write_text(json.dumps(
+                    {"|".join(k): v for k, v in results.items()}, indent=1))
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" flops={rec['flops']:.3e}"
+                             f" coll={rec['collective_bytes']:.3e}B"
+                             f" compile={rec['compile_s']}s")
+                print(f"[{status:7s}] {key}{extra}", flush=True)
+
+    print(f"done; {n_fail} failures -> {out_path}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

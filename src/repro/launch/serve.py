@@ -1,0 +1,48 @@
+"""Serving CLI: batched continuous decode on a smoke config.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3_4b \
+        --requests 8 --slots 4 --new-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_4b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.configs.base import get_smoke_config
+    from repro.models import model as M
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_smoke_config(args.arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, n_slots=args.slots,
+                      max_len=args.max_len, temperature=args.temperature)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 32))
+        eng.submit(Request(uid=i,
+                           prompt=rng.integers(0, cfg.vocab, plen),
+                           max_new_tokens=args.new_tokens))
+    done = eng.run()
+    for r in sorted(done, key=lambda r: r.uid):
+        print(f"req {r.uid}: prompt[{len(r.prompt)}] -> "
+              f"{len(r.out_tokens)} tokens: {r.out_tokens[:8]}...")
+    print(f"served {len(done)} requests")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

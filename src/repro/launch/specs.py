@@ -1,0 +1,125 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+No device allocation: params/optimizer come from ``jax.eval_shape`` over
+the real init functions, batches are constructed directly, and every
+struct is tagged with its NamedSharding so ``jit(...).lower()`` sees the
+production layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed import sharding as sh
+from repro.models import model as M
+from repro.optim import adamw
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_struct(cfg: ModelConfig, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encoder":
+        return {
+            "frames": SDS((b, s, M.FRAME_DIM), jnp.float32),
+            "mask": SDS((b, s), jnp.bool_),
+            "targets": SDS((b, s), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        return {
+            "tokens": SDS((b, s - cfg.n_patches), jnp.int32),
+            "patches": SDS((b, cfg.n_patches, M.VISION_DIM), jnp.float32),
+        }
+    return {"tokens": SDS((b, s), jnp.int32)}
+
+
+def params_struct(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(functools.partial(M.init_params, cfg), key)
+
+
+def opt_struct(params):
+    return jax.eval_shape(adamw.init_state, params)
+
+
+def cache_struct(cfg: ModelConfig, batch: int, seq: int):
+    return jax.eval_shape(
+        functools.partial(M.init_cache, cfg, batch, seq))
+
+
+def with_shardings(tree, specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s, sp: SDS(s.shape, s.dtype,
+                          sharding=NamedSharding(mesh, sp)),
+        tree, specs)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                fsdp: bool = False):
+    """Returns (kind, arg_structs) where arg_structs match the step fn:
+
+    train   -> (params, opt_state, err_buf, batch)
+    prefill -> (params, batch, cache)
+    decode  -> (params, token, cache, index)
+    """
+    msize = mesh.shape["model"]
+    pspec = sh.param_specs(cfg, params_struct(cfg), fsdp, msize)
+    params = with_shardings(params_struct(cfg), pspec, mesh)
+
+    if shape.kind == "train":
+        opt = opt_struct(params)
+        ospec = sh.opt_specs(cfg, params_struct(cfg), mesh.shape["data"],
+                             fsdp, msize)
+        opt = with_shardings(opt, ospec, mesh)
+        batch = train_batch_struct(cfg, shape)
+        bspec = sh.batch_specs(cfg, batch, mesh)
+        batch = with_shardings(batch, bspec, mesh)
+        return "train", (params, opt, {}, batch)
+
+    seq_sharded = shape.global_batch == 1          # long_500k policy
+    cache = cache_struct(cfg, shape.global_batch, shape.seq_len)
+    cspec = sh.cache_specs(cfg, cache, mesh, seq_sharded=seq_sharded)
+    cache = with_shardings(cache, cspec, mesh)
+
+    if shape.kind == "prefill":
+        if cfg.family == "encoder":
+            batch = train_batch_struct(cfg, shape)
+            bspec = sh.batch_specs(cfg, batch, mesh)
+            return "encode", (params, with_shardings(batch, bspec, mesh))
+        batch = {"tokens": SDS((shape.global_batch, shape.seq_len),
+                               jnp.int32)}
+        bspec = sh.batch_specs(cfg, batch, mesh)
+        batch = with_shardings(batch, bspec, mesh)
+        return "prefill", (params, batch, cache)
+
+    # decode
+    bx = sh.batch_axes(mesh)
+    tok_spec = P(bx, None) if shape.global_batch > 1 else P(None, None)
+    token = SDS((shape.global_batch, 1), jnp.int32,
+                sharding=NamedSharding(mesh, tok_spec))
+    index = SDS((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    return "decode", (params, token, cache, index)
+
+
+def step_fn(cfg: ModelConfig, kind: str, opt_cfg=None, *,
+            microbatches: int = 1, compress: bool = False):
+    from repro.train.train_step import make_train_step
+
+    if kind == "train":
+        opt_cfg = opt_cfg or adamw.AdamWConfig()
+        return make_train_step(cfg, opt_cfg, microbatches=microbatches,
+                               compress=compress)
+    if kind == "encode":
+        def encode(params, batch):
+            loss, metrics = M.train_loss(cfg, params, batch)
+            return loss
+        return encode
+    if kind == "prefill":
+        return functools.partial(M.prefill, cfg)
+    if kind == "decode":
+        return functools.partial(M.decode_step, cfg)
+    raise ValueError(kind)

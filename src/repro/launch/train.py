@@ -1,0 +1,69 @@
+"""Training CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3_4b --smoke \
+        --steps 50 --batch 4 --seq 128
+
+``--smoke`` selects the reduced config (CPU-runnable); without it the
+full config is built (requires a real TPU slice — on this container use
+the dry-run instead). The loop wires together the deterministic data
+pipeline, AdamW, async checkpointing, and the fault-tolerance
+supervisor; ``--simulate-failure N`` kills the loop at step N and
+restarts from the latest checkpoint to exercise the recovery path.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--simulate-failure", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.configs.base import ShapeSpec, get_config, get_smoke_config
+    from repro.optim.adamw import AdamWConfig
+    from repro.runtime.fault_tolerance import Supervisor
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps)
+    tc = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                       ckpt_dir=args.ckpt_dir,
+                       microbatches=args.microbatches,
+                       compress=args.compress)
+    sup = Supervisor(n_workers=1)
+
+    trainer = Trainer(cfg, shape, opt_cfg, tc, supervisor=sup)
+    start = trainer.maybe_restore()
+    if start:
+        print(f"restored from checkpoint at step {start}")
+
+    if args.simulate_failure and start < args.simulate_failure:
+        print(f"[FT drill] will fail at step {args.simulate_failure}")
+        trainer.run(steps=args.simulate_failure)
+        print("[FT drill] simulated crash — restarting from checkpoint")
+        trainer2 = Trainer(cfg, shape, opt_cfg, tc, supervisor=sup)
+        restored = trainer2.maybe_restore()
+        assert restored > 0, "no checkpoint written before failure"
+        print(f"[FT drill] resumed at step {restored}")
+        trainer2.run()
+        return 0
+
+    trainer.run()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

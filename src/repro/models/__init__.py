@@ -1,0 +1,18 @@
+"""repro.models — model zoo for the assigned architectures."""
+from . import attention, common, mamba2, mlp, model, moe, rwkv6
+from .model import (
+    FRAME_DIM,
+    VISION_DIM,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    prefill,
+    train_loss,
+)
+
+__all__ = [
+    "attention", "common", "mamba2", "mlp", "model", "moe", "rwkv6",
+    "FRAME_DIM", "VISION_DIM", "decode_step", "forward", "init_cache",
+    "init_params", "prefill", "train_loss",
+]

@@ -1,0 +1,367 @@
+"""Attention: GQA (with optional qk-norm) and MLA, train/prefill/decode.
+
+Memory-efficient blockwise attention (online softmax over KV chunks,
+sequential map over Q chunks) keeps per-device activation memory at
+``O(chunk^2 * heads)`` instead of ``O(S^2 * heads)`` — required for the
+32k/500k shapes. Causality is applied via position masks; KV chunks
+strictly above the diagonal still occupy HLO flops (masked) — removing
+that 2x score overhead is a recorded §Perf candidate (Pallas flash
+kernel / triangle decomposition).
+
+MLA (minicpm3) caches the compressed KV latent ``c_kv`` (+ shared RoPE
+key) and uses the *absorbed-weight* decode path: ``W_uk`` is folded into
+the query so decode attends directly over the latent cache — the cache
+is ~10x smaller than full K/V and decode FLOPs drop accordingly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import apply_rope, dense_init, rms_norm, split_keys
+
+NEG_INF = -1e30
+
+
+def _mesh_axes():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:
+            return (), 0
+        names = mesh.axis_names
+        sizes = dict(zip(names, mesh.axis_sizes))
+    except Exception:  # noqa: BLE001
+        return (), 0
+    bx = tuple(a for a in ("pod", "data") if a in names)
+    return bx, sizes.get("model", 0)
+
+
+def _bx_size(bx):
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+        n = 1
+        for a in bx:
+            n *= sizes.get(a, 1)
+        return n
+    except Exception:  # noqa: BLE001
+        return 1
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention core
+# ---------------------------------------------------------------------------
+def _gqa_scores(q, k, out_dtype=jnp.float32):
+    """q: (B, Sq, KV, G, hd), k: (B, Sk, KV, hd) -> (B, KV, G, Sq, Sk)."""
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                      preferred_element_type=out_dtype)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, chunk: int,
+                        q_positions, kv_positions, kv_valid=None,
+                        seq_shard: bool = False,
+                        bf16_scores: bool = False):
+    """Online-softmax blockwise attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd); positions are absolute.
+    kv_valid: optional (B, Sk) bool mask (padding / unfilled cache).
+    Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]            # MLA: value head dim may differ from qk
+    g = h // kv
+    scale = hd ** -0.5
+
+    cq = min(chunk, sq)
+    ck = min(chunk, sk)
+    # pad to multiples
+    pq = (-sq) % cq
+    pk = (-sk) % ck
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pq)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pk)))
+        valid = jnp.ones((b, sk), bool) if kv_valid is None else kv_valid
+        kv_valid = jnp.pad(valid, ((0, 0), (0, pk)))
+    nq, nk = (sq + pq) // cq, (sk + pk) // ck
+
+    if nq == 1 and nk == 1:
+        # single-chunk dense path: no scan in the HLO (also used by the
+        # dry-run cost probes, whose flop counts must not hide in loops)
+        score_dt = jnp.bfloat16 if bf16_scores else jnp.float32
+        qg = q.reshape(b, sq + pq, kv, g, hd) * scale
+        s = _gqa_scores(qg, k, score_dt)                # (B,KV,G,Sq,Sk)
+        if seq_shard:
+            # §Perf P2: pin the giant score tensor to q-sequence sharding
+            # over `model` — stops GSPMD resharding it over the (padded,
+            # non-divisible) KV-head dim.
+            bx, msize = _mesh_axes()
+            if msize and (sq + pq) % msize == 0:
+                s = jax.lax.with_sharding_constraint(
+                    s, P(bx if b % max(
+                        1, _bx_size(bx)) == 0 and b > 1 else None,
+                         None, None, "model", None))
+        mask = jnp.ones((b, 1, 1, sq + pq, sk + pk), bool)
+        if causal:
+            mask &= (q_positions[:, None, None, :, None]
+                     >= kv_positions[:, None, None, None, :])
+        if kv_valid is not None:
+            mask &= kv_valid[:, None, None, None, :]
+        s = jnp.where(mask, s, jnp.asarray(NEG_INF, s.dtype))
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        out = out.reshape(b, sq + pq, h, hd_v)[:, :sq]
+        # NOTE (§Perf, refuted): pinning `out` back to batch sharding here
+        # looked like it would stop the q-seq layout leaking into the
+        # residual stream, but measured 16-19x WORSE collectives
+        # (starcoder2 train frac 0.143 -> 0.022): GSPMD propagates the
+        # seq-sharding through the residual efficiently, and the forced
+        # reshard moves the full activation every layer. Left unpinned.
+        return out.astype(v.dtype)
+
+    q = q.reshape(b, nq, cq, kv, g, hd) * scale
+    qp = q_positions.reshape(b, nq, cq)
+    k4 = k.reshape(b, nk, ck, kv, hd)
+    v4 = v.reshape(b, nk, ck, kv, hd_v)
+    kp = kv_positions.reshape(b, nk, ck)
+    kvld = None if kv_valid is None else kv_valid.reshape(b, nk, ck)
+
+    def q_chunk_fn(qi):
+        qc = q[:, qi]                                   # (B, cq, KV, G, hd)
+        qpc = qp[:, qi]                                 # (B, cq)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kc, vc, kpc, kvc = inp                      # (B, ck, KV, hd)...
+            s = _gqa_scores(qc, kc)                     # (B,KV,G,cq,ck) fp32
+            mask = jnp.ones((b, 1, 1, cq, ck), bool)
+            if causal:
+                mask &= (qpc[:, None, None, :, None]
+                         >= kpc[:, None, None, None, :])
+            if kvc is not None:
+                mask &= kvc[:, None, None, None, :]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))      # (B,KV,G,cq)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, cq, hd_v), jnp.float32)
+        xs = (
+            jnp.moveaxis(k4, 1, 0), jnp.moveaxis(v4, 1, 0),
+            jnp.moveaxis(kp, 1, 0),
+            None if kvld is None else jnp.moveaxis(kvld, 1, 0),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), xs)
+        out = acc / jnp.maximum(l[..., None], 1e-30)    # (B,KV,G,cq,hd_v)
+        return jnp.moveaxis(out, 3, 1).reshape(b, cq, kv * g, hd_v)
+
+    outs = jax.lax.map(q_chunk_fn, jnp.arange(nq))      # (nq, B, cq, H, hd_v)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * cq, h, hd_v)[:, :sq]
+    return out.astype(v.dtype)
+
+
+def decode_attention(q, k, v, *, q_position, kv_len):
+    """Single-step attention over a (possibly huge) cache.
+    q: (B, 1, H, hd); k, v: (B, S, KV, hd); kv_len: filled length (incl.
+    the token written this step)."""
+    b, _, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, 1, kv, g, hd) * hd ** -0.5
+    s_ = _gqa_scores(qg, k)[:, :, :, 0]                 # (B, KV, G, S)
+    pos = jnp.arange(s)[None, :]
+    mask = pos < kv_len[:, None]                        # (B, S)
+    s_ = jnp.where(mask[:, None, None, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA module
+# ---------------------------------------------------------------------------
+def init_gqa(cfg, key):
+    hd = cfg.head_dim_
+    ks = split_keys(key, 4)
+    dt = cfg.param_dtype
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dt),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dt),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dt),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def gqa_fwd(cfg, p, x, positions, *, cache=None, cache_index=None):
+    """cache: dict(k=(B,S,KV,hd), v=(B,S,KV,hd)) or None.
+    In decode mode x is (B, 1, D) and cache_index the write offset.
+    Returns (out, new_cache)."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.eps)
+        k = rms_norm(k, p["k_norm"], cfg.eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = blockwise_attention(
+            q, k, v, causal=cfg.is_causal, chunk=cfg.attn_chunk,
+            q_positions=positions, kv_positions=positions,
+            seq_shard=cfg.attn_seq_shard,
+            bf16_scores=cfg.attn_bf16_scores,
+        )
+        new_cache = None
+    elif s == 1:  # decode
+        idx = cache_index
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
+        kv_len = jnp.full((b,), idx + 1, jnp.int32)
+        out = decode_attention(q, ck, cv, q_position=positions,
+                               kv_len=kv_len)
+        new_cache = {"k": ck, "v": cv}
+    else:  # prefill into cache
+        smax = cache["k"].shape[1]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+        out = blockwise_attention(
+            q, k, v, causal=True, chunk=cfg.attn_chunk,
+            q_positions=positions, kv_positions=positions,
+            seq_shard=cfg.attn_seq_shard,
+            bf16_scores=cfg.attn_bf16_scores,
+        )
+        new_cache = {"k": ck, "v": cv}
+    out = out.reshape(b, s, cfg.n_heads * hd) @ p["wo"]
+    return out, new_cache
+
+
+def init_gqa_cache(cfg, batch, seq):
+    hd = cfg.head_dim_
+    dt = cfg.param_dtype
+    return {
+        "k": jnp.zeros((batch, seq, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((batch, seq, cfg.n_kv_heads, hd), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA module (minicpm3)
+# ---------------------------------------------------------------------------
+def init_mla(cfg, key):
+    m = cfg.mla
+    dt = cfg.param_dtype
+    ks = split_keys(key, 8)
+    h = cfg.n_heads
+    qk = m.qk_nope_head_dim
+    qr = m.qk_rope_head_dim
+    vd = m.v_head_dim
+    return {
+        "wdq": dense_init(ks[0], cfg.d_model, m.q_lora_rank, dt),
+        "q_norm": jnp.ones((m.q_lora_rank,), jnp.float32),
+        "wuq": dense_init(ks[1], m.q_lora_rank, h * (qk + qr), dt),
+        "wdkv": dense_init(ks[2], cfg.d_model, m.kv_lora_rank + qr, dt),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+        "wuk": dense_init(ks[3], m.kv_lora_rank, h * qk, dt),
+        "wuv": dense_init(ks[4], m.kv_lora_rank, h * vd, dt),
+        "wo": dense_init(ks[5], h * vd, cfg.d_model, dt),
+    }
+
+
+def _mla_qkv(cfg, p, x, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk, qr = m.qk_nope_head_dim, m.qk_rope_head_dim
+    q_lat = rms_norm(x @ p["wdq"], p["q_norm"], cfg.eps)
+    q = (q_lat @ p["wuq"]).reshape(b, s, h, qk + qr)
+    q_nope, q_rope = q[..., :qk], q[..., qk:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckr = x @ p["wdkv"]                                  # (B,S,rank+qr)
+    c_kv = rms_norm(ckr[..., : m.kv_lora_rank], p["kv_norm"], cfg.eps)
+    k_rope = apply_rope(ckr[..., m.kv_lora_rank:][:, :, None, :],
+                        positions, cfg.rope_theta)[:, :, 0]   # (B,S,qr)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_fwd(cfg, p, x, positions, *, cache=None, cache_index=None):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk, qr, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions)
+
+    if cache is not None:
+        c_full = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv, (0, cache_index if s == 1 else 0, 0))
+        r_full = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope, (0, cache_index if s == 1 else 0, 0))
+        new_cache = {"c_kv": c_full, "k_rope": r_full}
+    else:
+        new_cache = None
+
+    if cache is not None and s == 1:
+        # absorbed decode: score directly against the latent cache
+        wuk = p["wuk"].reshape(m.kv_lora_rank, h, qk)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wuk)   # (B,1,H,rank)
+        scores = (
+            jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                       c_full.astype(jnp.float32))
+            + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                         r_full.astype(jnp.float32))
+        ) * (qk + qr) ** -0.5                                # (B,H,1,S)
+        smax = c_full.shape[1]
+        mask = jnp.arange(smax)[None, :] <= cache_index
+        scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx_lat = jnp.einsum("bhst,btr->bshr", probs.astype(c_full.dtype),
+                             c_full)                         # (B,1,H,rank)
+        wuv = p["wuv"].reshape(m.kv_lora_rank, h, vd)
+        out = jnp.einsum("bshr,rhv->bshv", ctx_lat, wuv)
+    else:
+        # train/prefill: expand K/V and run blockwise attention
+        k_nope = (c_kv @ p["wuk"]).reshape(b, s, h, qk)
+        v = (c_kv @ p["wuv"]).reshape(b, s, h, vd)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, qr))],
+            axis=-1,
+        )
+        out = blockwise_attention(
+            q_full, k_full, v, causal=True, chunk=cfg.attn_chunk,
+            q_positions=positions, kv_positions=positions,
+            seq_shard=cfg.attn_seq_shard,
+            bf16_scores=cfg.attn_bf16_scores,
+        )
+    out = out.reshape(b, s, h * vd) @ p["wo"]
+    return out, new_cache
+
+
+def init_mla_cache(cfg, batch, seq):
+    m = cfg.mla
+    dt = cfg.param_dtype
+    return {
+        "c_kv": jnp.zeros((batch, seq, m.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((batch, seq, m.qk_rope_head_dim), dt),
+    }

@@ -1,0 +1,165 @@
+"""Mamba2 (SSD) block — chunked-parallel training, O(1) decode state.
+
+Mamba2's decay is *scalar per head* (``A_h < 0``), so the pairwise decay
+factor ``exp(a_t - a_s)`` (``a`` = within-chunk cumsum of ``dt * A``) is
+bounded in (0, 1] for ``s <= t`` — the chunked algorithm is numerically
+safe in fp32 with no log-space gymnastics (contrast RWKV6's per-channel
+decay, DESIGN.md §7). Per chunk of length Q:
+
+    intra: y_t += sum_{s<=t} (C_t . B_s) exp(a_t - a_s) dt_s x_s
+    inter: y_t += exp(a_t) C_t . h_in
+    state: h_out = exp(a_Q) h_in + sum_s exp(a_Q - a_s) dt_s B_s x_s^T
+
+All terms are matmul-shaped (MXU) and the scan carries only the
+``(B, H, P, N)`` state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, split_keys
+
+
+def _d_inner(cfg):
+    return cfg.ssm.expand * cfg.d_model
+
+
+def init_mamba2_layer(cfg, key):
+    s = cfg.ssm
+    d = cfg.d_model
+    din = _d_inner(cfg)
+    h = din // s.head_dim
+    dt = cfg.param_dtype
+    ks = split_keys(key, 4)
+    conv_dim = din + 2 * s.d_state
+    return {
+        # in_proj -> [z, x, B, C, dt]
+        "w_in": dense_init(ks[0], d, 2 * din + 2 * s.d_state + h, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32)
+                   * (s.d_conv ** -0.5)).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.full((h,), -3.0, jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": jnp.ones((din,), jnp.float32),
+        "w_out": dense_init(ks[2], din, d, dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, T, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i: i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b).astype(x.dtype)
+
+
+def _ssd_chunked(xh, bmat, cmat, dtv, a_head, chunk, h_init):
+    """xh: (B,T,H,P); bmat/cmat: (B,T,N); dtv: (B,T,H) (softplus'd);
+    a_head: (H,) negative scalars; h_init: (B,H,P,N).
+    Returns (y: (B,T,H,P), h_out)."""
+    b, t, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, t)
+    pad = (-t) % q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+    nc = (t + pad) // q
+
+    xh = xh.reshape(b, nc, q, h, p)
+    bm = bmat.reshape(b, nc, q, n)
+    cm = cmat.reshape(b, nc, q, n)
+    dtc = dtv.reshape(b, nc, q, h)
+
+    def chunk_step(hstate, inp):
+        xc, bc, cc, dc = inp            # (B,q,H,P) (B,q,N) (B,q,N) (B,q,H)
+        loga = dc * a_head[None, None]                       # (B,q,H) <= 0
+        a_cum = jnp.cumsum(loga, axis=1)                     # (B,q,H)
+        # intra-chunk: G[t,s] = (C_t.B_s) exp(a_t - a_s) dt_s  (t >= s)
+        gb = jnp.einsum("btn,bsn->bts", cc, bc)              # (B,q,q)
+        decay = jnp.exp(a_cum[:, :, None] - a_cum[:, None])  # (B,q,s?,H)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        gate = jnp.where(tri[None, :, :, None], decay, 0.0)  # (B,q,q,H)
+        g = gb[..., None] * gate * dc[:, None]               # (B,t,s,H)
+        y = jnp.einsum("btsh,bshp->bthp", g, xh_f32(xc))     # (B,q,H,P)
+        # inter-chunk: y_t += exp(a_t) C_t . h
+        y = y + jnp.einsum("bth,btn,bhpn->bthp",
+                           jnp.exp(a_cum), cc, hstate)
+        # state update
+        dec_end = jnp.exp(a_cum[:, -1:, :] - a_cum)          # (B,q,H)
+        upd = jnp.einsum("bth,btn,bthp->bhpn", dec_end * dc, bc, xh_f32(xc))
+        h_new = jnp.exp(a_cum[:, -1])[:, :, None, None] * hstate + upd
+        return h_new, y
+
+    def xh_f32(v):
+        return v.astype(jnp.float32)
+
+    xs = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(bm, 1, 0),
+          jnp.moveaxis(cm, 1, 0), jnp.moveaxis(dtc, 1, 0))
+    h_out, ys = jax.lax.scan(chunk_step, h_init, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * q, h, p)[:, :t]
+    return y, h_out
+
+
+def mamba2_layer_fwd(cfg, p, x, state=None):
+    """x: (B, T, D). state: dict(conv=(B,K-1,C), ssm=(B,H,P,N)) or None.
+    Returns (y, new_state)."""
+    s = cfg.ssm
+    b, t, d = x.shape
+    din = _d_inner(cfg)
+    h = din // s.head_dim
+    pdim = s.head_dim
+    n = s.d_state
+
+    proj = x @ p["w_in"]
+    z, xs_, bmat, cmat, dtp = jnp.split(
+        proj, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], axis=-1)
+
+    conv_in = jnp.concatenate([xs_, bmat, cmat], axis=-1)
+    if state is not None:
+        conv_in_full = jnp.concatenate([state["conv"], conv_in], axis=1)
+        conv_out = _causal_conv(conv_in_full, p["conv_w"], p["conv_b"])
+        conv_out = conv_out[:, state["conv"].shape[1]:]
+        new_conv = conv_in_full[:, -(s.d_conv - 1):]
+    else:
+        conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+        new_conv = conv_in[:, -(s.d_conv - 1):]
+    xs_, bmat, cmat = jnp.split(conv_out, [din, din + n], axis=-1)
+
+    dtv = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    a_head = -jnp.exp(p["a_log"])                                  # (H,) < 0
+    xh = xs_.reshape(b, t, h, pdim)
+
+    h0 = (jnp.zeros((b, h, pdim, n), jnp.float32) if state is None
+          else state["ssm"])
+    y, h_out = _ssd_chunked(xh, bmat.astype(jnp.float32),
+                            cmat.astype(jnp.float32), dtv, a_head,
+                            s.chunk, h0)
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, t, din)
+
+    # gated RMSNorm then out-projection
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.eps) * p["out_norm"]
+    out = y.astype(x.dtype) @ p["w_out"]
+
+    new_state = {"conv": new_conv, "ssm": h_out}
+    return out, new_state
+
+
+def init_mamba2_state(cfg, batch):
+    s = cfg.ssm
+    din = _d_inner(cfg)
+    h = din // s.head_dim
+    conv_dim = din + 2 * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), cfg.param_dtype),
+        "ssm": jnp.zeros((batch, h, s.head_dim, s.d_state), jnp.float32),
+    }

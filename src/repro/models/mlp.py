@@ -1,0 +1,30 @@
+"""Feed-forward blocks: SwiGLU and GeLU variants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, split_keys
+
+
+def init_mlp(cfg, key, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    if cfg.act == "swiglu":
+        ks = split_keys(key, 3)
+        return {
+            "w_gate": dense_init(ks[0], cfg.d_model, d_ff, dt),
+            "w_up": dense_init(ks[1], cfg.d_model, d_ff, dt),
+            "w_down": dense_init(ks[2], d_ff, cfg.d_model, dt),
+        }
+    ks = split_keys(key, 2)
+    return {
+        "w_up": dense_init(ks[0], cfg.d_model, d_ff, dt),
+        "w_down": dense_init(ks[1], d_ff, cfg.d_model, dt),
+    }
+
+
+def mlp_fwd(cfg, p, x):
+    if "w_gate" in p:
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]

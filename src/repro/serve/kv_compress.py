@@ -1,0 +1,71 @@
+"""Medoid KV-cache compression (beyond-paper application of trikmeds).
+
+For long prompts, per-(layer, head) keys are clustered with device-side
+K-medoids; attention then runs over ``K`` medoid keys with log-cluster-
+size corrected scores:
+
+    softmax_j ( q . k_mj + log |C_j| )
+
+i.e. each medoid stands in for its cluster with a mass prior — exact
+when clusters are tight, sub-quadratic always: decode cost drops from
+O(S) to O(K) per token. Medoids are *actual cached keys* (medoid
+property), so no re-normalisation drift: the paired values are the
+cluster-mean values (mass-weighted), computed in the same pass.
+
+This is the serving option that makes ``long_500k`` admissible for
+full-attention archs (reported separately from the baseline cells —
+DESIGN.md §6)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trikmeds import kmedoids_jax
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_iter"))
+def compress_head(keys, values, k: int, n_iter: int = 5, seed: int = 0):
+    """keys/values: (S, hd). Returns (medoid_keys (k, hd),
+    mean_values (k, hd), log_counts (k,))."""
+    m_idx, assign, _ = kmedoids_jax(keys.astype(jnp.float32), k,
+                                    seed=seed, n_iter=n_iter)
+    med_k = jnp.take(keys, m_idx, axis=0)
+    onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)     # (S, K)
+    counts = onehot.sum(axis=0)                               # (K,)
+    vsum = onehot.T @ values.astype(jnp.float32)              # (K, hd)
+    mean_v = vsum / jnp.maximum(counts[:, None], 1.0)
+    return med_k, mean_v.astype(values.dtype), jnp.log(
+        jnp.maximum(counts, 1.0))
+
+
+def compress_cache(cache_k, cache_v, k: int, n_iter: int = 5):
+    """cache_k/v: (B, S, KV, hd) -> compressed (B, k, KV, hd) + log-mass
+    (B, k, KV). vmapped over batch and heads."""
+    def per_head(kk, vv):
+        return compress_head(kk, vv, k, n_iter)
+
+    # outer vmap strips B; per-element arrays are (S, KV, hd) -> heads
+    # live on axis 1
+    fn = jax.vmap(jax.vmap(per_head, in_axes=1, out_axes=(1, 1, 1)),
+                  in_axes=0, out_axes=0)
+    med_k, mean_v, logm = fn(cache_k, cache_v)
+    # axes: (B, k, KV, hd) / (B, k, KV)
+    return med_k, mean_v, logm
+
+
+def compressed_decode_attention(q, med_k, mean_v, logm):
+    """q: (B, 1, H, hd); med_k/mean_v: (B, K, KV, hd); logm: (B, K, KV).
+    GQA-aware medoid attention with cluster-mass prior."""
+    b, _, h, hd = q.shape
+    kv = med_k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, 1, kv, g, hd) * hd ** -0.5
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, med_k,
+                   preferred_element_type=jnp.float32)
+    s = s + logm.transpose(0, 2, 1)[:, :, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(mean_v.dtype), mean_v,
+                     preferred_element_type=jnp.float32)
+    return jnp.moveaxis(out, 3, 1).reshape(b, 1, h, hd).astype(mean_v.dtype)

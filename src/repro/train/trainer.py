@@ -1,0 +1,95 @@
+"""Training loop: data + step + checkpoint + fault-tolerance hooks.
+
+Single-process version runs on this container (examples & tests); the
+same loop body is what each host runs under a multi-pod launcher, with
+the Supervisor watching heartbeats (see `repro.runtime`).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.data.pipeline import ShardedLoader
+from repro.optim import adamw
+from repro.runtime.fault_tolerance import Supervisor
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = "checkpoints"
+    keep_last: int = 2
+    microbatches: int = 1
+    compress: bool = False
+    async_checkpoint: bool = True
+
+
+class Trainer:
+    def __init__(self, model_cfg, shape, opt_cfg: adamw.AdamWConfig,
+                 tc: TrainerConfig, seed: int = 0, supervisor:
+                 Supervisor | None = None):
+        from repro.models import model as M
+        from repro.optim.compress import init_error_buffers
+
+        self.cfg = model_cfg
+        self.tc = tc
+        self.loader = ShardedLoader(model_cfg, shape, seed=seed)
+        key = jax.random.PRNGKey(seed)
+        self.params = M.init_params(model_cfg, key)
+        self.opt_state = adamw.init_state(self.params)
+        self.err_buf = (init_error_buffers(self.params)
+                        if tc.compress else {})
+        # donate params/opt/err: in-place update, no per-step state copy
+        self.step_fn = jax.jit(make_train_step(
+            model_cfg, opt_cfg, microbatches=tc.microbatches,
+            compress=tc.compress), donate_argnums=(0, 1, 2))
+        self.ckpt = Checkpointer(tc.ckpt_dir, keep_last=tc.keep_last)
+        self.start_step = 0
+        self.supervisor = supervisor
+        self.metrics_log: list[dict] = []
+
+    # ------------------------------------------------------------ resume
+    def maybe_restore(self):
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return 0
+        _, tree = self.ckpt.restore(
+            {"params": self.params, "opt": self.opt_state})
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.start_step = latest
+        return latest
+
+    # -------------------------------------------------------------- run
+    def run(self, steps: int | None = None):
+        steps = steps or self.tc.steps
+        step = self.start_step
+        while step < steps:
+            t0 = time.time()
+            batch = self.loader(step)
+            self.params, self.opt_state, self.err_buf, metrics = \
+                self.step_fn(self.params, self.opt_state, self.err_buf,
+                             batch)
+            step += 1
+            dt = time.time() - t0
+            if self.supervisor is not None:
+                self.supervisor.heartbeat(0, step, dt)
+            if step % self.tc.log_every == 0 or step == steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                m.update(step=step, sec_per_step=round(dt, 3))
+                self.metrics_log.append(m)
+                print(f"step {step:5d} loss {m.get('loss', float('nan')):.4f} "
+                      f"gnorm {m.get('grad_norm', float('nan')):.3f} "
+                      f"{dt*1e3:.0f} ms")
+            if step % self.tc.ckpt_every == 0 or step == steps:
+                self.ckpt.save(step,
+                               {"params": self.params, "opt": self.opt_state},
+                               blocking=not self.tc.async_checkpoint)
+        self.ckpt.wait()
+        return self.metrics_log

@@ -1,0 +1,36 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run, and only the
+# dry-run, forces 512 placeholder devices in its own process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_batch(cfg, key, batch=2, seq=64):
+    """Family-appropriate random batch for smoke tests."""
+    import jax.numpy as jnp
+    from repro.models import model as M
+
+    if cfg.family == "encoder":
+        return {
+            "frames": jax.random.normal(key, (batch, seq, M.FRAME_DIM),
+                                        jnp.float32),
+            "mask": jax.random.bernoulli(key, 0.3, (batch, seq)),
+            "targets": jax.random.randint(key, (batch, seq), 0, cfg.vocab),
+        }
+    if cfg.family == "vlm":
+        return {
+            "tokens": jax.random.randint(key, (batch, seq), 0, cfg.vocab),
+            "patches": jax.random.normal(
+                key, (batch, cfg.n_patches, M.VISION_DIM), jnp.float32),
+        }
+    return {"tokens": jax.random.randint(key, (batch, seq), 0, cfg.vocab)}

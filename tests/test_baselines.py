@@ -1,0 +1,95 @@
+"""Baselines: RAND / TOPRANK / TOPRANK2 / KMEDS (+ Park-Jun init)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    exact_medoid,
+    kmeds,
+    parkjun_init,
+    rand_medoid,
+    toprank,
+    toprank2,
+    trikmeds,
+)
+
+
+def _data(n, d=2, seed=0):
+    return np.random.default_rng(seed).random((n, d))
+
+
+def test_toprank_returns_medoid():
+    X = _data(1500)
+    ti, _ = exact_medoid(X)
+    for seed in range(3):
+        assert toprank(X, seed=seed).index == ti
+
+
+def test_toprank2_returns_medoid():
+    X = _data(1500)
+    ti, _ = exact_medoid(X)
+    for seed in range(3):
+        assert toprank2(X, seed=seed).index == ti
+
+
+def test_trimed_beats_toprank_on_low_d():
+    """Paper Table 1 headline: trimed computes far fewer elements."""
+    from repro.core import trimed_sequential
+
+    X = _data(4000, 2, seed=1)
+    tr = trimed_sequential(X, seed=0)
+    tp = toprank(X, seed=0)
+    assert tr.index == tp.index
+    assert tr.n_computed < tp.n_computed / 5
+
+
+def test_rand_energy_close():
+    X = _data(2000, 2, seed=2)
+    ti, te_over_n = exact_medoid(X)
+    r = rand_medoid(X, epsilon=0.02, seed=0)
+    te = te_over_n * 2000 / 1999
+    assert r.energy < te * 1.1 + 0.05
+
+
+def test_parkjun_init_well_centred():
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((300, 2))
+    from repro.core.distances import VectorOracle
+
+    o = VectorOracle(X)
+    D = np.stack([o.row(i) for i in range(300)])
+    init = parkjun_init(D, 5)
+    # Park-Jun picks central elements: their mean energy is below average
+    assert D[init].sum(axis=1).mean() < D.sum(axis=1).mean()
+
+
+@pytest.mark.parametrize("init", ["parkjun", "uniform"])
+def test_kmeds_converges(init):
+    X = _data(400, 2, seed=3)
+    r = kmeds(X, 5, init=init, seed=0)
+    assert r.n_iterations < 100
+    assert len(np.unique(r.medoids)) == 5
+    # every element assigned to its nearest medoid
+    from repro.core.distances import VectorOracle
+
+    o = VectorOracle(X)
+    D = np.stack([o.row(int(m)) for m in r.medoids])
+    assert np.array_equal(np.argmin(D, axis=0), r.assignment)
+
+
+def test_trikmeds_matches_kmeds_energy():
+    """trikmeds-0 returns exactly the KMEDS clustering (same init)."""
+    X = _data(500, 2, seed=4)
+    init = np.random.default_rng(9).choice(500, size=6, replace=False)
+    rk = kmeds(X, 6, init="uniform", seed=9)
+    rt = trikmeds(X, 6, seed=9, init_medoids=init)
+    assert abs(rk.energy - rt.energy) < 1e-8
+    assert rt.n_distances < rk.n_distances
+
+
+def test_trikmeds_eps_tradeoff():
+    X = _data(600, 2, seed=5)
+    init = np.random.default_rng(1).choice(600, size=8, replace=False)
+    r0 = trikmeds(X, 8, eps=0.0, seed=1, init_medoids=init)
+    r1 = trikmeds(X, 8, eps=0.1, seed=1, init_medoids=init)
+    assert r1.n_distances <= r0.n_distances
+    assert r1.energy <= r0.energy * 1.15 + 1e-9

@@ -1,0 +1,58 @@
+"""Additional property tests on the core invariants (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import exact_energies, trimed_block, trimed_sequential
+from repro.core.distances import VectorOracle
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 150), d=st.integers(1, 5),
+       eps=st.floats(0.0, 0.6), seed=st.integers(0, 9999))
+def test_property_eps_energy_guarantee(n, d, eps, seed):
+    """trimed-eps returns an element within (1+eps) of the optimum —
+    the paper's §4 guarantee, for arbitrary data/eps. fp64 reference:
+    the jnp one is fp32 and its rounding breaks exact-eps comparisons."""
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, d))
+    d2 = ((X[:, None, :] - X[None, :, :]) ** 2).sum(-1)
+    e = np.sqrt(np.maximum(d2, 0)).sum(1) / (n - 1)
+    r = trimed_sequential(X, seed=seed, eps=eps)
+    assert r.energy <= e.min() * (1 + eps) + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 100), seed=st.integers(0, 9999))
+def test_property_metric_axioms_hold_for_oracle(n, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, 4))
+    o = VectorOracle(X)
+    i, j, k = rng.integers(0, n, 3)
+    dij, djk, dik = o.pair(i, j), o.pair(j, k), o.pair(i, k)
+    assert dik <= dij + djk + 1e-9
+    assert abs(o.pair(i, j) - o.pair(j, i)) < 1e-9
+    assert o.pair(i, i) < 1e-12
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(64, 300), block=st.integers(1, 64),
+       seed=st.integers(0, 999))
+def test_property_block_counts_bounded(n, block, seed):
+    """Computed elements never exceed N, and the block variant's waste
+    over the whole run is bounded by block-1 per round."""
+    rng = np.random.default_rng(seed)
+    X = rng.random((n, 2)).astype(np.float32)
+    r = trimed_block(X, block=block, seed=seed)
+    assert r.n_computed <= n
+    assert r.n_computed <= r.n_rounds * min(block, n)
+
+
+def test_counts_monotone_in_dimension():
+    """Thm 3.2's d-dependence: higher d computes more (fixed N, dist)."""
+    rng = np.random.default_rng(0)
+    counts = []
+    for d in (2, 4, 8):
+        X = rng.random((4000, d))
+        counts.append(trimed_sequential(X, seed=0).n_computed)
+    assert counts[0] < counts[1] < counts[2]

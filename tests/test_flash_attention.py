@@ -1,0 +1,63 @@
+"""Flash-attention Pallas kernel vs the jnp blockwise oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.models.attention import blockwise_attention
+
+CASES = [
+    (2, 64, 4, 2, 16, True),
+    (1, 100, 8, 8, 32, True),
+    (2, 33, 4, 1, 8, False),     # MQA, bidirectional, unaligned S
+    (1, 256, 4, 2, 64, True),
+    (1, 17, 2, 2, 128, True),    # tiny S, wide head
+]
+
+
+def _ref(q, k, v, causal):
+    b, sq = q.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(sq), (b, sq))
+    return blockwise_attention(q, k, v, causal=causal,
+                               chunk=max(sq, k.shape[1]),
+                               q_positions=pos, kv_positions=pos)
+
+
+@pytest.mark.parametrize("b,s,h,kvh,hd,causal", CASES)
+def test_flash_matches_reference(b, s, h, kvh, hd, causal):
+    rng = np.random.default_rng(b * s + h)
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, bq=32, bk=32)
+    ref = _ref(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bq,bk", [(8, 8), (16, 64), (128, 32)])
+def test_flash_block_shape_invariance(bq, bk):
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.standard_normal((1, 96, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 96, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 96, 2, 32)), jnp.float32)
+    ref = _ref(q, k, v, True)
+    got = flash_attention(q, k, v, causal=True, bq=bq, bk=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(4, 120), hd=st.sampled_from([8, 16, 32]),
+       g=st.sampled_from([1, 2, 4]), seed=st.integers(0, 100))
+def test_property_flash_matches_reference(s, hd, g, seed):
+    rng = np.random.default_rng(seed)
+    kvh = 2
+    q = jnp.asarray(rng.standard_normal((1, s, kvh * g, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, s, kvh, hd)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, bq=16, bk=16)
+    ref = _ref(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)

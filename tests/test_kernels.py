@@ -1,0 +1,97 @@
+"""Pallas kernels vs. pure-jnp oracles: shape/dtype sweeps + properties."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SHAPES = [
+    (8, 100, 3),       # tiny, unaligned everything
+    (16, 1000, 17),    # unaligned d
+    (128, 2048, 128),  # fully aligned
+    (32, 513, 260),    # unaligned N and d
+    (1, 64, 1),        # degenerate
+    (64, 4096, 512),   # large-d
+]
+
+
+@pytest.mark.parametrize("b,n,d", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_pairwise_kernel(b, n, d, dtype):
+    rng = np.random.default_rng(b * n + d)
+    xb = rng.standard_normal((b, d)).astype(dtype)
+    x = rng.standard_normal((n, d)).astype(dtype)
+    got = ops.pairwise_distances(xb, x)
+    want = ref.pairwise_ref(xb, x)
+    np.testing.assert_allclose(got, want, rtol=3e-3 if dtype == np.float16 else 2e-5,
+                               atol=3e-3 if dtype == np.float16 else 2e-5)
+
+
+@pytest.mark.parametrize("b,n,d", SHAPES)
+def test_energy_kernel(b, n, d):
+    rng = np.random.default_rng(b + n + d)
+    xb = rng.standard_normal((b, d)).astype(np.float32)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    got = ops.block_energies(xb, x)
+    want = ref.energy_ref(xb, x)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("b,n,d", SHAPES)
+def test_bound_update_kernel(b, n, d):
+    rng = np.random.default_rng(b * 7 + n + d)
+    xb = rng.standard_normal((b, d)).astype(np.float32)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    l = np.abs(rng.standard_normal(n)).astype(np.float32)
+    valid = rng.random(b) > 0.3
+    if not valid.any():
+        valid[0] = True
+    e = np.asarray(ref.energy_ref(xb, x)) / n
+    got = ops.bound_update(xb, x, jnp.asarray(e), jnp.asarray(valid),
+                           jnp.asarray(l))
+    want = ref.bound_update_ref(xb, x, e, l, valid)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_sqeuclidean_metric():
+    rng = np.random.default_rng(0)
+    xb = rng.standard_normal((8, 19)).astype(np.float32)
+    x = rng.standard_normal((200, 19)).astype(np.float32)
+    got = ops.pairwise_distances(xb, x, metric="sqeuclidean")
+    want = ref.pairwise_ref(xb, x, metric="sqeuclidean")
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 32),
+    n=st.integers(2, 600),
+    d=st.integers(1, 80),
+    seed=st.integers(0, 1000),
+)
+def test_property_fused_round_matches_ref(b, n, d, seed):
+    """Property: fused round == reference round for arbitrary shapes."""
+    rng = np.random.default_rng(seed)
+    xb = rng.standard_normal((b, d)).astype(np.float32)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    l = np.abs(rng.standard_normal(n)).astype(np.float32)
+    valid = rng.random(b) > 0.2
+    if not valid.any():
+        valid[0] = True
+    e_got, l_got = ops.fused_round(jnp.asarray(xb), jnp.asarray(x),
+                                   jnp.asarray(l), jnp.asarray(valid))
+    e_want, l_want = ref.fused_round_ref(xb, x, l, valid)
+    np.testing.assert_allclose(e_got, e_want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(l_got, l_want, rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_distance_properties():
+    """Metric axioms on kernel output: symmetry, identity, triangle."""
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((60, 5)).astype(np.float32)
+    D = np.asarray(ops.pairwise_distances(x, x))
+    np.testing.assert_allclose(D, D.T, atol=1e-4)
+    assert np.all(np.abs(np.diag(D)) < 1e-3)
+    i, j, k = 3, 17, 42
+    assert D[i, k] <= D[i, j] + D[j, k] + 1e-4

@@ -1,0 +1,198 @@
+"""Substrate tests: optimizer, data pipeline, checkpoint, compression,
+fault-tolerance supervisor."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.data.pipeline import DataConfig, ShardedLoader, family_batch, lm_batch
+from repro.configs.base import ShapeSpec, get_smoke_config
+from repro.optim import adamw
+from repro.optim.compress import (compress_with_feedback,
+                                  init_error_buffers, quantize_int8,
+                                  dequantize_int8, top_k_mask)
+from repro.runtime.fault_tolerance import Supervisor, SupervisorConfig
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_reduces_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                            total_steps=100, schedule="constant")
+    params = {"w": jnp.ones((4,)) * 5.0}
+    state = adamw.init_state(params)
+    for _ in range(200):
+        grads = {"w": 2 * state.master["w"]}
+        params, state, _ = adamw.apply_updates(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_adamw_schedule():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_frac=0.1)
+    assert float(adamw.schedule_lr(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(adamw.schedule_lr(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(adamw.schedule_lr(cfg, jnp.asarray(100))) == pytest.approx(0.1)
+
+
+def test_grad_clip():
+    g = {"a": jnp.ones((100,)) * 10.0}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(100.0)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+# -------------------------------------------------------------- compression
+def test_int8_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x).max()
+    assert float(err) <= float(s) * 0.5 + 1e-9
+
+
+def test_error_feedback_accumulates():
+    """EF property: compressed-sum over steps converges to true sum."""
+    rng = np.random.default_rng(1)
+    g_true = jnp.asarray(rng.standard_normal(256) * 1e-3, jnp.float32)
+    params = {"w": g_true}
+    buf = init_error_buffers(params)
+    total = jnp.zeros_like(g_true)
+    for _ in range(50):
+        deq, buf = compress_with_feedback({"w": g_true}, buf)
+        total = total + deq["w"]
+    np.testing.assert_allclose(np.asarray(total / 50), np.asarray(g_true),
+                               atol=2e-5)
+
+
+def test_topk_mask():
+    g = {"w": jnp.arange(100.0)}
+    masked = top_k_mask(g, 0.1)
+    assert int((masked["w"] != 0).sum()) == 10
+    assert float(masked["w"].max()) == 99.0
+
+
+# --------------------------------------------------------------------- data
+def test_pipeline_deterministic_and_resumable():
+    cfg = DataConfig(seed=3, vocab=1000, seq_len=32, global_batch=4)
+    b1 = lm_batch(cfg, 7)
+    b2 = lm_batch(cfg, 7)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = lm_batch(cfg, 8)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+
+
+def test_pipeline_host_sharding_partitions_batch():
+    mc = get_smoke_config("qwen3_4b")
+    shape = ShapeSpec("t", 16, 8, "train")
+    full = ShardedLoader(mc, shape)(0)
+    parts = [ShardedLoader(mc, shape, host_index=i, host_count=4)(0)
+             for i in range(4)]
+    stacked = np.concatenate([np.asarray(p["tokens"]) for p in parts])
+    np.testing.assert_array_equal(stacked, np.asarray(full["tokens"]))
+
+
+@pytest.mark.parametrize("arch", ["hubert_xlarge", "internvl2_26b"])
+def test_pipeline_families(arch):
+    mc = get_smoke_config(arch)
+    shape = ShapeSpec("t", 32, 2, "train")
+    b = family_batch(mc, shape, 0)
+    if arch == "hubert_xlarge":
+        assert b["frames"].shape == (2, 32, 512)
+        assert b["targets"].shape == (2, 32)
+    else:
+        assert b["patches"].shape[1] == mc.n_patches
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path, keep_last=2)
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 4))}}
+    ck.save(5, tree)
+    step, restored = ck.restore(tree)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_checkpoint_keeps_last_k_and_latest_pointer(tmp_path):
+    ck = Checkpointer(tmp_path, keep_last=2)
+    tree = {"a": jnp.zeros(3)}
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree)
+    assert sorted(ck.all_steps()) == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_checkpoint_async(tmp_path):
+    ck = Checkpointer(tmp_path)
+    tree = {"a": jnp.arange(100.0)}
+    ck.save(1, tree, blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    """A *.tmp dir left behind by a crash must not be visible."""
+    ck = Checkpointer(tmp_path)
+    ck.save(1, {"a": jnp.zeros(2)})
+    (tmp_path / "step_9.tmp").mkdir()
+    assert ck.latest_step() == 1
+    assert 9 not in ck.all_steps()
+
+
+# ------------------------------------------------------------------ runtime
+def test_supervisor_detects_dead_worker():
+    clock = [0.0]
+    sup = Supervisor(4, SupervisorConfig(heartbeat_timeout_s=10),
+                     clock=lambda: clock[0])
+    for w in range(4):
+        sup.heartbeat(w, 1, 1.0)
+    clock[0] = 5.0
+    for w in range(3):  # worker 3 goes silent
+        sup.heartbeat(w, 2, 1.0)
+    clock[0] = 20.0
+    for w in range(3):
+        sup.heartbeat(w, 3, 1.0)
+    evicted = sup.check()
+    assert evicted == [3]
+    assert sup.alive_count() == 3
+
+
+def test_supervisor_evicts_straggler():
+    clock = [0.0]
+    sup = Supervisor(4, SupervisorConfig(straggler_factor=1.5,
+                                         straggler_strikes=2),
+                     clock=lambda: clock[0])
+    for step in range(6):
+        clock[0] += 1
+        for w in range(4):
+            sup.heartbeat(w, step, 5.0 if w == 2 else 1.0)
+        sup.check()
+    assert not sup.workers[2].alive
+    assert ("straggler", 2) in sup.events
+
+
+def test_supervisor_elastic_mesh_plan():
+    sup = Supervisor(512, SupervisorConfig())
+    # lose 17 workers -> data axis shrinks in whole-pod units of 256
+    for w in range(17):
+        sup.workers[w].alive = False
+    plan = sup.plan_mesh(model_parallel=16, pod_size=256)
+    assert plan == (16, 16)  # one pod's worth survives whole
+    sup2 = Supervisor(8, SupervisorConfig(min_data_parallel=4))
+    for w in range(6):
+        sup2.workers[w].alive = False
+    assert sup2.plan_mesh(model_parallel=1) is None
+
+
+def test_supervisor_restart_budget():
+    sup = Supervisor(2, SupervisorConfig(max_restarts=2))
+    assert sup.should_restart()
+    assert sup.should_restart()
+    assert not sup.should_restart()
