@@ -20,13 +20,14 @@ def main(argv=None):
     args = ap.parse_args(argv)
     quick = not args.full
 
-    from . import (bench_fig3, bench_kernels, bench_sme_init, bench_table1,
-                   bench_table2, roofline_report)
+    from . import (bench_batched, bench_fig3, bench_kernels, bench_sme_init,
+                   bench_table1, bench_table2, roofline_report)
 
     benches = {
         "fig3_scaling": bench_fig3.run,
         "table1_datasets": bench_table1.run,
         "table2_trikmeds": bench_table2.run,
+        "batched_kmedoids": bench_batched.run,
         "sme_init": bench_sme_init.run,
         "kernels": bench_kernels.run,
         "roofline": roofline_report.run,

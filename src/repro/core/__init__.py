@@ -8,7 +8,9 @@ from .distances import (
 )
 from .trimed import (MedoidResult, TopKResult, medoid, trimed_block,
                      trimed_sequential, trimed_topk)
-from .trikmeds import TrikmedsResult, kmedoids_jax, trikmeds
+from .batched import BatchedMedoidResult, batched_medoids
+from .trikmeds import (KMedoidsJaxResult, TrikmedsResult, kmedoids_batched,
+                       kmedoids_jax, trikmeds)
 from .baselines import (
     BaselineResult,
     KMedoidsResult,
@@ -33,6 +35,10 @@ __all__ = [
     "trimed_topk",
     "TopKResult",
     "trikmeds",
+    "BatchedMedoidResult",
+    "batched_medoids",
+    "KMedoidsJaxResult",
+    "kmedoids_batched",
     "kmedoids_jax",
     "kmeds",
     "parkjun_init",

@@ -1,0 +1,217 @@
+"""Batched multi-cluster trimed engine (DESIGN.md §3).
+
+Generalises the single-medoid block round of :mod:`repro.core.trimed` to
+``K`` concurrent per-cluster searches inside one jitted device program —
+the medoid-update step of K-medoids (the paper's §5 headline
+application) without the per-cluster quadratic scan.
+
+The search state is the logical per-cluster bound family ``l[K, N]``
+masked by assignment: element ``i`` belongs to exactly one cluster
+``a(i)``, so only the entry ``l[a(i), i]`` of its column is ever live and
+the state is stored densely as one ``(N,)`` vector. ``l(i)`` lower-bounds
+the *in-cluster sum* ``S(i) = sum_{j : a(j)=a(i)} d(i, j)`` via the
+size-scaled triangle bound (the same inequality trikmeds' Alg. 8 uses
+host-side):
+
+    S(i) >= | v_k * d(p, i) - S(p) |     for any pivot p with a(p) = k,
+
+where ``v_k`` is the cluster size. Per round:
+
+* **shared candidate selection** — the ``B`` lowest-bound survivors
+  *across all clusters* (bounds compared on the mean-distance scale
+  ``l / v`` so large clusters do not starve small ones) are packed into
+  one ``(B, d)`` pivot block;
+* **masked energies** — one matmul-shaped ``(B, N)`` distance pass
+  yields each pivot's exact in-cluster sum, with out-of-cluster columns
+  masked to zero (fused in VMEM on the Pallas path);
+* **scattered tightening** — each pivot's bound information lands only
+  in its own cluster's row: elements of other clusters see ``-inf`` in
+  the max-reduction.
+
+Exactness per cluster follows from the single-cluster argument
+(Theorem 3.1 of the paper applied cluster-wise): bounds only ever take
+values the triangle inequality proves valid, and a cluster's search only
+terminates when every unexplored member's bound is at or above the
+cluster incumbent. Empty clusters report medoid ``-1``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .distances import pairwise, sq_norms
+
+
+@dataclass
+class BatchedMedoidResult:
+    medoids: np.ndarray          # (K,) per-cluster medoid index (-1 = empty)
+    sums: np.ndarray             # (K,) in-cluster sum at the medoid
+    n_computed: int              # pivot rows computed across all clusters
+    n_rounds: int                # shared block rounds
+    n_distances: int             # scalar distance evaluations (rows * N)
+
+
+def _select_candidates(l, computed, thresh, v_a, block):
+    """Top-``block`` surviving candidates across all clusters, scored by
+    the size-normalised bound (mean-distance scale). Returns (idx, valid)."""
+    survivor = jnp.logical_and(~computed, l < thresh)
+    score = jnp.where(survivor, -l / jnp.maximum(v_a, 1.0), -jnp.inf)
+    top, idx = jax.lax.top_k(score, block)
+    valid = top > -jnp.inf
+    return idx, valid
+
+
+def _round_core(X, x_sq, a, v, k, metric, fused_round_fn, state, idx, valid):
+    """One engine round for an already-selected pivot block."""
+    l, computed, s_best, m_best, n_computed, n_rounds = state
+    a_piv = jnp.take(a, idx)                          # (B,) pivot clusters
+    v_piv = jnp.take(v, a_piv).astype(X.dtype)        # (B,) cluster sizes
+    xb = jnp.take(X, idx, axis=0)                     # (B, d) pivot block
+
+    if fused_round_fn is not None:
+        # Pallas fused path: masked (B, N) block never materialised in HBM.
+        s_blk, l = fused_round_fn(xb, X, l, valid, a_piv, a, v_piv)
+    else:
+        d_blk = pairwise(xb, X, metric, a_sq=jnp.take(x_sq, idx), b_sq=x_sq)
+        same = a_piv[:, None] == a[None, :]           # (B, N) cluster mask
+        s_blk = jnp.where(same, d_blk, 0.0).sum(axis=1)   # in-cluster sums
+        gap = jnp.abs(d_blk * v_piv[:, None] - s_blk[:, None])
+        gap = jnp.where(jnp.logical_and(same, valid[:, None]), gap, -jnp.inf)
+        l = jnp.maximum(l, gap.max(axis=0))
+
+    s_blk = jnp.where(valid, s_blk, jnp.inf)
+    n = X.shape[0]
+
+    # per-cluster incumbent update: exact argmin over this round's pivots
+    # via a (K, B) masked view (K and B are both small).
+    per_k = jnp.where(
+        jnp.logical_and(a_piv[None, :] == jnp.arange(k)[:, None],
+                        valid[None, :]),
+        s_blk[None, :], jnp.inf,
+    )
+    r_min = per_k.min(axis=1)
+    r_arg = jnp.take(idx, per_k.argmin(axis=1))
+    better = r_min < s_best
+    s_best = jnp.where(better, r_min, s_best)
+    m_best = jnp.where(better, r_arg, m_best)
+
+    # computed pivots now carry their exact (tight) bound. Invalid slots
+    # are routed to index n and dropped — a duplicate-index scatter with
+    # conflicting values has an unspecified winner in XLA, and the warm
+    # round tiles its seed list to the block width (duplicates, invalid).
+    safe_idx = jnp.where(valid, idx, n)
+    l = l.at[safe_idx].set(s_blk, mode="drop")
+    computed = computed.at[safe_idx].set(True, mode="drop")
+    n_computed = n_computed + valid.sum()
+    return (l, computed, s_best, m_best, n_computed, n_rounds + 1)
+
+
+def _round_body(X, x_sq, a, v, k, metric, block, fused_round_fn, state):
+    l, computed, s_best, m_best = state[0], state[1], state[2], state[3]
+    thresh = jnp.take(s_best, a)                      # per-element threshold
+    v_a = jnp.take(v, a).astype(X.dtype)
+    idx, valid = _select_candidates(l, computed, thresh, v_a, block)
+    return _round_core(X, x_sq, a, v, k, metric, fused_round_fn, state,
+                       idx, valid)
+
+
+def batched_medoids_jit(X, a, k, block, metric="l2", fused_round_fn=None,
+                        warm_idx=None):
+    """Traceable core (no jit wrapper of its own — callers embed it):
+    returns ``(m_best, s_best, n_computed, n_rounds)`` as device values.
+    ``warm_idx`` (K,) seeds round 0 with known-good pivots (e.g. the
+    previous iteration's medoids inside K-medoids), giving a strong
+    elimination threshold before any bound exists."""
+    n = X.shape[0]
+    x_sq = sq_norms(X) if metric in ("l2", "sqeuclidean") else jnp.zeros(
+        n, X.dtype)
+    a = a.astype(jnp.int32)
+    v = jnp.zeros(k, jnp.int32).at[a].add(1, mode="drop")  # cluster sizes
+
+    # out-of-range labels start "computed": they belong to no cluster,
+    # must never be selected as pivots, and can never be medoids
+    oob = jnp.logical_or(a < 0, a >= k)
+    state = (
+        jnp.zeros(n, X.dtype),                        # l
+        oob,                                          # computed
+        jnp.full((k,), jnp.inf, X.dtype),             # s_best
+        jnp.full((k,), -1, jnp.int32),                # m_best
+        jnp.asarray(0, jnp.int32),                    # n_computed
+        jnp.asarray(0, jnp.int32),                    # n_rounds
+    )
+
+    if warm_idx is not None:
+        # warm round: pad/clip the K seeds to the block width
+        w = jnp.resize(warm_idx.astype(jnp.int32), (block,))
+        w_valid = jnp.arange(block) < min(k, block)
+        # a seed for an empty cluster contributes nothing useful but is
+        # harmless: its masked sum is a valid incumbent for whatever
+        # cluster the seed actually belongs to
+        state = _round_core(X, x_sq, a, v, k, metric, fused_round_fn,
+                            state, w, w_valid)
+
+    def cond(state):
+        l, computed, s_best = state[0], state[1], state[2]
+        thresh = jnp.take(s_best, a)
+        return jnp.any(jnp.logical_and(~computed, l < thresh))
+
+    body = functools.partial(_round_body, X, x_sq, a, v, k, metric, block,
+                             fused_round_fn)
+    state = jax.lax.while_loop(cond, body, state)
+    _, _, s_best, m_best, n_computed, n_rounds = state
+    return m_best, s_best, n_computed, n_rounds
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "block", "metric", "fused_round_fn", "warm"),
+)
+def _batched_medoids_entry(X, a, k, block, metric, fused_round_fn, warm,
+                           warm_idx):
+    return batched_medoids_jit(X, a, k, block, metric, fused_round_fn,
+                               warm_idx if warm else None)
+
+
+def batched_medoids(
+    X,
+    assignment,
+    k: int,
+    block: int = 128,
+    metric: str = "l2",
+    fused_round_fn: Callable | None = None,
+    warm_idx=None,
+) -> BatchedMedoidResult:
+    """Exact per-cluster medoids of ``X`` under ``assignment`` (values in
+    ``[0, k)``; out-of-range labels are excluded from every cluster and
+    never explored), all K searches batched into one device program.
+    ``fused_round_fn`` (see ``repro.kernels.ops.fused_masked_round``)
+    replaces the jnp round with the Pallas assignment-masked kernels.
+
+    Only triangle-inequality metrics are admissible — the elimination
+    bound is the triangle bound. ``sqeuclidean`` and ``cosine`` (as
+    1-cos) violate it and would silently return wrong medoids, so they
+    are rejected here."""
+    if metric not in ("l2", "l1"):
+        raise ValueError(
+            "batched_medoids requires a triangle-inequality metric "
+            f"('l2' or 'l1'); got {metric!r}")
+    X = jnp.asarray(X)
+    n = X.shape[0]
+    block = int(min(block, n))
+    warm = warm_idx is not None
+    warm_arr = (jnp.asarray(warm_idx, jnp.int32) if warm
+                else jnp.zeros((k,), jnp.int32))
+    m, s, n_comp, n_rounds = _batched_medoids_entry(
+        X, jnp.asarray(assignment), k, block, metric, fused_round_fn,
+        warm, warm_arr,
+    )
+    return BatchedMedoidResult(
+        np.asarray(m), np.asarray(s), int(n_comp), int(n_rounds),
+        int(n_comp) * n,
+    )

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.distances import pairwise
-from repro.core.trikmeds import kmedoids_jax
+from repro.core.trikmeds import kmedoids_batched, kmedoids_jax
 
 
 def mean_pool_embed(params_embed: jnp.ndarray, tokens: jnp.ndarray):
@@ -22,11 +22,25 @@ def mean_pool_embed(params_embed: jnp.ndarray, tokens: jnp.ndarray):
     return emb.mean(axis=1)
 
 
-def select_coreset(embeddings, k: int, seed: int = 0):
-    """Returns indices of K medoid sequences in the pool."""
+def select_coreset(embeddings, k: int, seed: int = 0,
+                   medoid_update: str = "trimed"):
+    """Returns indices of K medoid sequences in the pool. The medoid
+    update runs the batched multi-cluster trimed engine (DESIGN.md §3);
+    pool sizes here routinely exceed 10^5 sequences, where the quadratic
+    scan would dominate the pipeline."""
     m_idx, assign, energy = kmedoids_jax(
-        jnp.asarray(embeddings, jnp.float32), k, seed=seed)
+        jnp.asarray(embeddings, jnp.float32), k, seed=seed,
+        medoid_update=medoid_update)
     return np.asarray(m_idx), np.asarray(assign), float(energy)
+
+
+def select_coreset_instrumented(embeddings, k: int, seed: int = 0,
+                                medoid_update: str = "trimed"):
+    """As :func:`select_coreset`, returning the full instrumented
+    :class:`repro.core.trikmeds.KMedoidsJaxResult` (distance counts
+    included) for pipeline cost accounting."""
+    return kmedoids_batched(jnp.asarray(embeddings, jnp.float32), k,
+                            seed=seed, medoid_update=medoid_update)
 
 
 def dedup(embeddings, medoid_idx, assign, eps: float):

@@ -16,16 +16,33 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.distances import pairwise
-from repro.core.trikmeds import kmedoids_jax
+from repro.core.trikmeds import kmedoids_batched, kmedoids_jax
 
 
 def build_codebook(frames: np.ndarray, k: int, seed: int = 0,
-                   n_iter: int = 8):
+                   n_iter: int = 8, medoid_update: str = "trimed"):
     """frames: (N, F) pooled calibration frames. Returns (codebook
-    (K, F) medoid vectors, medoid indices)."""
+    (K, F) medoid vectors, medoid indices). The medoid update runs the
+    batched multi-cluster trimed engine (DESIGN.md §3) — at 504-code
+    scale the quadratic scan dominates codebook build time, so this is
+    the difference between minutes and hours on large calibration sets;
+    pass ``medoid_update="scan"`` to force the quadratic path."""
     X = jnp.asarray(frames, jnp.float32)
-    m_idx, _, _ = kmedoids_jax(X, k, seed=seed, n_iter=n_iter)
+    m_idx, _, _ = kmedoids_jax(X, k, seed=seed, n_iter=n_iter,
+                               medoid_update=medoid_update)
     return np.asarray(jnp.take(X, m_idx, axis=0)), np.asarray(m_idx)
+
+
+def build_codebook_instrumented(frames: np.ndarray, k: int, seed: int = 0,
+                                n_iter: int = 8,
+                                medoid_update: str = "trimed"):
+    """As :func:`build_codebook`, also returning the
+    :class:`repro.core.trikmeds.KMedoidsJaxResult` with distance-
+    computation counts (EXPERIMENTS.md §Batched reports these)."""
+    X = jnp.asarray(frames, jnp.float32)
+    res = kmedoids_batched(X, k, seed=seed, n_iter=n_iter,
+                           medoid_update=medoid_update)
+    return np.asarray(X[res.medoids]), res.medoids, res
 
 
 def assign_targets(frames: np.ndarray, codebook: np.ndarray):

@@ -102,6 +102,69 @@ def fused_round(xb, x, l, valid, metric="l2", tn=DEFAULT_TN, interpret=None):
     return e, l_new
 
 
+@functools.partial(jax.jit, static_argnames=("metric", "tn", "interpret"))
+def masked_energies(xb, x, a_piv, a_x, metric="l2", tn=DEFAULT_TN,
+                    interpret=None):
+    """(B,) *in-cluster* row sums: pivot ``b`` only sums columns ``j``
+    with ``a_x[j] == a_piv[b]`` (DESIGN.md §3). Raw sums — not divided by
+    the cluster size; callers compare sums within one cluster only."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = x.shape[0]
+    tn = min(tn, max(LANE, n))
+    xb_p, x_p, bsq, xsq, n_real = _prep(xb, x, tn)
+    n_pad = x_p.shape[0] - n
+    # padded columns get cluster id -1: no pivot matches, so they add 0
+    ax_p = jnp.pad(a_x.astype(jnp.int32), (0, n_pad),
+                   constant_values=-1)[None, :]
+    ap = a_piv.astype(jnp.int32)[None, :]
+    return _pk.masked_energy_kernel(
+        xb_p, x_p, bsq, xsq, ap, ax_p, n_real=n_real, tn=tn, metric=metric,
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "tn", "interpret"))
+def masked_bound_update(xb, x, s, v_piv, valid, a_piv, a_x, l, metric="l2",
+                        tn=DEFAULT_TN, interpret=None):
+    """Fused multi-cluster tightening: for every element ``j``,
+    ``l(j) <- max(l(j), max_b |v_b * D(b, j) - S(b)|)`` over the valid
+    pivots ``b`` in ``j``'s own cluster — each pivot's information is
+    scattered only into its cluster's row of the logical ``l[K, N]``."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = x.shape[0]
+    tn = min(tn, max(LANE, n))
+    xb_p, x_p, bsq, xsq, n_real = _prep(xb, x, tn)
+    n_pad = x_p.shape[0] - n
+    l_p = jnp.pad(l.astype(jnp.float32), (0, n_pad))[None, :]
+    ax_p = jnp.pad(a_x.astype(jnp.int32), (0, n_pad),
+                   constant_values=-1)[None, :]
+    s_p = s.astype(jnp.float32)[None, :]
+    vsz_p = v_piv.astype(jnp.float32)[None, :]
+    v_p = valid.astype(jnp.int32)[None, :]
+    ap = a_piv.astype(jnp.int32)[None, :]
+    out = _pk.masked_bound_kernel(
+        xb_p, x_p, bsq, xsq, s_p, vsz_p, v_p, ap, ax_p, l_p, n_real=n_real,
+        tn=tn, metric=metric, interpret=interpret,
+    )
+    return out[:n]
+
+
+def fused_masked_round(xb, x, l, valid, a_piv, a_x, v_piv, metric="l2",
+                       tn=DEFAULT_TN, interpret=None):
+    """One batched multi-cluster round (DESIGN.md §3): exact in-cluster
+    sums for the packed pivot block plus the per-cluster bound tightening,
+    with the masked ``(B, N)`` distance block never touching HBM. Drop-in
+    for the jnp round in ``core.batched`` (wired up via
+    ``batched_medoids(fused_round_fn=...)``)."""
+    s = masked_energies(xb, x, a_piv, a_x, metric=metric, tn=tn,
+                        interpret=interpret)
+    l_new = masked_bound_update(xb, x, s, v_piv, valid, a_piv, a_x, l,
+                                metric=metric, tn=tn, interpret=interpret)
+    return s, l_new
+
+
 def make_pallas_distance_fn(metric="l2", tn=DEFAULT_TN, interpret=None):
     """Adapter for ``core.trimed.trimed_block(distance_fn=...)``: computes
     the materialised (B, N) block with the Pallas kernel."""

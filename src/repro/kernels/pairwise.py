@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the trimed block round.
 
-Three kernels, all tiled over the element axis ``N`` with MXU-aligned
+Five kernels, all tiled over the element axis ``N`` with MXU-aligned
 blocks (the pivot block ``B`` rides the sublane axis, ``N`` tiles ride the
 lane axis, and the ``-2 X_B Xᵀ`` term is a ``(B, d) x (d, TN)`` MXU
 matmul per tile):
@@ -9,6 +9,12 @@ matmul per tile):
 * ``energy_kernel``       — row-sums only; the block never leaves VMEM.
 * ``bound_update_kernel`` — recomputes each distance tile and folds it
   straight into ``l(j) <- max(l(j), max_b |E(b) - D(b,j)|)``.
+* ``masked_energy_kernel`` / ``masked_bound_kernel`` — the multi-cluster
+  variants (DESIGN.md §3): an extra int32 assignment operand rides the
+  lane axis next to ``x_sq``; each pivot row only sums / tightens the
+  columns whose cluster id matches the pivot's own, so K concurrent
+  per-cluster searches share one ``(B, N)`` distance pass with the mask
+  applied in VMEM (the masked block never reaches HBM either).
 
 ``energy`` + ``bound_update`` together implement a *fused trimed round*
 (DESIGN.md §2): HBM traffic is two streams of ``X`` plus the ``(N,)``
@@ -154,4 +160,88 @@ def bound_update_kernel(xb, x, bsq, xsq, e, valid, l, *, n_real,
         out_shape=jax.ShapeDtypeStruct((1, npad), jnp.float32),
         interpret=interpret,
     )(xb, x, bsq, xsq, e, valid, l)
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
+# masked energy: S(b) = sum_j [a(j) == a_piv(b)] D(b, j)   (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+def _masked_energy_body(n_real, tn, metric, xb_ref, x_ref, bsq_ref, xsq_ref,
+                        ap_ref, ax_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d = _dist_tile(xb_ref[...], x_ref[...], bsq_ref[0], xsq_ref[0], metric)
+    col = i * tn + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    same = ap_ref[0][:, None] == ax_ref[0][None, :]       # (B, TN) cluster mask
+    d = jnp.where(jnp.logical_and(same, col < n_real), d, 0.0)
+    o_ref[...] += d.sum(axis=1, keepdims=True).T          # (1, B) accumulator
+
+
+def masked_energy_kernel(xb, x, bsq, xsq, a_piv, a_x, *, n_real,
+                         tn=DEFAULT_TN, metric="l2", interpret=False):
+    b, dpad = xb.shape
+    npad = x.shape[0]
+    grid = (npad // tn,)
+    out = pl.pallas_call(
+        functools.partial(_masked_energy_body, n_real, tn, metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, dpad), lambda i: (0, 0)),
+            pl.BlockSpec((tn, dpad), lambda i: (i, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, tn), lambda i: (0, i)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, tn), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, b), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, b), jnp.float32),
+        interpret=interpret,
+    )(xb, x, bsq, xsq, a_piv, a_x)
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
+# masked bound update: l(j) <- max(l(j), max_b [same cluster] |v_b D - S_b|)
+# ---------------------------------------------------------------------------
+def _masked_bound_body(n_real, tn, metric, xb_ref, x_ref, bsq_ref, xsq_ref,
+                       s_ref, vsz_ref, v_ref, ap_ref, ax_ref, l_ref, o_ref):
+    d = _dist_tile(xb_ref[...], x_ref[...], bsq_ref[0], xsq_ref[0], metric)
+    s = s_ref[0]                                          # (B,) in-cluster sums
+    vsz = vsz_ref[0]                                      # (B,) cluster sizes
+    valid = v_ref[0] != 0                                 # (B,)
+    same = ap_ref[0][:, None] == ax_ref[0][None, :]       # (B, TN)
+    gap = jnp.abs(d * vsz[:, None] - s[:, None])
+    neg_inf = jnp.asarray(-jnp.inf, jnp.float32)
+    gap = jnp.where(jnp.logical_and(same, valid[:, None]), gap, neg_inf)
+    o_ref[...] = jnp.maximum(l_ref[...], gap.max(axis=0)[None, :])
+
+
+def masked_bound_kernel(xb, x, bsq, xsq, s, vsz, valid, a_piv, a_x, l, *,
+                        n_real, tn=DEFAULT_TN, metric="l2", interpret=False):
+    b, dpad = xb.shape
+    npad = x.shape[0]
+    grid = (npad // tn,)
+    out = pl.pallas_call(
+        functools.partial(_masked_bound_body, n_real, tn, metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, dpad), lambda i: (0, 0)),
+            pl.BlockSpec((tn, dpad), lambda i: (i, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, tn), lambda i: (0, i)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, tn), lambda i: (0, i)),
+            pl.BlockSpec((1, tn), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, tn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, npad), jnp.float32),
+        interpret=interpret,
+    )(xb, x, bsq, xsq, s, vsz, valid, a_piv, a_x, l)
     return out[0]

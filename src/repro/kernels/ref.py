@@ -49,3 +49,36 @@ def fused_round_ref(xb, x, l, valid, metric: str = "l2"):
     e = e_sum / n
     l_new = bound_update_ref(xb, x, e, l, valid, metric)
     return e, l_new
+
+
+# ---------------------------------------------------------------------------
+# multi-cluster (assignment-masked) references — DESIGN.md §3
+# ---------------------------------------------------------------------------
+def masked_energy_ref(xb, x, a_piv, a_x, metric: str = "l2") -> jnp.ndarray:
+    """(B,) in-cluster row sums: pivot b sums only columns with
+    ``a_x[j] == a_piv[b]``."""
+    d = pairwise_ref(xb, x, metric)
+    same = a_piv[:, None] == a_x[None, :]
+    return jnp.where(same, d, 0.0).sum(axis=1)
+
+
+def masked_bound_update_ref(xb, x, s, v_piv, valid, a_piv, a_x, l,
+                            metric: str = "l2") -> jnp.ndarray:
+    """l(j) <- max(l(j), max_b |v_b * D(b,j) - S(b)|) over valid pivots
+    in j's own cluster."""
+    d = pairwise_ref(xb, x, metric)
+    gap = jnp.abs(d * v_piv.astype(jnp.float32)[:, None]
+                  - s.astype(jnp.float32)[:, None])
+    ok = jnp.logical_and(a_piv[:, None] == a_x[None, :], valid[:, None])
+    gap = jnp.where(ok, gap, -jnp.inf)
+    return jnp.maximum(l.astype(jnp.float32), gap.max(axis=0))
+
+
+def fused_masked_round_ref(xb, x, l, valid, a_piv, a_x, v_piv,
+                           metric: str = "l2"):
+    """Reference for the fused multi-cluster round: in-cluster sums +
+    per-cluster bound tightening."""
+    s = masked_energy_ref(xb, x, a_piv, a_x, metric)
+    l_new = masked_bound_update_ref(xb, x, s, v_piv, valid, a_piv, a_x, l,
+                                    metric)
+    return s, l_new

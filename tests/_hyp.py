@@ -1,0 +1,82 @@
+"""hypothesis compatibility shim for mixed test modules.
+
+Modules that are *purely* property-based guard themselves with
+``pytest.importorskip("hypothesis")``. Modules that mix example-based and
+property-based tests import ``given/settings/st`` from here instead: when
+hypothesis is installed they get the real thing; when it is not (this
+container has no network access), property tests fall back to a
+deterministic fixed-sample driver — each ``@given`` test runs over a
+seeded batch of drawn examples instead of being skipped, so the
+example-based tests in the same file keep collecting everywhere.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    _FALLBACK_EXAMPLES = 10  # cap: the shim is a smoke net, not a fuzzer
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(min_value
+                                  + (max_value - min_value) * rng.random()))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    st = _Strategies()
+
+    def settings(**kw):
+        max_examples = kw.get("max_examples", _FALLBACK_EXAMPLES)
+
+        def deco(fn):
+            fn._hyp_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategy_kw):
+        def deco(fn):
+            # No functools.wraps: pytest must see a zero-arg signature,
+            # not the property function's drawn parameters (it would try
+            # to resolve them as fixtures).
+            def wrapper():
+                n = getattr(wrapper, "_hyp_max_examples",
+                            _FALLBACK_EXAMPLES)
+                rng = np.random.default_rng(0)
+                for _ in range(min(n, _FALLBACK_EXAMPLES)):
+                    drawn = {k: s.draw(rng) for k, s in strategy_kw.items()}
+                    fn(**drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

@@ -1,0 +1,197 @@
+"""Correctness of the batched multi-cluster trimed engine (DESIGN.md §3)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import batched_medoids, kmedoids_batched, kmedoids_jax
+from repro.core.trimed import trimed_sequential
+from repro.kernels import ops, ref
+from repro.kernels.ops import fused_masked_round
+
+
+def _clustered(n, d, k_true, seed=0, spread=0.5):
+    rng = np.random.default_rng(seed)
+    centers = rng.random((k_true, d)) * 10
+    idx = rng.integers(0, k_true, n)
+    return (centers[idx]
+            + rng.standard_normal((n, d)) * spread).astype(np.float32)
+
+
+def _per_cluster_expected(X, a, k):
+    """fp64 per-cluster exact medoids via the sequential oracle."""
+    want = np.full(k, -1)
+    for kk in range(k):
+        members = np.flatnonzero(a == kk)
+        if len(members) == 0:
+            continue
+        r = trimed_sequential(np.asarray(X[members], np.float64), seed=1)
+        want[kk] = members[r.index]
+    return want
+
+
+# ---------------------------------------------------------------------------
+# engine exactness
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,d,k,block", [
+    (400, 2, 5, 64), (600, 3, 7, 32), (300, 5, 1, 16), (257, 2, 9, 128),
+])
+def test_engine_matches_sequential_per_cluster(n, d, k, block):
+    rng = np.random.default_rng(n)
+    X = rng.random((n, d)).astype(np.float32)
+    a = rng.integers(0, k, n)
+    r = batched_medoids(X, a, k, block=block)
+    want = _per_cluster_expected(X, a, k)
+    np.testing.assert_array_equal(r.medoids, want)
+    assert r.n_computed <= n
+
+
+def test_engine_fused_path_matches_dense():
+    X = _clustered(500, 3, 6, seed=2)
+    rng = np.random.default_rng(2)
+    a = rng.integers(0, 6, 500)
+    dense = batched_medoids(X, a, 6, block=32)
+    fused = batched_medoids(X, a, 6, block=32,
+                            fused_round_fn=fused_masked_round)
+    np.testing.assert_array_equal(dense.medoids, fused.medoids)
+    np.testing.assert_array_equal(dense.medoids,
+                                  _per_cluster_expected(X, a, 6))
+
+
+def test_engine_empty_cluster_reports_minus_one():
+    rng = np.random.default_rng(4)
+    X = rng.random((200, 2)).astype(np.float32)
+    a = rng.integers(0, 3, 200)          # clusters 3, 4 stay empty
+    r = batched_medoids(X, a, 5, block=32)
+    assert r.medoids[3] == -1 and r.medoids[4] == -1
+    np.testing.assert_array_equal(r.medoids[:3],
+                                  _per_cluster_expected(X, a, 3))
+
+
+def test_engine_warm_start_stays_exact():
+    """Warm seeding changes the exploration order, never the answer.
+    (It is not guaranteed to reduce rows: an optimal threshold steers
+    selection toward central, weakly-tightening pivots — exploration
+    cost is a heuristic property, exactness is the invariant.)"""
+    X = _clustered(1000, 2, 6, seed=6)
+    rng = np.random.default_rng(6)
+    a = rng.integers(0, 6, 1000)
+    want = _per_cluster_expected(X, a, 6)
+    cold = batched_medoids(X, a, 6, block=64)
+    warm = batched_medoids(X, a, 6, block=64,
+                           warm_idx=np.asarray(want))
+    np.testing.assert_array_equal(cold.medoids, want)
+    np.testing.assert_array_equal(warm.medoids, want)
+    assert warm.n_computed < len(X)
+
+
+# ---------------------------------------------------------------------------
+# masked kernels vs pure-jnp references
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,n,d,k", [(8, 300, 5, 4), (16, 1000, 37, 7),
+                                     (1, 130, 1, 1), (32, 512, 128, 5)])
+def test_masked_kernels_match_ref(b, n, d, k):
+    rng = np.random.default_rng(b + n)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    xb_idx = rng.integers(0, n, b)
+    xb = x[xb_idx]
+    a_x = rng.integers(0, k, n).astype(np.int32)
+    a_piv = a_x[xb_idx]
+    v = np.bincount(a_x, minlength=k)
+    v_piv = v[a_piv].astype(np.float32)
+    l = np.abs(rng.standard_normal(n)).astype(np.float32)
+    valid = rng.random(b) > 0.3
+    if not valid.any():
+        valid[0] = True
+    args = [jnp.asarray(v) for v in (xb, x, l, valid, a_piv, a_x, v_piv)]
+    s_got, l_got = ops.fused_masked_round(*args)
+    s_want, l_want = ref.fused_masked_round_ref(*args)
+    # rtol 1e-3: the bound gap |v*D - S| amplifies fp32 summation-order
+    # differences by the cluster size v
+    np.testing.assert_allclose(s_got, s_want, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(l_got, l_want, rtol=1e-3, atol=1e-3)
+
+
+def test_masked_energy_equals_unmasked_single_cluster():
+    """With one cluster the masked kernels degenerate to the plain ones."""
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal((400, 7)).astype(np.float32)
+    xb = x[:16]
+    zeros = jnp.zeros(400, jnp.int32)
+    s = ops.masked_energies(jnp.asarray(xb), jnp.asarray(x),
+                            jnp.zeros(16, jnp.int32), zeros)
+    e = ops.block_energies(jnp.asarray(xb), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(e),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# K-medoids integration: exactness and the sub-quadratic regression
+# ---------------------------------------------------------------------------
+def test_kmedoids_trimed_matches_scan():
+    """Both medoid updates are exact per iteration, so the trajectories
+    are identical on well-separated data."""
+    X = _clustered(1500, 3, 8, seed=11, spread=0.3)
+    rt = kmedoids_batched(X, 8, seed=0, n_iter=5, medoid_update="trimed")
+    rs = kmedoids_batched(X, 8, seed=0, n_iter=5, medoid_update="scan")
+    np.testing.assert_array_equal(rt.medoids, rs.medoids)
+    np.testing.assert_array_equal(rt.assignment, rs.assignment)
+    assert abs(rt.energy - rs.energy) <= 1e-3 * max(1.0, abs(rs.energy))
+
+
+def test_engine_fewer_distances_than_quadratic_regression():
+    """At N >= 2048 the engine must compute strictly fewer distances than
+    the quadratic medoid-update scan (the PR's reason to exist)."""
+    n = 2048
+    X = _clustered(n, 3, 8, seed=13)
+    rt = kmedoids_batched(X, 8, seed=0, n_iter=4, medoid_update="trimed")
+    rs = kmedoids_batched(X, 8, seed=0, n_iter=4, medoid_update="scan")
+    assert rt.n_distances < rs.n_distances
+    assert abs(rt.energy - rs.energy) <= 1e-3 * max(1.0, abs(rs.energy))
+
+
+def test_engine_rejects_non_triangle_metrics():
+    """The elimination bound is the triangle bound; sqeuclidean/cosine
+    violate it and must be rejected, not silently mis-answered."""
+    X = np.random.default_rng(0).random((50, 2)).astype(np.float32)
+    a = np.zeros(50, dtype=np.int32)
+    for metric in ("sqeuclidean", "cosine"):
+        with pytest.raises(ValueError):
+            batched_medoids(X, a, 1, metric=metric)
+
+
+def test_kmedoids_non_triangle_metric_falls_back_to_scan():
+    """kmedoids_jax stays exact for sqeuclidean by auto-selecting the
+    quadratic scan (identical rows/medoids to explicit scan)."""
+    X = _clustered(400, 3, 4, seed=21)
+    rt = kmedoids_batched(X, 4, n_iter=3, metric="sqeuclidean",
+                          medoid_update="trimed")
+    rs = kmedoids_batched(X, 4, n_iter=3, metric="sqeuclidean",
+                          medoid_update="scan")
+    np.testing.assert_array_equal(rt.medoids, rs.medoids)
+    assert rt.n_rows == rs.n_rows
+
+
+def test_kmedoids_rejects_bad_medoid_update():
+    X = np.random.default_rng(0).random((64, 2)).astype(np.float32)
+    with pytest.raises(ValueError):
+        kmedoids_batched(X, 4, medoid_update="trimedd")
+
+
+def test_kmedoids_use_kernels_matches_jnp_round():
+    X = _clustered(600, 3, 5, seed=23)
+    mk, ak, _ = kmedoids_jax(X, 5, n_iter=3, use_kernels=True)
+    mj, aj, _ = kmedoids_jax(X, 5, n_iter=3, use_kernels=False)
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(mj))
+    np.testing.assert_array_equal(np.asarray(ak), np.asarray(aj))
+
+
+def test_standalone_engine_strictly_sub_n_rows():
+    """On a fixed assignment at N=2048 the engine explores well under N
+    rows (sub-quadratic in scalar distances)."""
+    n = 2048
+    X = _clustered(n, 3, 8, seed=17)
+    rng = np.random.default_rng(17)
+    a = rng.integers(0, 8, n)
+    r = batched_medoids(X, a, 8, block=128)
+    assert r.n_computed < n
+    assert r.n_distances == r.n_computed * n

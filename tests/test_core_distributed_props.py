@@ -1,7 +1,9 @@
 """Additional property tests on the core invariants (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import exact_energies, trimed_block, trimed_sequential
 from repro.core.distances import VectorOracle

@@ -1,7 +1,7 @@
 """Correctness of the paper's core: trimed (sequential & block)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (
     exact_energies,
