@@ -1,0 +1,138 @@
+"""Trimed engine sweep: scan vs block vs pipelined (DESIGN.md §4).
+
+Emits machine-readable ``BENCH_trimed.json`` at the repo root (plus the
+usual CSV under ``results/``) so the perf trajectory is tracked across
+PRs. Per engine and N: wall-clock, computed rows, scalar distances, and
+the HBM-model X-streams per round (full passes over ``X`` plus the
+compacted fold columns, normalised by ``N``; the block engine's fused
+kernels cost exactly 2.0 on this model, the pipelined engine 1 + M/N).
+
+At ``N >= 4096`` the sweep additionally times both engines through the
+Pallas kernels on the **interpret path** (``block-kernels`` /
+``pipelined-kernels`` rows) — there the kernel/tile count dominates, so
+the one-stream round shows up directly as wall-clock.
+
+``mode="smoke"`` (``benchmarks/run.py --smoke``) runs a tiny sweep that
+also exercises the interpret path, validating the JSON schema and every
+engine entrypoint in CI.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from .common import RESULTS_DIR, save_csv, timed
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_trimed.json"
+
+
+def json_path_for(mode: str | None) -> Path:
+    """Smoke runs must not clobber the committed perf-trajectory file."""
+    if mode == "smoke":
+        return RESULTS_DIR / "BENCH_trimed_smoke.json"
+    return JSON_PATH
+
+FIELDS = ["engine", "n", "d", "wall_s", "n_computed", "n_rounds",
+          "n_distances", "full_x_streams_per_round", "x_streams_per_round",
+          "index"]
+
+
+def _run_scan(X, block):
+    from repro.core.distances import exact_energies
+
+    t0 = time.perf_counter()
+    e = np.asarray(exact_energies(X))
+    dt = time.perf_counter() - t0
+    n = len(X)
+    return dict(wall_s=dt, n_computed=n, n_rounds=1, n_distances=n * n,
+                full_x_streams_per_round=float(n),
+                x_streams_per_round=float(n), index=int(np.argmin(e)))
+
+
+def _run_block(X, block, kernels=False):
+    from repro.core import trimed_block
+    from repro.kernels.ops import fused_round
+
+    kw = dict(block=block, fused_round_fn=fused_round if kernels else None)
+    trimed_block(X, **kw)                                  # warm the jit
+    r, dt = timed(trimed_block, X, **kw)
+    return dict(wall_s=dt, n_computed=r.n_computed, n_rounds=r.n_rounds,
+                n_distances=r.n_distances,
+                full_x_streams_per_round=2.0,              # fused-kernel model
+                x_streams_per_round=2.0,
+                index=r.index)
+
+
+def _run_pipelined(X, block, kernels=False, schedule=None):
+    from repro.core import trimed_pipelined
+
+    kw = dict(block=block, use_kernels=kernels, block_schedule=schedule)
+    trimed_pipelined(X, **kw)                              # warm the jit
+    r, dt = timed(trimed_pipelined, X, **kw)
+    # every pipelined round issues exactly ONE full pass over X (the
+    # energy floor); x_streams_per_round adds the compacted fold columns
+    spr = r.x_cols_streamed / max(r.n_rounds * len(X), 1)
+    return dict(wall_s=dt, n_computed=r.n_computed, n_rounds=r.n_rounds,
+                n_distances=r.n_distances,
+                full_x_streams_per_round=1.0,
+                x_streams_per_round=round(spr, 4), index=r.index)
+
+
+def _run_pipelined_warm(X, block, kernels=False):
+    """The adaptive geometric warm-up schedule, tracked separately."""
+    return _run_pipelined(X, block, kernels, schedule="geometric")
+
+
+def run(quick: bool = True, mode: str | None = None):
+    """Returns ``(rows, csv_path)`` like every bench; also writes
+    ``BENCH_trimed.json``."""
+    if mode == "smoke":
+        sizes, d, block, kernel_min = [512], 3, 32, 0
+    elif quick:
+        sizes, d, block, kernel_min = [1024, 2048, 4096, 8192], 3, 128, 4096
+    else:
+        sizes, d, block, kernel_min = ([1024, 2048, 4096, 8192, 16384,
+                                        32768], 3, 128, 4096)
+
+    rng = np.random.default_rng(0)
+    rows, records = [], []
+    for n in sizes:
+        X = rng.random((n, d)).astype(np.float32)
+        blk = min(block, n)
+        cells = [("scan", _run_scan, False),
+                 ("block", _run_block, False),
+                 ("pipelined", _run_pipelined, False),
+                 ("pipelined-warm", _run_pipelined_warm, False)]
+        if n >= kernel_min:                    # Pallas interpret path
+            cells += [("block-kernels", _run_block, True),
+                      ("pipelined-kernels", _run_pipelined, True)]
+        indices = {}
+        for name, fn, kernels in cells:
+            rec = {"engine": name, "n": n, "d": d,
+                   **(fn(X, blk, kernels) if fn is not _run_scan
+                      else fn(X, blk))}
+            indices[name] = rec["index"]
+            records.append(rec)
+            rows.append([rec[f] for f in FIELDS])
+        # exactness across engines is part of the bench contract
+        assert len(set(indices.values())) == 1, indices
+
+    payload = {"schema": "bench_trimed/v1", "block": block,
+               "fields": FIELDS, "records": records}
+    out_json = json_path_for(mode)
+    out_json.parent.mkdir(exist_ok=True)
+    out_json.write_text(json.dumps(payload, indent=1) + "\n")
+    csv_name = "trimed_engines_smoke" if mode == "smoke" else "trimed_engines"
+    path = save_csv(csv_name, FIELDS, rows)
+    return rows, path
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows, path = run(quick="--full" not in sys.argv,
+                     mode="smoke" if "--smoke" in sys.argv else None)
+    print(f"{len(rows)} rows -> {path} and {JSON_PATH}")

@@ -8,6 +8,7 @@ writes detailed CSVs under results/.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -16,17 +17,33 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny trimed sweep (interpret path), "
+                         "validates BENCH_trimed.json schema + imports")
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
     quick = not args.full
 
     from . import (bench_batched, bench_fig3, bench_kernels, bench_sme_init,
-                   bench_table1, bench_table2, roofline_report)
+                   bench_table1, bench_table2, bench_trimed,
+                   roofline_report)
+
+    if args.smoke:
+        rows, path = bench_trimed.run(quick=True, mode="smoke")
+        json_path = bench_trimed.json_path_for("smoke")
+        payload = json.loads(json_path.read_text())
+        assert payload["schema"] == "bench_trimed/v1", payload.get("schema")
+        missing = [f for r in payload["records"]
+                   for f in payload["fields"] if f not in r]
+        assert not missing, f"schema drift: missing {missing}"
+        print(f"smoke OK: {len(rows)} rows; json={json_path}; csv={path}")
+        return 0
 
     benches = {
         "fig3_scaling": bench_fig3.run,
         "table1_datasets": bench_table1.run,
         "table2_trikmeds": bench_table2.run,
+        "trimed_engines": bench_trimed.run,
         "batched_kmedoids": bench_batched.run,
         "sme_init": bench_sme_init.run,
         "kernels": bench_kernels.run,

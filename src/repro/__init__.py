@@ -4,4 +4,6 @@ Layers: core (the paper), kernels (Pallas), models (arch zoo), distributed
 (sharding), train/serve (drivers), data/optim/checkpoint/runtime
 (substrate), launch (mesh + dry-run), roofline (perf analysis).
 """
+from . import compat  # noqa: F401  (installs jax<0.5 mesh-API shims)
+
 __version__ = "1.0.0"

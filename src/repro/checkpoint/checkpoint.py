@@ -9,7 +9,7 @@ Layout:  <dir>/step_<N>/
 * ``keep_last`` old checkpoints are retained, older ones pruned.
 * Restore is *elastic*: arrays are saved as full logical values and
   re-sharded onto whatever mesh the restoring job brings up (the mesh
-  may have a different data-axis size after a failure — DESIGN.md §5).
+  may have a different data-axis size after a failure — DESIGN.md §6).
 * Async: `save(..., blocking=False)` snapshots to host memory
   immediately and writes on a background thread so the train loop
   continues (commit ordering preserved by a single worker queue).

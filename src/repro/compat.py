@@ -1,0 +1,111 @@
+"""Version-compat shims for jax < 0.5 mesh/sharding APIs.
+
+The distributed layer (``core/distributed.py``, ``models/moe.py``,
+``distributed/pipeline.py``, ``launch/mesh.py``) is written against the
+modern mesh API: ``jax.sharding.AxisType``, ``jax.make_mesh(...,
+axis_types=...)``, ``jax.set_mesh`` (ambient mesh), ``jax.shard_map``
+(with ``check_vma``) and ``jax.sharding.get_abstract_mesh``. jax 0.4.x
+(this container ships 0.4.37) predates all five. Importing this module
+— it is imported from ``repro/__init__.py``, so any ``import repro``
+suffices — installs equivalents into the ``jax`` namespace when they are
+missing:
+
+* ``AxisType`` — a stand-in enum (axis types only affect the sharding
+  *dialect*, not numerics; every in-repo use is ``Auto``);
+* ``make_mesh`` — wrapper accepting and dropping ``axis_types``;
+* ``set_mesh`` — context manager recording the ambient mesh in a module
+  global;
+* ``get_abstract_mesh`` — returns that ambient mesh (a concrete ``Mesh``
+  carries the ``axis_names`` / ``axis_sizes`` / ``empty`` surface the
+  callers use) or ``None``;
+* ``shard_map`` — adapter over ``jax.experimental.shard_map.shard_map``
+  translating ``check_vma`` -> ``check_rep`` and resolving a missing
+  ``mesh`` from the ambient one.
+
+On jax versions that already provide an API, the shim for it is a no-op,
+so this module is safe to import unconditionally.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding as _sharding
+
+_ambient_mesh = None     # set by the set_mesh shim
+
+
+if not hasattr(_sharding, "AxisType"):
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    _sharding.AxisType = AxisType
+else:                                             # pragma: no cover
+    AxisType = _sharding.AxisType
+
+
+if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+    _orig_make_mesh = jax.make_mesh
+
+    @functools.wraps(_orig_make_mesh)
+    def _make_mesh(axis_shapes, axis_names, *, devices=None,
+                   axis_types=None):
+        del axis_types               # pre-AxisType jax: Auto is implicit
+        return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = _make_mesh
+
+
+if not hasattr(jax, "set_mesh"):
+    @contextlib.contextmanager
+    def _set_mesh(mesh):
+        global _ambient_mesh
+        prev = _ambient_mesh
+        _ambient_mesh = mesh
+        try:
+            # the legacy resource-env context is what pre-0.5
+            # with_sharding_constraint/GSPMD consult for PartitionSpecs
+            with mesh:
+                yield mesh
+        finally:
+            _ambient_mesh = prev
+
+    jax.set_mesh = _set_mesh
+
+    def _get_abstract_mesh():
+        return _ambient_mesh
+
+    _sharding.get_abstract_mesh = _get_abstract_mesh
+
+
+if not hasattr(jax.lax, "axis_size"):
+    def _axis_size(axis_name):
+        # psum of a literal 1 constant-folds to the static axis size
+        return jax.lax.psum(1, axis_name)
+
+    jax.lax.axis_size = _axis_size
+
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def _shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                   check_vma=None, check_rep=None, **kwargs):
+        if mesh is None:
+            mesh = _ambient_mesh
+        if mesh is None:
+            raise ValueError(
+                "shard_map needs a mesh: pass mesh=... or enter a "
+                "jax.set_mesh(...) context")
+        if check_vma is None:
+            check_vma = True if check_rep is None else check_rep
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs,
+                              check_rep=bool(check_vma), **kwargs)
+
+    jax.shard_map = _shard_map

@@ -6,7 +6,7 @@ architecture in this package defines ``CONFIG`` (the exact published
 config) and ``smoke()`` (a reduced same-family config for CPU tests).
 
 ``SHAPES`` defines the four assigned input shapes; applicability per arch
-is resolved by :func:`cells_for` (DESIGN.md §6 skip table).
+is resolved by :func:`cells_for` (DESIGN.md §7 skip table).
 """
 from __future__ import annotations
 
@@ -153,7 +153,7 @@ def get_smoke_config(arch: str) -> ModelConfig:
 
 
 def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
-    """(runs?, reason-if-skipped) — DESIGN.md §6 cell accounting."""
+    """(runs?, reason-if-skipped) — DESIGN.md §7 cell accounting."""
     if shape.kind == "decode" and not cfg.supports_decode:
         return False, "encoder-only arch has no decode step"
     if shape.name == "long_500k" and not cfg.sub_quadratic:

@@ -9,6 +9,8 @@ from .distances import (
 from .trimed import (MedoidResult, TopKResult, medoid, trimed_block,
                      trimed_sequential, trimed_topk)
 from .batched import BatchedMedoidResult, batched_medoids
+from .pipelined import (batched_medoids_pipelined, trimed_pipelined,
+                        warmup_schedule)
 from .trikmeds import (KMedoidsJaxResult, TrikmedsResult, kmedoids_batched,
                        kmedoids_jax, trikmeds)
 from .baselines import (
@@ -37,6 +39,9 @@ __all__ = [
     "trikmeds",
     "BatchedMedoidResult",
     "batched_medoids",
+    "batched_medoids_pipelined",
+    "trimed_pipelined",
+    "warmup_schedule",
     "KMedoidsJaxResult",
     "kmedoids_batched",
     "kmedoids_jax",

@@ -55,6 +55,8 @@ class BatchedMedoidResult:
     n_computed: int              # pivot rows computed across all clusters
     n_rounds: int                # shared block rounds
     n_distances: int             # scalar distance evaluations (rows * N)
+    n_stages: int = 0            # compaction ladder stages (pipelined only)
+    x_cols_streamed: int = 0     # X columns streamed (pipelined only)
 
 
 def _select_candidates(l, computed, thresh, v_a, block):
@@ -122,21 +124,27 @@ def _round_body(X, x_sq, a, v, k, metric, block, fused_round_fn, state):
 
 
 def batched_medoids_jit(X, a, k, block, metric="l2", fused_round_fn=None,
-                        warm_idx=None):
+                        warm_idx=None, warm=()):
     """Traceable core (no jit wrapper of its own — callers embed it):
     returns ``(m_best, s_best, n_computed, n_rounds)`` as device values.
     ``warm_idx`` (K,) seeds round 0 with known-good pivots (e.g. the
     previous iteration's medoids inside K-medoids), giving a strong
-    elimination threshold before any bound exists."""
+    elimination threshold before any bound exists. ``warm`` (static
+    tuple) prepends a geometric warm-up of small selection rounds — the
+    adaptive block schedule of DESIGN.md §4 — used when no ``warm_idx``
+    is available."""
     n = X.shape[0]
     x_sq = sq_norms(X) if metric in ("l2", "sqeuclidean") else jnp.zeros(
         n, X.dtype)
     a = a.astype(jnp.int32)
-    v = jnp.zeros(k, jnp.int32).at[a].add(1, mode="drop")  # cluster sizes
-
     # out-of-range labels start "computed": they belong to no cluster,
-    # must never be selected as pivots, and can never be medoids
+    # must never be selected as pivots, and can never be medoids. They
+    # must also not count toward any cluster's size — a raw scatter
+    # would wrap negative labels to k-1 (mode="drop" only drops
+    # too-large indices), corrupting the size-scaled triangle bound.
     oob = jnp.logical_or(a < 0, a >= k)
+    v = jnp.zeros(k, jnp.int32).at[jnp.where(oob, k, a)].add(
+        1, mode="drop")                                    # cluster sizes
     state = (
         jnp.zeros(n, X.dtype),                        # l
         oob,                                          # computed
@@ -155,6 +163,13 @@ def batched_medoids_jit(X, a, k, block, metric="l2", fused_round_fn=None,
         # cluster the seed actually belongs to
         state = _round_core(X, x_sq, a, v, k, metric, fused_round_fn,
                             state, w, w_valid)
+    for b in warm:                                # unrolled warm-up rounds
+        l, computed, s_best = state[0], state[1], state[2]
+        thresh = jnp.take(s_best, a)
+        v_a = jnp.take(v, a).astype(X.dtype)
+        idx, valid = _select_candidates(l, computed, thresh, v_a, b)
+        state = _round_core(X, x_sq, a, v, k, metric, fused_round_fn,
+                            state, idx, valid)
 
     def cond(state):
         l, computed, s_best = state[0], state[1], state[2]
@@ -170,12 +185,14 @@ def batched_medoids_jit(X, a, k, block, metric="l2", fused_round_fn=None,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "block", "metric", "fused_round_fn", "warm"),
+    static_argnames=("k", "block", "metric", "fused_round_fn", "warm",
+                     "warm_blocks"),
 )
 def _batched_medoids_entry(X, a, k, block, metric, fused_round_fn, warm,
-                           warm_idx):
+                           warm_idx, warm_blocks=()):
     return batched_medoids_jit(X, a, k, block, metric, fused_round_fn,
-                               warm_idx if warm else None)
+                               warm_idx if warm else None,
+                               warm=warm_blocks)
 
 
 def batched_medoids(
@@ -186,12 +203,15 @@ def batched_medoids(
     metric: str = "l2",
     fused_round_fn: Callable | None = None,
     warm_idx=None,
+    block_schedule=None,
 ) -> BatchedMedoidResult:
     """Exact per-cluster medoids of ``X`` under ``assignment`` (values in
     ``[0, k)``; out-of-range labels are excluded from every cluster and
     never explored), all K searches batched into one device program.
     ``fused_round_fn`` (see ``repro.kernels.ops.fused_masked_round``)
     replaces the jnp round with the Pallas assignment-masked kernels.
+    ``block_schedule="geometric"`` prepends the adaptive warm-up of small
+    selection rounds (DESIGN.md §4; cost only, never exactness).
 
     Only triangle-inequality metrics are admissible — the elimination
     bound is the triangle bound. ``sqeuclidean`` and ``cosine`` (as
@@ -201,15 +221,18 @@ def batched_medoids(
         raise ValueError(
             "batched_medoids requires a triangle-inequality metric "
             f"('l2' or 'l1'); got {metric!r}")
+    from .pipelined import resolve_schedule
+
     X = jnp.asarray(X)
     n = X.shape[0]
     block = int(min(block, n))
     warm = warm_idx is not None
     warm_arr = (jnp.asarray(warm_idx, jnp.int32) if warm
                 else jnp.zeros((k,), jnp.int32))
+    warm_blocks = resolve_schedule(block_schedule, block)
     m, s, n_comp, n_rounds = _batched_medoids_entry(
         X, jnp.asarray(assignment), k, block, metric, fused_round_fn,
-        warm, warm_arr,
+        warm, warm_arr, warm_blocks=warm_blocks,
     )
     return BatchedMedoidResult(
         np.asarray(m), np.asarray(s), int(n_comp), int(n_rounds),

@@ -22,6 +22,9 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat as _compat  # noqa: F401  (jax<0.5 shard_map/mesh)
+
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .distances import pairwise, sq_norms

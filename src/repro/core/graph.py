@@ -3,7 +3,7 @@
 The paper's Table 1 runs trimed on road/rail/sensor networks where
 ``dist`` is shortest-path length and "computing an element" means one
 Dijkstra sweep. Shortest-path is pointer-chasing work with no TPU
-analogue (DESIGN.md §7), so this oracle is host-side; the *algorithmic*
+analogue (DESIGN.md §8), so this oracle is host-side; the *algorithmic*
 layer (trimed's bound logic) is shared with the vector path.
 """
 from __future__ import annotations

@@ -211,10 +211,10 @@ class KMedoidsJaxResult:
 @functools.partial(
     jax.jit,
     static_argnames=("k", "n_iter", "metric", "medoid_update", "block",
-                     "fused_round_fn"),
+                     "fused_round_fn", "warm_blocks"),
 )
 def _kmedoids_impl(X, k, seed, n_iter, metric, medoid_update, block,
-                   fused_round_fn=None):
+                   fused_round_fn=None, warm_blocks=()):
     """Shared jitted body. Returns (m_idx, a, energy, n_rows) where
     ``n_rows`` counts full (N,) distance rows — multiply by N for scalar
     distances (kept in row units on device so the counter cannot overflow
@@ -239,7 +239,7 @@ def _kmedoids_impl(X, k, seed, n_iter, metric, medoid_update, block,
             # incumbent medoids — sub-quadratic in N per iteration.
             m_new, _s, n_comp, _r = batched_medoids_jit(
                 X, a, k, block, metric, fused_round_fn=fused_round_fn,
-                warm_idx=m_idx)
+                warm_idx=m_idx, warm=warm_blocks)
             new_m = jnp.where(m_new >= 0, m_new, m_idx).astype(jnp.int32)
             n_rows = n_rows + n_comp
         else:  # "scan": quadratic reference path (kept for benchmarks)
@@ -282,12 +282,53 @@ def _resolve_medoid_update(medoid_update: str, metric: str) -> str:
     it is only exact for triangle-inequality metrics. For the others
     (``sqeuclidean``, ``cosine``) fall back to the quadratic scan, which
     is metric-agnostic — callers keep exact medoid updates either way."""
-    if medoid_update not in ("trimed", "scan"):
+    if medoid_update not in ("trimed", "scan", "pipelined"):
         raise ValueError(
-            f"medoid_update must be 'trimed' or 'scan', got {medoid_update!r}")
-    if medoid_update == "trimed" and metric not in ("l2", "l1"):
+            "medoid_update must be 'trimed', 'pipelined' or 'scan', "
+            f"got {medoid_update!r}")
+    if medoid_update in ("trimed", "pipelined") and metric not in ("l2", "l1"):
         return "scan"
     return medoid_update
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _assign_step(X, m_idx, x_sq, metric):
+    centers = jnp.take(X, m_idx, axis=0)
+    dc = pairwise(centers, X, metric, b_sq=x_sq)              # (K, N)
+    a = jnp.argmin(dc, axis=0).astype(jnp.int32)
+    d_own = jnp.take_along_axis(dc, a[None, :], axis=0)[0]
+    return a, d_own
+
+
+def _kmedoids_pipelined_impl(X, k, seed, n_iter, metric, block,
+                             block_schedule, use_kernels):
+    """Voronoi iteration whose medoid-update step is the
+    survivor-compacted pipelined engine (DESIGN.md §4). The compaction
+    ladder needs host-side orchestration, so the iteration is a Python
+    loop over jitted stage programs rather than one ``lax.scan`` — a few
+    host syncs per iteration against an asymptotically smaller
+    medoid-update step."""
+    from .pipelined import batched_medoids_pipelined
+
+    n = X.shape[0]
+    x_sq = sq_norms(X)
+    m_idx = _maximin_init(X, k, x_sq, seed, metric)
+    n_rows = k - 1                                            # maximin rows
+    a = jnp.zeros(n, jnp.int32)
+    for _ in range(n_iter):
+        a, _ = _assign_step(X, m_idx, x_sq, metric)
+        n_rows += k
+        res = batched_medoids_pipelined(
+            X, a, k, block=block, metric=metric,
+            block_schedule=block_schedule, use_kernels=use_kernels,
+            warm_idx=np.asarray(m_idx))
+        m_new = jnp.asarray(res.medoids, jnp.int32)
+        m_idx = jnp.where(m_new >= 0, m_new, m_idx)
+        n_rows += res.n_computed
+    a, d_own = _assign_step(X, m_idx, x_sq, metric)
+    n_rows += k
+    energy = d_own.sum()
+    return m_idx, a, energy, jnp.asarray(n_rows, jnp.int32)
 
 
 def _engine_round_fn(metric: str, use_kernels: bool):
@@ -310,6 +351,7 @@ def kmedoids_jax(
     medoid_update: str = "trimed",
     block: int = 128,
     use_kernels: bool = False,
+    block_schedule=None,
 ):
     """Batched Voronoi-iteration K-medoids on device. The medoid-update
     step runs the batched multi-cluster trimed engine (DESIGN.md §3): K
@@ -323,13 +365,25 @@ def kmedoids_jax(
     the engine rounds through the Pallas assignment-masked kernels
     (``kernels.ops.fused_masked_round``) instead of the jnp round. Used
     for HuBERT pseudo-labels and MoE router init.
+    ``medoid_update="pipelined"`` selects the survivor-compacted
+    pipelined engine (DESIGN.md §4; host-orchestrated compaction ladder);
+    ``block_schedule`` threads the adaptive warm-up block schedule into
+    whichever engine runs the update.
     Returns (medoid_indices, assignment, energy).
     """
+    from .pipelined import resolve_schedule
+
     medoid_update = _resolve_medoid_update(medoid_update, metric)
     block = int(min(block, X.shape[0]))
+    if medoid_update == "pipelined":
+        m_idx, a, energy, _ = _kmedoids_pipelined_impl(
+            jnp.asarray(X), k, seed, n_iter, metric, block, block_schedule,
+            use_kernels)
+        return m_idx, a, energy
     m_idx, a, energy, _ = _kmedoids_impl(
         X, k, seed, n_iter, metric, medoid_update, block,
-        fused_round_fn=_engine_round_fn(metric, use_kernels))
+        fused_round_fn=_engine_round_fn(metric, use_kernels),
+        warm_blocks=resolve_schedule(block_schedule, block))
     return m_idx, a, energy
 
 
@@ -342,17 +396,25 @@ def kmedoids_batched(
     medoid_update: str = "trimed",
     block: int = 128,
     use_kernels: bool = False,
+    block_schedule=None,
 ) -> KMedoidsJaxResult:
     """Instrumented wrapper around the device K-medoids: same iteration
     as :func:`kmedoids_jax` plus distance-computation accounting, for the
     benchmarks and the data-pipeline callers that report costs."""
+    from .pipelined import resolve_schedule
+
     medoid_update = _resolve_medoid_update(medoid_update, metric)
     X = jnp.asarray(X)
     n = X.shape[0]
     block = int(min(block, n))
-    m_idx, a, energy, n_rows = _kmedoids_impl(
-        X, k, seed, n_iter, metric, medoid_update, block,
-        fused_round_fn=_engine_round_fn(metric, use_kernels))
+    if medoid_update == "pipelined":
+        m_idx, a, energy, n_rows = _kmedoids_pipelined_impl(
+            X, k, seed, n_iter, metric, block, block_schedule, use_kernels)
+    else:
+        m_idx, a, energy, n_rows = _kmedoids_impl(
+            X, k, seed, n_iter, metric, medoid_update, block,
+            fused_round_fn=_engine_round_fn(metric, use_kernels),
+            warm_blocks=resolve_schedule(block_schedule, block))
     n_rows = int(n_rows)
     return KMedoidsJaxResult(
         np.asarray(m_idx), np.asarray(a), float(energy), n_rows,

@@ -40,6 +40,8 @@ class MedoidResult:
     n_computed: int            # number of computed elements (full rows)
     n_rounds: int = 0          # block rounds (block variant only)
     n_distances: int = 0       # scalar distance evaluations
+    n_stages: int = 0          # compaction ladder stages (pipelined only)
+    x_cols_streamed: int = 0   # X columns streamed from HBM (pipelined only)
 
 
 # ---------------------------------------------------------------------------
@@ -148,10 +150,10 @@ def _round_body(X, x_sq, metric, block, policy, distance_fn, fused_round_fn,
 @functools.partial(
     jax.jit,
     static_argnames=("block", "metric", "policy", "distance_fn",
-                     "fused_round_fn"),
+                     "fused_round_fn", "warm"),
 )
 def _trimed_block_jit(X, seed, block, metric, policy, distance_fn,
-                      fused_round_fn):
+                      fused_round_fn, warm=()):
     n = X.shape[0]
     x_sq = sq_norms(X) if metric in ("l2", "sqeuclidean") else jnp.zeros(n)
     key = jax.random.PRNGKey(seed)
@@ -165,6 +167,12 @@ def _trimed_block_jit(X, seed, block, metric, policy, distance_fn,
         jnp.asarray(0, jnp.int32),                # n_rounds
         key,
     )
+
+    # adaptive warm-up (DESIGN.md §4): small early blocks establish a
+    # strong incumbent cheaply before full-width blocks commit
+    for b in warm:
+        state = _round_body(X, x_sq, metric, b, policy, distance_fn,
+                            fused_round_fn, state)
 
     def cond(state):
         l, computed, e_cl = state[0], state[1], state[2]
@@ -187,16 +195,23 @@ def trimed_block(
     policy: str = "lowest_bound",
     distance_fn: Callable | None = None,
     fused_round_fn: Callable | None = None,
+    block_schedule=None,
 ) -> MedoidResult:
     """Block-synchronous exact medoid on device. ``distance_fn`` overrides
     the ``(B, N)`` distance-block computation; ``fused_round_fn`` (see
     ``repro.kernels.ops.fused_round``) replaces the whole round with the
-    Pallas distance-block-free kernels."""
+    Pallas distance-block-free kernels. ``block_schedule="geometric"``
+    prepends a geometric warm-up of small blocks (adaptive schedule,
+    DESIGN.md §4); schedules affect cost, never exactness."""
+    from .pipelined import resolve_schedule
+
     X = jnp.asarray(X)
     n = X.shape[0]
     block = int(min(block, n))
+    warm = resolve_schedule(block_schedule, block)
     m, e, n_comp, n_rounds = _trimed_block_jit(
-        X, seed, block, metric, policy, distance_fn, fused_round_fn
+        X, seed, block, metric, policy, distance_fn, fused_round_fn,
+        warm=warm,
     )
     e_paper = float(e) * n / max(n - 1, 1)
     return MedoidResult(
@@ -208,6 +223,9 @@ def medoid(X, backend: str = "block", **kw) -> MedoidResult:
     """Convenience dispatcher used by the public API and examples."""
     if backend == "block":
         return trimed_block(X, **kw)
+    if backend == "pipelined":
+        from .pipelined import trimed_pipelined
+        return trimed_pipelined(X, **kw)
     if backend == "sequential":
         return trimed_sequential(np.asarray(X), **kw)
     raise ValueError(f"unknown backend {backend!r}")

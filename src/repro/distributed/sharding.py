@@ -1,6 +1,6 @@
 """Sharding rules: param/optimizer/batch/cache PartitionSpecs.
 
-Parallelism layout on the production mesh (DESIGN.md §5):
+Parallelism layout on the production mesh (DESIGN.md §6):
 
 * ``model`` axis — tensor parallel (attention heads, FFN hidden, vocab)
   and expert parallel (MoE expert dim);

@@ -165,6 +165,64 @@ def fused_masked_round(xb, x, l, valid, a_piv, a_x, v_piv, metric="l2",
     return s, l_new
 
 
+@functools.partial(jax.jit, static_argnames=("metric", "tn", "interpret"))
+def pipelined_round(xb_new, xb_prev, x, e_prev, valid_prev, l, metric="l2",
+                    tn=DEFAULT_TN, interpret=None):
+    """One software-pipelined trimed round (DESIGN.md §4): the current
+    block's exact raw row sums *and* the fold of the previous block's
+    (now known) energies into the bound vector, in a single tiled stream
+    of ``X``. ``e_prev`` is on the normalised ``S/N`` scale. Returns
+    ``(e_sums_new, l_new)`` — callers normalise ``e_sums_new`` by N."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = x.shape[0]
+    tn = min(tn, max(LANE, n))
+    b_new = xb_new.shape[0]
+    xb2 = jnp.concatenate(
+        [xb_new.astype(jnp.float32), xb_prev.astype(jnp.float32)], axis=0)
+    xb2_p, x_p, bsq2, xsq, n_real = _prep(xb2, x, tn)
+    n_pad = x_p.shape[0] - n
+    l_p = jnp.pad(l.astype(jnp.float32), (0, n_pad))[None, :]
+    ep = e_prev.astype(jnp.float32)[None, :]
+    vp = valid_prev.astype(jnp.int32)[None, :]
+    e_sums, l_new = _pk.pipelined_kernel(
+        xb2_p, x_p, bsq2, xsq, ep, vp, l_p, n_real=n_real, b_new=b_new,
+        tn=tn, metric=metric, interpret=interpret,
+    )
+    return e_sums, l_new[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "tn", "interpret"))
+def masked_pipelined_round(xb_new, xb_prev, x, a_new, a_prev, a_x, s_prev,
+                           v_prev, valid_prev, l, metric="l2", tn=DEFAULT_TN,
+                           interpret=None):
+    """Multi-cluster pipelined round (DESIGN.md §4): current block's
+    exact in-cluster sums + previous block's size-scaled bound folds, one
+    stream of ``X``. Returns ``(s_sums_new, l_new)``."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = x.shape[0]
+    tn = min(tn, max(LANE, n))
+    b_new = xb_new.shape[0]
+    xb2 = jnp.concatenate(
+        [xb_new.astype(jnp.float32), xb_prev.astype(jnp.float32)], axis=0)
+    xb2_p, x_p, bsq2, xsq, n_real = _prep(xb2, x, tn)
+    n_pad = x_p.shape[0] - n
+    l_p = jnp.pad(l.astype(jnp.float32), (0, n_pad))[None, :]
+    ax_p = jnp.pad(a_x.astype(jnp.int32), (0, n_pad),
+                   constant_values=-1)[None, :]
+    ap2 = jnp.concatenate(
+        [a_new.astype(jnp.int32), a_prev.astype(jnp.int32)])[None, :]
+    sp = s_prev.astype(jnp.float32)[None, :]
+    vszp = v_prev.astype(jnp.float32)[None, :]
+    vp = valid_prev.astype(jnp.int32)[None, :]
+    s_sums, l_new = _pk.masked_pipelined_kernel(
+        xb2_p, x_p, bsq2, xsq, ap2, ax_p, sp, vszp, vp, l_p, n_real=n_real,
+        b_new=b_new, tn=tn, metric=metric, interpret=interpret,
+    )
+    return s_sums, l_new[:n]
+
+
 def make_pallas_distance_fn(metric="l2", tn=DEFAULT_TN, interpret=None):
     """Adapter for ``core.trimed.trimed_block(distance_fn=...)``: computes
     the materialised (B, N) block with the Pallas kernel."""

@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the trimed block round.
 
-Five kernels, all tiled over the element axis ``N`` with MXU-aligned
+Seven kernels, all tiled over the element axis ``N`` with MXU-aligned
 blocks (the pivot block ``B`` rides the sublane axis, ``N`` tiles ride the
 lane axis, and the ``-2 X_B Xᵀ`` term is a ``(B, d) x (d, TN)`` MXU
 matmul per tile):
@@ -9,19 +9,28 @@ matmul per tile):
 * ``energy_kernel``       — row-sums only; the block never leaves VMEM.
 * ``bound_update_kernel`` — recomputes each distance tile and folds it
   straight into ``l(j) <- max(l(j), max_b |E(b) - D(b,j)|)``.
-* ``masked_energy_kernel`` / ``masked_bound_kernel`` — the multi-cluster
-  variants (DESIGN.md §3): an extra int32 assignment operand rides the
-  lane axis next to ``x_sq``; each pivot row only sums / tightens the
-  columns whose cluster id matches the pivot's own, so K concurrent
-  per-cluster searches share one ``(B, N)`` distance pass with the mask
-  applied in VMEM (the masked block never reaches HBM either).
+* ``pipelined_kernel``    — the software-pipelined round (DESIGN.md §4):
+  the *current* pivot block and the *previous* round's block are stacked
+  into one ``(B + Bp, d)`` operand so a single tiled stream of ``X``
+  feeds one MXU matmul per tile, whose top half accumulates the current
+  block's row sums and whose bottom half (energies known since last
+  round) folds straight into the bound vector. One X-stream per round
+  instead of the two that ``energy`` + ``bound_update`` cost.
+* ``masked_energy_kernel`` / ``masked_bound_kernel`` /
+  ``masked_pipelined_kernel`` — the multi-cluster variants (DESIGN.md
+  §3/§4): an extra int32 assignment operand rides the lane axis next to
+  ``x_sq``; each pivot row only sums / tightens the columns whose
+  cluster id matches the pivot's own, so K concurrent per-cluster
+  searches share one ``(B, N)`` distance pass with the mask applied in
+  VMEM (the masked block never reaches HBM either).
 
 ``energy`` + ``bound_update`` together implement a *fused trimed round*
 (DESIGN.md §2): HBM traffic is two streams of ``X`` plus the ``(N,)``
 bound vector, instead of writing and re-reading a ``(B, N)`` block — the
 same recompute-over-materialise trade flash-attention makes. For
 ``N = 1e6, B = 128`` that removes a 512 MB round-trip per round at the
-cost of one extra (MXU-cheap) matmul pass.
+cost of one extra (MXU-cheap) matmul pass. The pipelined kernels halve
+that again to one stream of ``X`` per steady-state round.
 
 VMEM budget per grid step (fp32, B=128, TN=512, d<=1024):
 pivots 512 KB + X tile 2 MB + distance tile 256 KB + accumulators — well
@@ -164,6 +173,72 @@ def bound_update_kernel(xb, x, bsq, xsq, e, valid, l, *, n_real,
 
 
 # ---------------------------------------------------------------------------
+# pipelined round: energies of the CURRENT block + bound folds of the
+# PREVIOUS block, one stream of X (DESIGN.md §4). The two pivot blocks
+# arrive stacked as xb2 = concat([xb_new, xb_prev]) so each X tile feeds
+# a single (B + Bp, d) x (d, TN) MXU matmul.
+# ---------------------------------------------------------------------------
+def _pipelined_body(n_real, b_new, tn, metric, xb_ref, x_ref, bsq_ref,
+                    xsq_ref, ep_ref, vp_ref, l_ref, e_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        e_ref[...] = jnp.zeros_like(e_ref)
+
+    d = _dist_tile(xb_ref[...], x_ref[...], bsq_ref[0], xsq_ref[0], metric)
+    col = i * tn + jax.lax.broadcasted_iota(jnp.int32, (1, d.shape[1]), 1)
+
+    # top half: row-sum accumulation for the current block's energies
+    dn = jnp.where(col < n_real, d[:b_new], 0.0)
+    e_ref[...] += dn.sum(axis=1, keepdims=True).T        # (1, B) accumulator
+
+    # bottom half: fold the previous block's (now known) energies into l
+    dp = d[b_new:]
+    e_prev = ep_ref[0]                                   # (Bp,)
+    valid_prev = vp_ref[0] != 0                          # (Bp,)
+    gap = jnp.abs(e_prev[:, None] - dp)
+    neg_inf = jnp.asarray(-jnp.inf, jnp.float32)
+    gap = jnp.where(valid_prev[:, None], gap, neg_inf)
+    o_ref[...] = jnp.maximum(l_ref[...], gap.max(axis=0)[None, :])
+
+
+def pipelined_kernel(xb2, x, bsq2, xsq, e_prev, valid_prev, l, *, n_real,
+                     b_new, tn=DEFAULT_TN, metric="l2", interpret=False):
+    """xb2 is the stacked ``(B + Bp, d)`` pivot operand (current block
+    first). Returns ``(e_sums_new, l_new)`` — un-normalised row sums for
+    the current block and the bound vector tightened by the previous
+    block."""
+    b2, dpad = xb2.shape
+    b_prev = b2 - b_new
+    npad = x.shape[0]
+    grid = (npad // tn,)
+    e_out, l_out = pl.pallas_call(
+        functools.partial(_pipelined_body, n_real, b_new, tn, metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b2, dpad), lambda i: (0, 0)),
+            pl.BlockSpec((tn, dpad), lambda i: (i, 0)),
+            pl.BlockSpec((1, b2), lambda i: (0, 0)),
+            pl.BlockSpec((1, tn), lambda i: (0, i)),
+            pl.BlockSpec((1, b_prev), lambda i: (0, 0)),
+            pl.BlockSpec((1, b_prev), lambda i: (0, 0)),
+            pl.BlockSpec((1, tn), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b_new), lambda i: (0, 0)),
+            pl.BlockSpec((1, tn), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, b_new), jnp.float32),
+            jax.ShapeDtypeStruct((1, npad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb2, x, bsq2, xsq, e_prev, valid_prev, l)
+    return e_out[0], l_out[0]
+
+
+# ---------------------------------------------------------------------------
 # masked energy: S(b) = sum_j [a(j) == a_piv(b)] D(b, j)   (DESIGN.md §3)
 # ---------------------------------------------------------------------------
 def _masked_energy_body(n_real, tn, metric, xb_ref, x_ref, bsq_ref, xsq_ref,
@@ -245,3 +320,75 @@ def masked_bound_kernel(xb, x, bsq, xsq, s, vsz, valid, a_piv, a_x, l, *,
         interpret=interpret,
     )(xb, x, bsq, xsq, s, vsz, valid, a_piv, a_x, l)
     return out[0]
+
+
+# ---------------------------------------------------------------------------
+# masked pipelined round: in-cluster sums of the CURRENT block + scaled
+# bound folds of the PREVIOUS block, one stream of X (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+def _masked_pipelined_body(n_real, b_new, tn, metric, xb_ref, x_ref, bsq_ref,
+                           xsq_ref, ap_ref, ax_ref, sp_ref, vszp_ref, vp_ref,
+                           l_ref, s_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    d = _dist_tile(xb_ref[...], x_ref[...], bsq_ref[0], xsq_ref[0], metric)
+    col = i * tn + jax.lax.broadcasted_iota(jnp.int32, (1, d.shape[1]), 1)
+    same = ap_ref[0][:, None] == ax_ref[0][None, :]       # (B+Bp, TN)
+
+    # top half: masked row-sum accumulation (current block)
+    dn = jnp.where(jnp.logical_and(same[:b_new], col < n_real),
+                   d[:b_new], 0.0)
+    s_ref[...] += dn.sum(axis=1, keepdims=True).T         # (1, B)
+
+    # bottom half: fold previous block's size-scaled gaps into l
+    dp = d[b_new:]
+    s_prev = sp_ref[0]                                    # (Bp,)
+    vsz_prev = vszp_ref[0]                                # (Bp,)
+    valid_prev = vp_ref[0] != 0                           # (Bp,)
+    gap = jnp.abs(dp * vsz_prev[:, None] - s_prev[:, None])
+    neg_inf = jnp.asarray(-jnp.inf, jnp.float32)
+    ok = jnp.logical_and(same[b_new:], valid_prev[:, None])
+    gap = jnp.where(ok, gap, neg_inf)
+    o_ref[...] = jnp.maximum(l_ref[...], gap.max(axis=0)[None, :])
+
+
+def masked_pipelined_kernel(xb2, x, bsq2, xsq, a_piv2, a_x, s_prev, vsz_prev,
+                            valid_prev, l, *, n_real, b_new, tn=DEFAULT_TN,
+                            metric="l2", interpret=False):
+    """Multi-cluster pipelined round. ``xb2``/``a_piv2`` are the stacked
+    ``(B + Bp,)``-leading current+previous pivot operands; returns
+    ``(s_sums_new, l_new)``."""
+    b2, dpad = xb2.shape
+    b_prev = b2 - b_new
+    npad = x.shape[0]
+    grid = (npad // tn,)
+    s_out, l_out = pl.pallas_call(
+        functools.partial(_masked_pipelined_body, n_real, b_new, tn, metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b2, dpad), lambda i: (0, 0)),
+            pl.BlockSpec((tn, dpad), lambda i: (i, 0)),
+            pl.BlockSpec((1, b2), lambda i: (0, 0)),
+            pl.BlockSpec((1, tn), lambda i: (0, i)),
+            pl.BlockSpec((1, b2), lambda i: (0, 0)),
+            pl.BlockSpec((1, tn), lambda i: (0, i)),
+            pl.BlockSpec((1, b_prev), lambda i: (0, 0)),
+            pl.BlockSpec((1, b_prev), lambda i: (0, 0)),
+            pl.BlockSpec((1, b_prev), lambda i: (0, 0)),
+            pl.BlockSpec((1, tn), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b_new), lambda i: (0, 0)),
+            pl.BlockSpec((1, tn), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, b_new), jnp.float32),
+            jax.ShapeDtypeStruct((1, npad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb2, x, bsq2, xsq, a_piv2, a_x, s_prev, vsz_prev, valid_prev, l)
+    return s_out[0], l_out[0]

@@ -82,3 +82,27 @@ def fused_masked_round_ref(xb, x, l, valid, a_piv, a_x, v_piv,
     l_new = masked_bound_update_ref(xb, x, s, v_piv, valid, a_piv, a_x, l,
                                     metric)
     return s, l_new
+
+
+# ---------------------------------------------------------------------------
+# software-pipelined rounds — DESIGN.md §4
+# ---------------------------------------------------------------------------
+def pipelined_round_ref(xb_new, xb_prev, x, e_prev, valid_prev, l,
+                        metric: str = "l2"):
+    """Reference for the pipelined round: the current block's raw row
+    sums plus the bound vector tightened by the *previous* block (whose
+    energies are known). Returns ``(e_sums_new, l_new)``."""
+    e_sums = energy_ref(xb_new, x, metric)
+    l_new = bound_update_ref(xb_prev, x, e_prev, l, valid_prev, metric)
+    return e_sums, l_new
+
+
+def masked_pipelined_round_ref(xb_new, xb_prev, x, a_new, a_prev, a_x,
+                               s_prev, v_prev, valid_prev, l,
+                               metric: str = "l2"):
+    """Reference for the multi-cluster pipelined round. Returns
+    ``(s_sums_new, l_new)``."""
+    s_sums = masked_energy_ref(xb_new, x, a_new, a_x, metric)
+    l_new = masked_bound_update_ref(xb_prev, x, s_prev, v_prev, valid_prev,
+                                    a_prev, a_x, l, metric)
+    return s_sums, l_new

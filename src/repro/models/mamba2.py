@@ -4,7 +4,7 @@ Mamba2's decay is *scalar per head* (``A_h < 0``), so the pairwise decay
 factor ``exp(a_t - a_s)`` (``a`` = within-chunk cumsum of ``dt * A``) is
 bounded in (0, 1] for ``s <= t`` — the chunked algorithm is numerically
 safe in fp32 with no log-space gymnastics (contrast RWKV6's per-channel
-decay, DESIGN.md §7). Per chunk of length Q:
+decay, DESIGN.md §8). Per chunk of length Q:
 
     intra: y_t += sum_{s<=t} (C_t . B_s) exp(a_t - a_s) dt_s x_s
     inter: y_t += exp(a_t) C_t . h_in

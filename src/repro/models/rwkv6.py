@@ -10,7 +10,7 @@ per-channel data-dependent decay ``w = exp(-exp(.))``, per-channel bonus
 
 Training/prefill run the recurrence as an exact ``lax.scan`` over time
 (per-channel vector decay admits no bounded-exponent chunked
-factorisation, unlike Mamba2's scalar-per-head decay — see DESIGN.md §7
+factorisation, unlike Mamba2's scalar-per-head decay — see DESIGN.md §8
 and mamba2.py, which does use the chunked form). Decode carries
 ``(last_x_tmix, last_x_cmix, S)`` — O(1) per step, which is what makes
 the 500k-context cell admissible.

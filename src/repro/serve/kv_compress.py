@@ -14,7 +14,7 @@ cluster-mean values (mass-weighted), computed in the same pass.
 
 This is the serving option that makes ``long_500k`` admissible for
 full-attention archs (reported separately from the baseline cells —
-DESIGN.md §6)."""
+DESIGN.md §7)."""
 from __future__ import annotations
 
 import functools

@@ -18,6 +18,7 @@ def _run(script: str, devices: int = 8, timeout: int = 480):
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
         import sys; sys.path.insert(0, "src")
+        import repro  # installs the jax<0.5 mesh-API shims (repro.compat)
         {textwrap.indent(textwrap.dedent(script), '        ').strip()}
     """)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,

@@ -84,7 +84,7 @@ def test_full_config_matches_assignment(arch):
 
 
 def test_cell_accounting():
-    """40 cells total: 31 lowered + 9 documented skips (DESIGN.md §6)."""
+    """40 cells total: 31 lowered + 9 documented skips (DESIGN.md §7)."""
     runs, skips = 0, 0
     for arch in ARCHS:
         cfg = get_config(arch)

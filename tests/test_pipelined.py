@@ -1,0 +1,309 @@
+"""Survivor-compacted pipelined engine (DESIGN.md §4): exactness parity
+against the sequential oracle, schedule/compaction behaviour, and the
+one-X-stream-per-round regression."""
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import (
+    batched_medoids,
+    batched_medoids_pipelined,
+    exact_medoid,
+    kmedoids_batched,
+    trimed_block,
+    trimed_pipelined,
+    trimed_sequential,
+    warmup_schedule,
+)
+from repro.core.pipelined import resolve_schedule
+from repro.kernels import ops
+
+
+def _data(n, d, seed=0):
+    return np.random.default_rng(seed).random((n, d))
+
+
+def _energies64(X, metric="l2"):
+    X = np.asarray(X, np.float64)
+    if metric == "l2":
+        d2 = ((X[:, None, :] - X[None, :, :]) ** 2).sum(-1)
+        D = np.sqrt(np.maximum(d2, 0))
+    else:
+        D = np.abs(X[:, None, :] - X[None, :, :]).sum(-1)
+    return D.sum(1) / len(X)
+
+
+# ---------------------------------------------------------------------------
+# exactness
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("block", [1, 7, 32, 128])
+def test_pipelined_exact_any_blocksize(block):
+    X = _data(400, 2, seed=3)
+    ti, _ = exact_medoid(X)
+    r = trimed_pipelined(X, block=block)
+    assert r.index == ti
+    assert r.n_computed <= 400
+
+
+@pytest.mark.parametrize("schedule", [None, "geometric", (4, 9, 17)])
+def test_pipelined_schedules_exact(schedule):
+    X = _data(700, 3, seed=5)
+    ti, _ = exact_medoid(X)
+    r = trimed_pipelined(X, block=64, block_schedule=schedule)
+    assert r.index == ti
+
+
+def test_pipelined_kernel_path_matches_jnp():
+    X = _data(900, 4, seed=7).astype(np.float32)
+    ti, _ = exact_medoid(X)
+    r_jnp = trimed_pipelined(X, block=64)
+    r_ker = trimed_pipelined(X, block=64, use_kernels=True)
+    assert r_jnp.index == r_ker.index == ti
+    np.testing.assert_allclose(r_jnp.energy, r_ker.energy, rtol=1e-5)
+
+
+def test_pipelined_ladder_compacts():
+    """At N >> ladder_min the engine must actually descend the ladder,
+    and every compaction must preserve the exact answer."""
+    X = _data(4000, 2, seed=11)
+    ti, _ = exact_medoid(X)
+    r = trimed_pipelined(X, block=64, ladder_min=128)
+    assert r.index == ti
+    assert r.n_stages >= 2
+    # steady-state HBM model: one full X-stream per round plus the
+    # (geometrically shrinking) fold columns — strictly below the block
+    # engine's two full streams
+    assert r.x_cols_streamed < 2 * r.n_rounds * 4000
+
+
+def test_medoid_dispatcher_backend():
+    X = _data(300, 2, seed=1)
+    from repro.core import medoid
+
+    r = medoid(X, backend="pipelined", block=32)
+    ti, _ = exact_medoid(X)
+    assert r.index == ti
+
+
+def test_pipelined_rejects_non_triangle_metric():
+    with pytest.raises(ValueError):
+        trimed_pipelined(_data(32, 2), metric="sqeuclidean")
+
+
+def test_duplicate_points_terminate_exactly():
+    """All-duplicate and heavily-tied inputs must terminate and agree
+    with the sequential oracle by energy."""
+    rng = np.random.default_rng(0)
+    base = rng.random((7, 3))
+    X = base[rng.integers(0, 7, 500)]          # 500 points, 7 distinct
+    e = _energies64(X)
+    for schedule in (None, "geometric"):
+        r = trimed_pipelined(X, block=16, block_schedule=schedule)
+        assert e[r.index] <= e.min() * (1 + 1e-6) + 1e-9
+    X1 = np.zeros((200, 2))                    # fully degenerate
+    r = trimed_pipelined(X1, block=16)
+    assert r.n_computed >= 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(16, 300),
+    d=st.integers(1, 5),
+    block=st.integers(1, 48),
+    seed=st.integers(0, 10_000),
+    metric=st.sampled_from(["l2", "l1"]),
+    schedule=st.sampled_from([None, "geometric", (3, 11)]),
+    dup=st.booleans(),
+)
+def test_property_pipelined_matches_sequential(n, d, block, seed, metric,
+                                               schedule, dup):
+    """Property: the compacted+pipelined engine returns the true medoid
+    (up to fp32 near-ties, accepted by energy) for arbitrary data, block
+    schedules, metrics, and duplicate-heavy inputs — parity with the
+    sequential oracle."""
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, d))
+    if dup:                                    # force heavy duplication
+        X = X[rng.integers(0, max(2, n // 4), n)]
+    e = _energies64(X, metric)
+    r = trimed_pipelined(X, block=block, metric=metric,
+                         block_schedule=schedule, ladder_min=32)
+    rs = trimed_sequential(X, seed=seed, metric=metric)
+    assert e[r.index] <= e.min() * (1 + 1e-5) + 1e-7
+    assert abs(e[r.index] - e[rs.index]) <= e.min() * 1e-5 + 1e-7
+    assert r.n_computed <= n
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(16, 150), seed=st.integers(0, 1000))
+def test_property_pipelined_kernel_parity(n, seed):
+    """Property: Pallas (interpret) and jnp paths agree on the result."""
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, 3)).astype(np.float32)
+    e = _energies64(X)
+    r = trimed_pipelined(X, block=16, use_kernels=True, ladder_min=32)
+    assert e[r.index] <= e.min() * (1 + 1e-5) + 1e-7
+
+
+# ---------------------------------------------------------------------------
+# batched multi-cluster engine
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_batched_pipelined_matches_batched(use_kernels):
+    rng = np.random.default_rng(2)
+    n, k = 1500, 5
+    X = rng.standard_normal((n, 3)).astype(np.float32)
+    a = rng.integers(0, k, n)
+    ref = batched_medoids(X, a, k, block=64)
+    got = batched_medoids_pipelined(X, a, k, block=64,
+                                    use_kernels=use_kernels,
+                                    ladder_min=128)
+    assert np.array_equal(ref.medoids, got.medoids)
+    np.testing.assert_allclose(ref.sums, got.sums, rtol=1e-5)
+
+
+def test_batched_pipelined_empty_and_oob_clusters():
+    rng = np.random.default_rng(3)
+    n, k = 600, 6
+    X = rng.standard_normal((n, 2)).astype(np.float32)
+    a = rng.integers(0, 4, n)                  # clusters 4, 5 empty
+    a[:5] = -1                                 # out-of-range labels
+    ref = batched_medoids(X, a, k, block=32)
+    got = batched_medoids_pipelined(X, a, k, block=32, ladder_min=64)
+    assert np.array_equal(ref.medoids, got.medoids)
+    assert got.medoids[4] == -1 and got.medoids[5] == -1
+
+
+def test_negative_labels_do_not_wrap_into_cluster_sizes():
+    """Regression: a raw scatter-add wraps label -1 into cluster k-1's
+    size (mode=\"drop\" only drops too-large indices), inflating the
+    size-scaled triangle bound and over-eliminating. Negative labels
+    must be excluded from a NON-empty cluster's size."""
+    rng = np.random.default_rng(7)
+    k = 1
+    X = np.concatenate([
+        rng.standard_normal((1, 3)) * 50,          # far outlier, labeled -1
+        rng.standard_normal((100, 3)),             # cluster 0
+        rng.standard_normal((400, 3)) * 30,        # excluded, labeled -1
+    ]).astype(np.float32)
+    a = np.full(len(X), -1)
+    a[1:101] = 0
+    members = np.flatnonzero(a == 0)
+    D = np.sqrt((((X[members][:, None] - X[members][None]) ** 2)
+                 .sum(-1)).clip(0))
+    true_m = members[np.argmin(D.sum(1))]
+    for engine in (batched_medoids, batched_medoids_pipelined):
+        r = engine(X, a, k, block=8)
+        assert r.medoids[0] == true_m, (engine.__name__, r.medoids, true_m)
+
+
+def test_resolve_schedule_rejects_unknown_string():
+    with pytest.raises(ValueError):
+        resolve_schedule("Geometric", 128)
+
+
+def test_batched_pipelined_warm_idx():
+    rng = np.random.default_rng(4)
+    n, k = 900, 4
+    X = rng.standard_normal((n, 3)).astype(np.float32)
+    a = rng.integers(0, k, n)
+    ref = batched_medoids(X, a, k, block=32)
+    got = batched_medoids_pipelined(X, a, k, block=32,
+                                    warm_idx=ref.medoids, ladder_min=64)
+    assert np.array_equal(ref.medoids, got.medoids)
+
+
+def test_kmedoids_pipelined_update_matches_trimed():
+    rng = np.random.default_rng(5)
+    X = rng.standard_normal((1200, 4)).astype(np.float32)
+    r_tri = kmedoids_batched(X, 6, n_iter=3, medoid_update="trimed")
+    r_pip = kmedoids_batched(X, 6, n_iter=3, medoid_update="pipelined")
+    assert np.array_equal(r_tri.medoids, r_pip.medoids)
+    assert abs(r_tri.energy - r_pip.energy) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# adaptive block schedule
+# ---------------------------------------------------------------------------
+def test_warmup_schedule_shapes():
+    assert warmup_schedule(128) == (8, 16, 32, 64)
+    assert warmup_schedule(8) == ()
+    assert resolve_schedule(None, 128) == ()
+    assert resolve_schedule("geometric", 64) == (8, 16, 32)
+    assert resolve_schedule((4, 64, 200), 128) == (4, 64)
+
+
+def test_block_engine_schedule_exact():
+    X = _data(800, 3, seed=9)
+    ti, _ = exact_medoid(X)
+    r = trimed_block(X, block=64, block_schedule="geometric")
+    assert r.index == ti
+
+
+def test_batched_schedule_exact():
+    rng = np.random.default_rng(6)
+    n, k = 700, 4
+    X = rng.standard_normal((n, 2)).astype(np.float32)
+    a = rng.integers(0, k, n)
+    ref = batched_medoids(X, a, k, block=32)
+    got = batched_medoids(X, a, k, block=32, block_schedule="geometric")
+    assert np.array_equal(ref.medoids, got.medoids)
+
+
+# ---------------------------------------------------------------------------
+# one X-stream per round (the HBM-traffic regression, interpret path)
+# ---------------------------------------------------------------------------
+def test_pipelined_round_streams_x_once(monkeypatch):
+    """Count the Pallas kernel invocations that stream the (padded) full
+    X operand inside one round: the fused block round issues TWO
+    (energy + bound update), the pipelined round exactly ONE. Unique
+    shapes force a fresh trace so the jitted wrappers re-enter the
+    counting kernels on the interpret path."""
+    import jax.numpy as jnp
+    from repro.kernels import pairwise as pk
+
+    n, b, d = 617, 24, 5           # shapes unused elsewhere in the suite
+    rng = np.random.default_rng(17)
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    xb, xbp = X[:b], X[b:2 * b]
+    l = np.zeros(n, np.float32)
+    valid = np.ones(b, bool)
+    calls = []
+
+    def rec(name):
+        orig = getattr(pk, name)
+
+        def wrapped(*args, **kw):
+            if any(getattr(a, "ndim", 0) == 2 and a.shape[0] >= n
+                   for a in args):
+                calls.append(name)
+            return orig(*args, **kw)
+        return wrapped
+
+    for nm in ("pipelined_kernel", "energy_kernel", "bound_update_kernel"):
+        monkeypatch.setattr(pk, nm, rec(nm))
+
+    e, _ = ops.fused_round(jnp.asarray(xb), jnp.asarray(X),
+                           jnp.asarray(l), jnp.asarray(valid))
+    assert calls == ["energy_kernel", "bound_update_kernel"]   # 2 streams
+
+    calls.clear()
+    e_sums, l_new = ops.pipelined_round(
+        jnp.asarray(xb), jnp.asarray(xbp), jnp.asarray(X),
+        jnp.asarray(np.asarray(e)), jnp.asarray(valid), jnp.asarray(l))
+    assert calls == ["pipelined_kernel"]                       # 1 stream
+    assert e_sums.shape == (b,) and l_new.shape == (n,)
+
+
+def test_engine_stream_accounting():
+    """Engine-level HBM model: total X columns streamed must equal one
+    full stream per round plus the compacted fold columns — i.e. the
+    2-streams-per-round cost of the block engine is gone."""
+    n = 3000
+    X = _data(n, 2, seed=19)
+    r = trimed_pipelined(X, block=64, ladder_min=128)
+    assert r.n_stages >= 1
+    fold_cols = r.x_cols_streamed - r.n_rounds * n
+    assert 0 <= fold_cols < r.n_rounds * n
+    # steady state: strictly fewer columns than two full streams/round
+    assert r.x_cols_streamed < 2 * r.n_rounds * n
