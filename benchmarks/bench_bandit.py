@@ -1,0 +1,163 @@
+"""Regret-vs-budget sweep for the bandit medoid subsystem (DESIGN.md §9).
+
+Emits machine-readable ``BENCH_bandit.json`` at the repo root (plus the
+usual CSV under ``results/``). Per N, the exact pipelined engine sets the
+cost yardstick; the bandit engines (UCB race, correlated sequential
+halving) and the budget-capped hybrid (``bandit_medoid(exact="trimed")``)
+are swept over budgets expressed as fractions of the pipelined element
+count, next to the paper's approximate baselines RAND and TOPRANK. All
+costs are *unified computed elements* (``distances.elements_computed``:
+full rows = 1, sampled partial columns fractional), so
+bandit-vs-trimed-vs-TOPRANK numbers are apples-to-apples; regret is
+``(E(found) - E*) / E*`` in float64.
+
+The hybrid's headline cell (tracked across PRs): at ``N = 8192`` the
+budget-capped hybrid must compute ``<= 0.5x`` the elements of
+``trimed_pipelined`` with energy regret ``< 1e-3``.
+
+``mode="smoke"`` (``benchmarks/run.py --smoke``) runs a tiny sweep,
+validating the JSON schema and every engine entrypoint in CI.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from .common import RESULTS_DIR, save_csv, timed
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_bandit.json"
+
+FIELDS = ["engine", "n", "d", "budget_elements", "elements", "regret",
+          "index_match", "certified", "wall_s"]
+
+BUDGET_FRACS = (0.15, 0.3, 0.45)
+
+
+def json_path_for(mode: str | None) -> Path:
+    """Smoke runs must not clobber the committed perf-trajectory file."""
+    if mode == "smoke":
+        return RESULTS_DIR / "BENCH_bandit_smoke.json"
+    return JSON_PATH
+
+
+def _exact_energies64(X):
+    """Float64 energies (S/N), blockwise so N=16384 stays in memory."""
+    X = np.asarray(X, np.float64)
+    n = X.shape[0]
+    sq = np.einsum("nd,nd->n", X, X)
+    out = np.zeros(n)
+    blk = 1024
+    for s in range(0, n, blk):
+        xb = X[s:s + blk]
+        d2 = sq[s:s + blk][:, None] + sq[None, :] - 2.0 * (xb @ X.T)
+        out[s:s + blk] = np.sqrt(np.maximum(d2, 0.0)).sum(axis=1)
+    return out / n
+
+
+def _cell(engine, n, d, budget, elements, regret, match, certified, wall):
+    return {"engine": engine, "n": n, "d": d,
+            "budget_elements": None if budget is None else round(budget, 2),
+            "elements": round(float(elements), 2),
+            "regret": float(regret), "index_match": bool(match),
+            "certified": bool(certified), "wall_s": round(wall, 4)}
+
+
+def run(quick: bool = True, mode: str | None = None):
+    """Returns ``(rows, csv_path)`` like every bench; also writes
+    ``BENCH_bandit.json``."""
+    from repro.bandit import bandit_medoid
+    from repro.core import rand_medoid, toprank, trimed_pipelined
+
+    if mode == "smoke":
+        sizes, d = [256], 3
+    elif quick:
+        sizes, d = [2048, 8192], 3
+    else:
+        sizes, d = [2048, 8192, 16384], 3
+
+    rng = np.random.default_rng(0)
+    records = []
+    for n in sizes:
+        X = rng.random((n, d)).astype(np.float32)
+        e64 = _exact_energies64(X)
+        ti, e_star = int(np.argmin(e64)), float(e64.min())
+
+        def regret_of(idx):
+            return (float(e64[idx]) - e_star) / e_star
+
+        # exact yardstick -------------------------------------------------
+        trimed_pipelined(X)                              # warm the jit
+        p, dt = timed(trimed_pipelined, X)
+        p_elems = float(p.n_computed)
+        records.append(_cell("pipelined", n, d, None, p_elems,
+                             regret_of(p.index), p.index == ti, True, dt))
+
+        # budget sweep: pure bandits + the hybrid -------------------------
+        for frac in BUDGET_FRACS:
+            budget = max(frac * p_elems, 16.0)
+            for name, fn in (
+                ("bandit-ucb", lambda: bandit_medoid(
+                    X, budget=budget, exact=None, engine="ucb", seed=0)),
+                ("bandit-halving", lambda: bandit_medoid(
+                    X, budget=budget, exact=None, engine="halving", seed=0)),
+                ("hybrid", lambda: bandit_medoid(
+                    X, budget=budget, exact="trimed", seed=0)),
+            ):
+                r, dt = timed(fn)
+                records.append(_cell(name, n, d, budget, r.n_computed,
+                                     regret_of(r.index), r.index == ti,
+                                     r.certified, dt))
+
+        # unbudgeted hybrid: the certified anytime path -------------------
+        r, dt = timed(bandit_medoid, X, exact="trimed", seed=0)
+        records.append(_cell("hybrid-certified", n, d, None, r.n_computed,
+                             regret_of(r.index), r.index == ti,
+                             r.certified, dt))
+
+        # the paper's approximate baselines (host-side) -------------------
+        if mode == "smoke" or n <= 8192:
+            r, dt = timed(rand_medoid, X, epsilon=0.1, seed=0)
+            records.append(_cell("RAND", n, d, None, r.n_computed,
+                                 regret_of(r.index), r.index == ti,
+                                 False, dt))
+            r, dt = timed(toprank, X, seed=0)
+            records.append(_cell("TOPRANK", n, d, None, r.n_computed,
+                                 regret_of(r.index), r.index == ti,
+                                 False, dt))
+
+    # the tracked acceptance cell: budget-capped hybrid at the largest N
+    n_head = max(sizes)
+    head = [r for r in records
+            if r["engine"] == "hybrid" and r["n"] == n_head]
+    p_head = next(r for r in records
+                  if r["engine"] == "pipelined" and r["n"] == n_head)
+    headline = {
+        "n": n_head,
+        "best_hybrid_elements": min(r["elements"] for r in head),
+        "pipelined_elements": p_head["elements"],
+        "element_ratio": round(min(r["elements"] for r in head)
+                               / p_head["elements"], 4),
+        "max_hybrid_regret": max(r["regret"] for r in head),
+    }
+
+    payload = {"schema": "bench_bandit/v1", "budget_fracs": list(BUDGET_FRACS),
+               "fields": FIELDS, "headline": headline, "records": records}
+    out_json = json_path_for(mode)
+    out_json.parent.mkdir(exist_ok=True)
+    out_json.write_text(json.dumps(payload, indent=1) + "\n")
+
+    rows = [[rec[f] for f in FIELDS] for rec in records]
+    csv_name = "bandit_regret_smoke" if mode == "smoke" else "bandit_regret"
+    path = save_csv(csv_name, FIELDS, rows)
+    return rows, path
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows, path = run(quick="--full" not in sys.argv,
+                     mode="smoke" if "--smoke" in sys.argv else None)
+    print(f"{len(rows)} rows -> {path} and {JSON_PATH}")

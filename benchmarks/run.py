@@ -18,25 +18,30 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke: tiny trimed sweep (interpret path), "
-                         "validates BENCH_trimed.json schema + imports")
+                    help="CI smoke: tiny trimed + bandit sweeps (interpret "
+                         "path), validates BENCH_trimed.json and "
+                         "BENCH_bandit.json schemas + imports")
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
     quick = not args.full
 
-    from . import (bench_batched, bench_fig3, bench_kernels, bench_sme_init,
-                   bench_table1, bench_table2, bench_trimed,
+    from . import (bench_bandit, bench_batched, bench_fig3, bench_kernels,
+                   bench_sme_init, bench_table1, bench_table2, bench_trimed,
                    roofline_report)
 
     if args.smoke:
-        rows, path = bench_trimed.run(quick=True, mode="smoke")
-        json_path = bench_trimed.json_path_for("smoke")
-        payload = json.loads(json_path.read_text())
-        assert payload["schema"] == "bench_trimed/v1", payload.get("schema")
-        missing = [f for r in payload["records"]
-                   for f in payload["fields"] if f not in r]
-        assert not missing, f"schema drift: missing {missing}"
-        print(f"smoke OK: {len(rows)} rows; json={json_path}; csv={path}")
+        checks = [(bench_trimed, "bench_trimed/v1"),
+                  (bench_bandit, "bench_bandit/v1")]
+        for bench, schema in checks:
+            rows, path = bench.run(quick=True, mode="smoke")
+            json_path = bench.json_path_for("smoke")
+            payload = json.loads(json_path.read_text())
+            assert payload["schema"] == schema, payload.get("schema")
+            missing = [f for r in payload["records"]
+                       for f in payload["fields"] if f not in r]
+            assert not missing, f"schema drift: missing {missing}"
+            print(f"smoke OK [{schema}]: {len(rows)} rows; "
+                  f"json={json_path}; csv={path}")
         return 0
 
     benches = {
@@ -44,6 +49,7 @@ def main(argv=None):
         "table1_datasets": bench_table1.run,
         "table2_trikmeds": bench_table2.run,
         "trimed_engines": bench_trimed.run,
+        "bandit_regret": bench_bandit.run,
         "batched_kmedoids": bench_batched.run,
         "sme_init": bench_sme_init.run,
         "kernels": bench_kernels.run,

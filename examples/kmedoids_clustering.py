@@ -58,3 +58,26 @@ eng = batched_medoids(Xf, dev_t.assignment, K, block_schedule="geometric")
 print(f"standalone engine: computed {eng.n_computed}/{len(X)} rows "
       f"in {eng.n_rounds} rounds; medoids match: "
       f"{np.array_equal(np.sort(eng.medoids), np.sort(dev_t.medoids))}")
+
+# --- anytime / budgeted queries: the bandit subsystem (DESIGN.md §9).
+# Sampled-column racing answers a medoid query on a hard element budget
+# (approximate, with an (index, energy, CI) triple) or hands its survivor
+# ranking to the exact pipelined finisher for a certified answer.
+from repro.bandit import bandit_medoid
+
+q = bandit_medoid(Xf, budget=150.0, exact="trimed", seed=1)
+print(f"\nbandit hybrid (budget 150): index={q.index} "
+      f"energy={q.energy:.3f} ci={q.ci:.3f} certified={q.certified} "
+      f"elements={q.n_computed:.0f}")
+q = bandit_medoid(Xf, exact="trimed", seed=1)
+print(f"bandit hybrid (unbudgeted): certified={q.certified} "
+      f"elements={q.n_computed:.0f}")
+
+# medoid_update="bandit" is the paper's relaxed K-medoids (§5): each
+# cluster's update runs the budgeted race instead of an exact engine —
+# minor quality loss, large cost savings, any metric.
+dev_b = kmedoids_batched(Xf, K, seed=1, n_iter=8, medoid_update="bandit")
+print(f"device bandit update: energy={dev_b.energy:.2f} "
+      f"distances={dev_b.n_distances:,} "
+      f"({dev_s.n_distances / dev_b.n_distances:.0f}x fewer than scan, "
+      f"energy +{100 * (dev_b.energy / dev_t.energy - 1):.2f}%)")

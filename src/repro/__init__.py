@@ -1,8 +1,10 @@
 """repro — multi-pod JAX framework around the trimed exact-medoid algorithm.
 
-Layers: core (the paper), kernels (Pallas), models (arch zoo), distributed
-(sharding), train/serve (drivers), data/optim/checkpoint/runtime
-(substrate), launch (mesh + dry-run), roofline (perf analysis).
+Layers: core (the paper), bandit (anytime / budgeted medoid queries:
+UCB racing + sequential halving + the exact-finisher hybrid), kernels
+(Pallas), models (arch zoo), distributed (sharding), train/serve
+(drivers), data/optim/checkpoint/runtime (substrate), launch (mesh +
+dry-run), roofline (perf analysis).
 """
 from . import compat  # noqa: F401  (installs jax<0.5 mesh-API shims)
 

@@ -1,0 +1,21 @@
+"""repro.bandit — device-side bandit medoid subsystem (DESIGN.md §9).
+
+Sampling-based (approximate, anytime) medoid search racing on the
+sampled-column Pallas kernels, plus the hybrid hand-off to the exact
+trimed finisher:
+
+* :func:`ucb_race` — Meddit-style UCB racing (arXiv:1711.00817);
+* :func:`sequential_halving` — correlated sequential halving
+  (arXiv:1906.04356);
+* :func:`bandit_medoid` — the anytime API:
+  ``bandit_medoid(X, budget=..., delta=..., exact="trimed"|None)``.
+"""
+from .api import BanditMedoidResult, bandit_medoid
+from .halving import HalvingResult, sequential_halving
+from .racing import RaceResult, ucb_race
+
+__all__ = [
+    "BanditMedoidResult", "bandit_medoid",
+    "HalvingResult", "sequential_halving",
+    "RaceResult", "ucb_race",
+]

@@ -1,0 +1,216 @@
+"""`bandit_medoid` — the anytime / budgeted medoid query (DESIGN.md §9).
+
+One entry point over the two sampling engines and the exact finisher:
+
+* ``exact=None`` — pure bandit: return the best arm with an
+  ``(index, energy-estimate, CI)`` triple. Metric-agnostic (sampling
+  needs no triangle inequality).
+* ``exact="trimed"`` — hybrid: the bandit races the field down to a
+  small survivor set, then the survivor-compacted pipelined engine
+  (``core.pipelined``) settles exact energies, warm-seeded with the
+  survivors as its first pivot block. With no budget the finisher runs
+  to completion and the result carries the engine's deterministic
+  triangle-bound certificate (``certified=True``); under a budget it
+  stops at the cap and returns the exact-energy incumbent with
+  ``certified=False`` plus the bandit's residual CI.
+
+Division of labour, which is what keeps the hybrid honest: the bandit's
+*probabilistic* confidence intervals steer the schedule (which rows get
+computed first, via ``warm_idx``) and the incumbent — choices that only
+affect cost — while elimination decisions remain with the *certified*
+triangle bounds. The opt-in ``seed_bounds=True`` crosses that line
+deliberately: the bandit's LCBs are handed to the finisher as initial
+lower bounds, which converts the deterministic certificate into a
+with-probability-``>= 1 - delta`` one (Meddit's own guarantee) in
+exchange for skipping the bound build-up.
+
+Cost is reported in unified computed elements
+(:func:`repro.core.distances.elements_computed`): bandit sampling counts
+fractionally, finisher rows count as 1 each.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.pipelined import trimed_pipelined
+
+from .halving import sequential_halving
+from .racing import ucb_race
+
+# below this N a certified exact run is at most ~EXACT_FALLBACK_N rows;
+# sampling machinery cannot beat it, so fall straight through to trimed
+EXACT_FALLBACK_N = 64
+
+
+@dataclass
+class BanditMedoidResult:
+    """Anytime medoid answer. ``energy`` is on the paper's ``S/(N-1)``
+    scale (see ``distances.py``); it is an exactly computed row whenever
+    ``exact_energy`` is True (always the case on the hybrid path — the
+    incumbent's full row was computed), an estimate otherwise. ``ci`` is
+    the half-width of the bandit estimate for the returned index — 0.0
+    once the index is certified (no residual uncertainty), NaN when the
+    uncertainty is unknown (halving keeps no CIs)."""
+    index: int
+    energy: float
+    ci: float
+    n_computed: float            # unified computed elements
+    n_scalars: int               # scalar distance evaluations
+    n_rounds: int                # bandit rounds + finisher rounds
+    certified: bool              # deterministic triangle certificate
+    exact_energy: bool           # energy is a full computed row
+    survivors: np.ndarray | None = None
+    extras: dict = field(default_factory=dict)
+
+
+def _paper_scale(n: int) -> float:
+    return n / max(n - 1, 1)
+
+
+def bandit_medoid(
+    X,
+    budget: float | None = None,
+    delta: float = 0.01,
+    exact: str | None = "trimed",
+    engine: str = "ucb",
+    metric: str = "l2",
+    seed: int = 0,
+    samples_per_round: int = 64,
+    survivor_target: int | None = None,
+    block: int = 128,
+    bandit_frac: float = 0.5,
+    seed_bounds: bool = False,
+    use_kernels: bool = False,
+    interpret=None,
+) -> BanditMedoidResult:
+    """Anytime / budgeted medoid. ``budget`` is in unified computed
+    elements (``None`` = run to the survivor target, and to the exact
+    certificate when ``exact="trimed"``); ``bandit_frac`` is the share
+    of a finite budget granted to the sampling phase, the remainder
+    funding the exact finisher."""
+    if exact not in ("trimed", None):
+        raise ValueError(f"exact must be 'trimed' or None, got {exact!r}")
+    if engine not in ("ucb", "halving"):
+        raise ValueError(f"engine must be 'ucb' or 'halving', got {engine!r}")
+    if exact == "trimed" and metric not in ("l2", "l1"):
+        raise ValueError(
+            "exact='trimed' needs a triangle-inequality metric ('l2' or "
+            f"'l1'); got {metric!r} — use exact=None for the pure bandit")
+    if seed_bounds and engine != "ucb":
+        raise ValueError(
+            "seed_bounds=True requires engine='ucb' — halving keeps no "
+            "confidence bounds to seed the finisher with")
+    X = np.asarray(X)
+    n = X.shape[0]
+    block = int(min(block, n))
+    target = int(survivor_target if survivor_target is not None
+                 else (block if exact == "trimed" else 1))
+
+    # tiny inputs: the certified engine is already cheaper than sampling
+    if n <= EXACT_FALLBACK_N or (budget is not None and budget >= n):
+        if metric in ("l2", "l1"):
+            r = trimed_pipelined(X, block=block, metric=metric,
+                                 use_kernels=use_kernels,
+                                 interpret=interpret)
+            return BanditMedoidResult(
+                r.index, r.energy, 0.0, float(r.n_computed),
+                r.n_distances, r.n_rounds, certified=True,
+                exact_energy=True, extras={"fallback": "trimed_pipelined"})
+        # non-triangle metrics: brute force the tiny case
+        from repro.core.distances import exact_energies
+        e = np.asarray(exact_energies(X, metric))
+        i = int(np.argmin(e))
+        return BanditMedoidResult(
+            i, float(e[i]) * _paper_scale(n), 0.0, float(n), n * n, 1,
+            certified=True, exact_energy=True, extras={"fallback": "scan"})
+
+    if budget is not None:
+        # pure bandit: the whole budget is the sampling budget; hybrid:
+        # the finisher gets the complementary share
+        bandit_budget = (float(budget) * bandit_frac if exact == "trimed"
+                         else float(budget))
+    elif exact == "trimed":
+        # unbudgeted hybrid: the bandit only has to *order* the field so
+        # the finisher's first block lands on the contenders — spending
+        # more than a sliver of the finisher's expected cost cannot pay
+        # for itself. O(sqrt(N)) elements is that sliver.
+        bandit_budget = max(32.0, 2.0 * float(np.sqrt(n)))
+    else:
+        bandit_budget = None
+    if engine == "ucb":
+        race = ucb_race(
+            X, budget=bandit_budget, delta=delta, metric=metric, seed=seed,
+            samples_per_round=samples_per_round, target=target,
+            use_kernels=use_kernels, interpret=interpret)
+        lcb_full = race.lcb_full
+        t = race.t
+    else:
+        if bandit_budget is None:
+            # halving is a fixed-budget method; default to the regime
+            # where it provably succeeds with high probability
+            bandit_budget = max(4.0 * np.log2(max(n, 2)) ** 2, 16.0)
+        race = sequential_halving(
+            X, budget=bandit_budget, metric=metric, seed=seed,
+            target=target, use_kernels=use_kernels, interpret=interpret)
+        lcb_full = None                       # halving keeps no CIs
+        t = race.t
+    survivors = race.survivors
+    scale = _paper_scale(n)
+
+    if exact is None:
+        ci = float(race.cis[0]) if engine == "ucb" else float("nan")
+        return BanditMedoidResult(
+            race.index, race.mean * scale, ci * scale,
+            race.n_computed, race.n_scalars, race.n_rounds,
+            certified=False, exact_energy=False, survivors=survivors,
+            extras={"engine": engine, "t": t})
+
+    # ---- exact finisher: warm-seeded survivor-compacted trimed --------
+    # Warm-block width is regime-dependent (measured, EXPERIMENTS.md):
+    # unbudgeted, a few forced pivots set the incumbent and the spread-out
+    # lowest-bound selection does the eliminating (a wide block of
+    # clustered contenders tightens bounds redundantly); budget-capped,
+    # certification won't complete anyway, so every budgeted row should
+    # go to the bandit's best candidates.
+    warm_w = block if budget is not None else min(16, block)
+    finisher_budget = None
+    if budget is not None:
+        finisher_budget = max(int(budget - race.n_computed), block)
+    l_init = None
+    if seed_bounds and lcb_full is not None:
+        l_init = lcb_full                      # probabilistic certificate
+    bounds_seeded = l_init is not None         # halving has no LCBs to seed
+    fin = trimed_pipelined(
+        X, block=block, metric=metric, use_kernels=use_kernels,
+        interpret=interpret, warm_idx=np.asarray(survivors[:warm_w]),
+        l_init=l_init, max_computed=finisher_budget)
+
+    if fin.index < 0:                          # budget below one block
+        ci = (float(race.cis[0]) if engine == "ucb" else float("nan"))
+        return BanditMedoidResult(
+            race.index, race.mean * scale, ci * scale,
+            race.n_computed, race.n_scalars, race.n_rounds,
+            certified=False, exact_energy=False, survivors=survivors,
+            extras={"engine": engine, "t": t})
+
+    total_elems = race.n_computed + float(fin.n_computed)
+    total_scalars = race.n_scalars + fin.n_distances
+    certified = bool(fin.certified) and not bounds_seeded
+    if certified:
+        ci = 0.0        # deterministic certificate: no residual uncertainty
+    else:
+        # budget-capped, or seeded-bound (1-delta) elimination: residual
+        # uncertainty is the bandit's half-width for its best arm
+        # (unknown — NaN — when halving ran: it keeps no CIs)
+        ci = (float(race.cis[0]) if engine == "ucb"
+              else float("nan")) * scale
+    return BanditMedoidResult(
+        fin.index, fin.energy, ci, total_elems, total_scalars,
+        race.n_rounds + fin.n_rounds,
+        certified=certified, exact_energy=True, survivors=survivors,
+        extras={"engine": engine, "t": t,
+                "finisher_rows": int(fin.n_computed),
+                "finisher_certified": bool(fin.certified),
+                "seed_bounds": bounds_seeded})

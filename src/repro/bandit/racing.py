@@ -1,0 +1,253 @@
+"""UCB racing: Meddit-style best-arm identification for the medoid.
+
+Every element is an arm; pulling arm ``i`` means evaluating
+``d(x_i, x_J)`` for a uniformly sampled reference column ``J`` — an
+unbiased estimate of the internal energy ``E(i) = S(i)/N`` (sampling is
+uniform *including self*, matching the sum-including-self convention in
+``distances.py``). Per round, every surviving arm receives the same
+``S`` freshly sampled reference columns (one shared gather, one
+matmul-shaped ``(M, S)`` distance block — the sampled-column kernel of
+``kernels/pairwise.py``), running first/second moments are updated, and
+arms whose lower confidence bound exceeds the best arm's upper bound are
+eliminated, all vectorised.
+
+Confidence intervals follow Meddit's (arXiv:1711.00817) *practical*
+construction — sub-Gaussian with the empirical per-arm variance:
+
+    ci(i) = sqrt(2 v_i log(2 n / delta) / t)
+
+with ``v_i`` the arm's unbiased empirical variance and the union bound
+spread over the ``n`` arms. (Distances are bounded, hence sub-Gaussian;
+Meddit's experiments drop the Maurer–Pontil range-correction term
+exactly like this because it otherwise dominates the width at practical
+``t`` — with it, elimination is too weak to beat the exact engines.
+The guarantee is correspondingly empirical-Bernstein-flavoured rather
+than worst-case.) Each arm races with the same pull count ``t`` (every
+alive arm is sampled every round), so ``t`` is a scalar.
+
+Like the pipelined engine (DESIGN.md §4), the survivor buffer lives on a
+power-of-two compaction ladder: a jitted stage races at a fixed buffer
+width until the live count falls below a quarter of it, then the host
+re-compacts onto the next rung. Cost is counted in unified *computed
+elements* (``distances.elements_computed``): ``M * S / N`` per
+round — the *full resident buffer width* (padding and
+already-dead lanes included — the device computes them), so the bandit's
+numbers are conservative against the exact engines'.
+
+Terminates when one arm remains, the survivor target is reached, the
+element budget is spent, or ``t`` reaches ``t_cap`` (default ``N`` —
+beyond that a full exact row would have been cheaper per arm; duplicate
+arms are statistically indistinguishable, so a cap is required for
+termination).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import (elements_computed, pairwise,
+                                  pow2_at_least)
+from repro.kernels import ops as _ops
+
+RACE_LADDER_MIN = 128   # survivor buffers never shrink below this size
+
+
+@dataclass
+class RaceResult:
+    """Outcome of a UCB race (estimates on the internal ``E=S/N`` scale;
+    see ``distances.py`` for both conventions)."""
+    index: int                  # best arm by running mean
+    mean: float                 # its energy estimate
+    ci: float                   # its confidence half-width
+    survivors: np.ndarray       # alive arms, best mean first
+    means: np.ndarray           # their estimates
+    cis: np.ndarray             # their half-widths
+    lcb_full: np.ndarray        # (N,) last-known LCB per element, >= 0
+    n_computed: float           # unified computed elements
+    n_scalars: int              # scalar distance evaluations
+    n_rounds: int
+    t: int                      # samples per surviving arm
+    extras: dict = field(default_factory=dict)
+
+
+def _ci_of(sums, sqs, t, n_arms, delta):
+    tf = jnp.maximum(t.astype(jnp.float32), 1.0)
+    mean = sums / tf
+    var = jnp.maximum(
+        (sqs - tf * mean * mean) / jnp.maximum(tf - 1.0, 1.0), 0.0)
+    log_term = jnp.log(2.0 * n_arms / delta)
+    ci = jnp.sqrt(2.0 * var * log_term / tf)
+    return mean, ci
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("s", "metric", "use_kernels", "interpret", "is_floor"),
+)
+def _race_stage(X, n_real, arm_idx, alive, sums, sqs, t, dmax, n_elems,
+                key, budget_elems, target, t_cap, delta, n_arms0,
+                s, metric, use_kernels, interpret, is_floor):
+    """Race at a fixed (static) buffer width until the ladder trigger,
+    the survivor target, the budget, or the pull cap fires. ``X`` may be
+    row-padded; ``n_real`` bounds the sampling domain."""
+    n = X.shape[0]
+    m = arm_idx.shape[0]
+    Xa = jnp.take(X, arm_idx, axis=0)             # stage-resident arms
+
+    def cond(state):
+        alive, t, n_elems = state[1], state[4], state[6]
+        live = alive.sum()
+        go = jnp.logical_and(live > 1, live > target)
+        go = jnp.logical_and(go, n_elems < budget_elems)
+        go = jnp.logical_and(go, t < t_cap)
+        if is_floor:
+            return go
+        return jnp.logical_and(go, 4 * live > m)
+
+    def body(state):
+        (arm_idx, alive, sums, sqs, t, dmax, n_elems, n_rounds, key) = state
+        key, sub = jax.random.split(key)
+        samp = jax.random.randint(sub, (s,), 0, n_real)
+        xs = jnp.take(X, samp, axis=0)
+        if use_kernels:
+            dsum, dsq, dmx = _ops.sample_stats(Xa, xs, metric=metric,
+                                               interpret=interpret)
+        else:
+            d = pairwise(Xa, xs, metric)          # (M, S), VMEM-sized
+            dsum = d.sum(axis=1)
+            dsq = (d * d).sum(axis=1)
+            dmx = d.max(axis=1)
+        sums = sums + dsum
+        sqs = sqs + dsq
+        t = t + s
+        dmax = jnp.maximum(dmax, jnp.where(alive, dmx, 0.0).max())
+        # conservative accounting: the kernel computes the whole (M, S)
+        # buffer block, dead/padded lanes included — charge all of it
+        n_elems = n_elems + m * (s / n_real)
+
+        mean, ci = _ci_of(sums, sqs, t, n_arms0, delta)
+        mean_a = jnp.where(alive, mean, jnp.inf)
+        best_ucb = (mean_a + jnp.where(alive, ci, 0.0)).min()
+        # keep the best-mean arm unconditionally (ties / fp guards)
+        best_arm = jnp.argmin(mean_a)
+        kill = (mean - ci) > best_ucb
+        kill = kill.at[best_arm].set(False)
+        alive = jnp.logical_and(alive, ~kill)
+        return (arm_idx, alive, sums, sqs, t, dmax, n_elems,
+                n_rounds + 1, key)
+
+    state = (arm_idx, alive, sums, sqs, t, dmax, n_elems,
+             jnp.asarray(0, jnp.int32), key)
+    state = jax.lax.while_loop(cond, body, state)
+    (arm_idx, alive, sums, sqs, t, dmax, n_elems, n_rounds, key) = state
+    mean, ci = _ci_of(sums, sqs, t, n_arms0, delta)
+    return (arm_idx, alive, sums, sqs, t, dmax, n_elems, n_rounds, key,
+            mean, ci)
+
+
+def ucb_race(
+    X,
+    budget: float | None = None,
+    delta: float = 0.01,
+    metric: str = "l2",
+    seed: int = 0,
+    samples_per_round: int = 64,
+    target: int = 1,
+    t_cap: int | None = None,
+    ladder_min: int = RACE_LADDER_MIN,
+    use_kernels: bool = False,
+    interpret=None,
+) -> RaceResult:
+    """Race all ``N`` arms down to ``target`` survivors (or until the
+    ``budget`` in computed elements / the pull cap is exhausted). The
+    sampled-column kernel covers the triangle/squared metrics; for the
+    others the jnp path runs instead (same estimates)."""
+    if metric not in ("l2", "sqeuclidean", "l1"):
+        use_kernels = False                   # kernel has no cosine tile
+    X = jnp.asarray(X)
+    n = X.shape[0]
+    n_pad = pow2_at_least(n) - n
+    Xp = jnp.pad(X, ((0, n_pad), (0, 0))) if n_pad else X
+    s = int(min(samples_per_round, n))
+    t_cap = int(n if t_cap is None else t_cap)
+    budget_elems = np.float32(np.inf) if budget is None else float(budget)
+    key = jax.random.PRNGKey(seed)
+
+    m = Xp.shape[0]
+    arm_idx = np.arange(m, dtype=np.int32)
+    alive = arm_idx < n
+    sums = np.zeros(m, np.float32)
+    sqs = np.zeros(m, np.float32)
+    t = jnp.asarray(0, jnp.int32)
+    dmax = jnp.asarray(0.0, jnp.float32)
+    n_elems = jnp.asarray(0.0, jnp.float32)
+    lcb_full = np.zeros(n, np.float32)
+    n_rounds = 0
+    floor = max(int(ladder_min), 2 * max(int(target), 1))
+
+    while True:
+        out = _race_stage(
+            Xp, n, jnp.asarray(arm_idx), jnp.asarray(alive),
+            jnp.asarray(sums), jnp.asarray(sqs), t, dmax, n_elems, key,
+            jnp.asarray(budget_elems, jnp.float32),
+            jnp.asarray(int(target), jnp.int32),
+            jnp.asarray(t_cap, jnp.int32),
+            jnp.asarray(float(delta), jnp.float32),
+            jnp.asarray(float(n), jnp.float32),
+            s, metric, use_kernels, interpret,
+            is_floor=len(arm_idx) <= floor)
+        (arm_idx_d, alive_d, sums_d, sqs_d, t, dmax, n_elems, r_d, key,
+         mean_d, ci_d) = out
+        n_rounds += int(r_d)
+        arm_idx = np.asarray(arm_idx_d)
+        alive = np.asarray(alive_d)
+        sums = np.asarray(sums_d)
+        sqs = np.asarray(sqs_d)
+        mean = np.asarray(mean_d)
+        ci = np.asarray(ci_d)
+        # record last-known LCBs for every arm still in the buffer (the
+        # bandit hand-off's probabilistic bound seed, DESIGN.md §9)
+        in_buf = arm_idx < n
+        if int(t) > 0:
+            lcb_full[arm_idx[in_buf]] = np.maximum(
+                mean[in_buf] - ci[in_buf], 0.0)
+        live = int(alive.sum())
+        spent = float(n_elems)
+        done = (live <= max(1, int(target)) or spent >= budget_elems
+                or int(t) >= t_cap)
+        next_m = max(pow2_at_least(max(live, 1)), floor)
+        if done or next_m >= len(arm_idx):
+            break
+        keep = np.flatnonzero(alive)              # host-side compaction
+        pad = next_m - len(keep)
+        arm_idx = np.concatenate(
+            [arm_idx[keep], np.full(pad, n, np.int32)]).astype(np.int32)
+        alive = np.arange(next_m) < len(keep)
+        sums = np.concatenate([sums[keep], np.zeros(pad, np.float32)])
+        sqs = np.concatenate([sqs[keep], np.zeros(pad, np.float32)])
+
+    order = np.argsort(np.where(alive, mean, np.inf), kind="stable")
+    order = order[: live if live else 1]
+    surv = arm_idx[order].astype(np.int64)
+    means_s = mean[order].astype(np.float64)
+    cis_s = ci[order].astype(np.float64)
+    n_elems_f = float(n_elems)
+    return RaceResult(
+        index=int(surv[0]),
+        mean=float(means_s[0]),
+        ci=float(cis_s[0]),
+        survivors=surv,
+        means=means_s,
+        cis=cis_s,
+        lcb_full=lcb_full,
+        n_computed=elements_computed(n_elems_f * n, n),
+        n_scalars=int(round(n_elems_f * n)),
+        n_rounds=n_rounds,
+        t=int(t),
+        extras={"dmax": float(dmax)},
+    )

@@ -1,6 +1,7 @@
 """repro.core — the paper's contribution: trimed / trikmeds and baselines."""
 from .distances import (
     VectorOracle,
+    elements_computed,
     exact_energies,
     exact_medoid,
     pairwise,
@@ -50,6 +51,7 @@ __all__ = [
     "rand_medoid",
     "toprank",
     "toprank2",
+    "elements_computed",
     "exact_energies",
     "exact_medoid",
     "pairwise",

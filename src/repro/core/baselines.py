@@ -1,7 +1,10 @@
 """Baselines the paper compares against: RAND, TOPRANK, TOPRANK2, KMEDS.
 
-All host-side (numpy) and instrumented with the same cost unit the paper
-reports — *computed elements* (full distance rows). TOPRANK/TOPRANK2 follow
+All host-side (numpy) and instrumented with the unified cost unit the
+paper reports — *computed elements* (full distance rows; partial work
+counts fractionally via :func:`repro.core.distances.elements_computed`,
+so these numbers sit on the same axis as the device engines' and the
+bandit subsystem's). TOPRANK/TOPRANK2 follow
 the pseudocode in SM-C (Alg. 3-5), including the parameter choices the
 paper uses in its experiments: ``q = 1`` anchor-count constant and
 ``alpha' = 1`` for the threshold, ``l0 = sqrt(N)`` / increment ``log N``
@@ -20,7 +23,7 @@ from .distances import VectorOracle
 class BaselineResult:
     index: int
     energy: float
-    n_computed: int
+    n_computed: float            # unified computed elements (distances.py)
     extras: dict = field(default_factory=dict)
 
 
@@ -54,7 +57,7 @@ def rand_medoid(
     n_anchors = int(np.ceil(np.log(oracle.n) / epsilon**2))
     e_hat, anchors, _ = rand_energies(oracle, n_anchors, rng)
     idx = int(np.argmin(e_hat))
-    return BaselineResult(idx, float(e_hat[idx]), oracle.rows_computed)
+    return BaselineResult(idx, float(e_hat[idx]), oracle.elements)
 
 
 # ---------------------------------------------------------------------------
@@ -92,7 +95,7 @@ def toprank(
     return BaselineResult(
         best_i,
         best_e,
-        oracle.rows_computed,
+        oracle.elements,
         {"n_anchors": n_anchors, "n_candidates": len(candidates), "tau": tau},
     )
 
@@ -156,7 +159,7 @@ def toprank2(
     return BaselineResult(
         best_i,
         best_e,
-        oracle.rows_computed,
+        oracle.elements,
         {"n_anchors": len(anchors), "n_candidates": len(cand)},
     )
 

@@ -12,14 +12,25 @@ Two families:
 * **Batched jnp functions** — matmul-shaped pairwise distances used by the
   TPU block algorithm and by the Pallas kernels' reference path.
 
-Energies follow the *sum-including-self* normalisation ``E(i) = S(i)/N``
-with ``S(i) = sum_j dist(i, j)`` (``dist(i,i) = 0``). Under this
-normalisation the triangle-inequality bound used by trimed is exactly
+**Energy normalisation (the single authoritative statement — every other
+module cross-references here).** Internally, energies follow the
+*sum-including-self* convention ``E(i) = S(i)/N`` with
+``S(i) = sum_j dist(i, j)`` (``dist(i,i) = 0``). Under this convention the
+triangle-inequality bound used by trimed is exactly
 ``E(j) >= |E(i) - dist(i, j)|`` (the paper's Eq. 4/5 argument goes through
 without an ``N/(N-1)`` correction term). The argmin over elements is
-identical to the paper's ``1/(N-1)`` convention; reported energies are
-rescaled by ``N/(N-1)`` at the API boundary where the paper's numbers are
-quoted.
+identical under either convention; *reported* energies (``.energy``
+fields on result dataclasses) are rescaled by ``N/(N-1)`` to the paper's
+``E = S/(N-1)`` convention at the API boundary, and nowhere else.
+
+**Cost accounting (the single shared definition).** All engines,
+baselines and benchmarks report cost in *computed elements*: one element
+is one full ``(N,)`` distance row, and partial rows/columns count
+fractionally — :func:`elements_computed` converts a scalar-distance count
+into this unit. The bandit engines (``repro.bandit``) compute sampled
+partial columns, the host oracles mix full rows with ``subrow``/``pair``
+calls, and the device engines compute full rows; dividing every
+scalar-distance total by ``N`` puts them all on one axis.
 """
 from __future__ import annotations
 
@@ -29,6 +40,25 @@ import jax
 import jax.numpy as jnp
 
 _METRICS = ("l2", "sqeuclidean", "l1", "cosine")
+
+
+def pow2_at_least(x: int) -> int:
+    """Smallest power of two >= ``x`` — the shared rung function for the
+    survivor/arm compaction ladders (pipelined engine, bandit racing),
+    keeping every buffer on one family of compiled shapes."""
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def elements_computed(n_scalar_distances, n: int) -> float:
+    """Unified 'computed elements' cost: scalar distance evaluations
+    expressed in full-row units (one element = one full ``(N,)`` row;
+    partial rows and sampled columns count fractionally). This is the
+    one definition shared by the host oracles, the device engines, the
+    bandit subsystem and the benchmarks — see the module docstring."""
+    return float(n_scalar_distances) / max(int(n), 1)
 
 
 # ---------------------------------------------------------------------------
@@ -50,6 +80,12 @@ class VectorOracle:
             self._Xn = self.X / np.maximum(norms, 1e-30)
         elif metric in ("l2", "sqeuclidean"):
             self._sq = np.einsum("nd,nd->n", self.X, self.X)
+
+    @property
+    def elements(self) -> float:
+        """Total cost in unified 'computed elements' (fractional rows for
+        ``subrow``/``pair`` calls — see :func:`elements_computed`)."""
+        return elements_computed(self.scalar_distances, self.n)
 
     def row(self, i: int) -> np.ndarray:
         """All distances from element ``i`` (a 'computed element')."""

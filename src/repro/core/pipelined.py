@@ -57,7 +57,7 @@ import jax.numpy as jnp
 from repro.kernels import ops as _ops
 
 from .batched import BatchedMedoidResult
-from .distances import pairwise, sq_norms
+from .distances import pairwise, pow2_at_least, sq_norms
 from .trimed import MedoidResult
 
 LADDER_MIN = 256     # survivor buffers never shrink below this size
@@ -94,13 +94,6 @@ def resolve_schedule(block_schedule, block: int) -> tuple:
     return tuple(int(b) for b in block_schedule if 0 < int(b) < block)
 
 
-def _pow2_at_least(x: int) -> int:
-    p = 1
-    while p < x:
-        p *= 2
-    return p
-
-
 def _masked_colmax(gap, mask_rows):
     """Row-masked column max that is safe for zero-row operands."""
     gap = jnp.where(mask_rows[:, None], gap, NEG_INF)
@@ -118,23 +111,36 @@ def _incumbent(e_blk, idx, e_cl, m_cl):
     return e_cl, m_cl
 
 
-def _pipe_round0(X, x_sq, n, metric, use_kernels, interpret, state, b):
+def _budget_cap(valid, n_comp, budget):
+    """Zero out the trailing valid pivots that would push the computed-row
+    count past ``budget`` (top_k order: the most promising survive)."""
+    rank = jnp.cumsum(valid.astype(jnp.int32))
+    return jnp.logical_and(valid, n_comp + rank <= budget)
+
+
+def _pipe_round0(X, x_sq, n, metric, use_kernels, interpret, budget, state,
+                 b, forced_idx=None, forced_valid=None):
     """One full-domain pipelined round at (static) block width ``b``.
 
     Kernel path: a single fused stream of ``X`` computes this block's
     energies and folds the *previous* block's bounds (select-then-fold —
     bounds lag one round). jnp path: the previous block's distance rows
     ride the loop carry, so the fold is elementwise and happens *before*
-    selection (no lag)."""
+    selection (no lag). ``forced_idx`` overrides candidate selection (the
+    warm-seed round used by the bandit hybrid's finisher)."""
     (l, alive, e_cl, m_cl, pidx, pe, pv, dprev, n_comp, n_rounds) = state
 
     if not use_kernels:
         # fold previous block from the carried rows, then select
         l = jnp.maximum(l, _masked_colmax(jnp.abs(pe[:, None] - dprev), pv))
 
-    score = jnp.where(jnp.logical_and(alive, l < e_cl), -l, NEG_INF)
-    top, idx = jax.lax.top_k(score, b)
-    valid = top > NEG_INF
+    if forced_idx is None:
+        score = jnp.where(jnp.logical_and(alive, l < e_cl), -l, NEG_INF)
+        top, idx = jax.lax.top_k(score, b)
+        valid = top > NEG_INF
+    else:
+        idx, valid = forced_idx, forced_valid
+    valid = _budget_cap(valid, n_comp, budget)
     xb = jnp.take(X, idx, axis=0)
 
     if use_kernels:
@@ -177,17 +183,21 @@ def _pad_prev(state, block, has_carry):
 @functools.partial(
     jax.jit,
     static_argnames=("block", "warm", "metric", "use_kernels", "interpret",
-                     "can_compact"),
+                     "can_compact", "has_warm_idx"),
 )
-def _stage0(X, block, warm, metric, use_kernels, interpret, can_compact):
+def _stage0(X, l0, warm_arr, budget, block, warm, metric, use_kernels,
+            interpret, can_compact, has_warm_idx):
     """Full-domain stage: warm-up prologue + steady rounds until either
-    the live count drops below N/2 (compaction trigger) or no survivor
-    remains. Returns the final state plus the live count."""
+    the live count drops below N/2 (compaction trigger), the computed-row
+    budget is spent, or no survivor remains. ``l0`` seeds the bound
+    vector (zeros for the certified path; the bandit hand-off may seed
+    probabilistic lower bounds); ``warm_arr`` forces the first pivot
+    block. Returns the final state plus the live count."""
     n = X.shape[0]
     x_sq = (sq_norms(X) if metric in ("l2", "sqeuclidean")
             else jnp.zeros(n, X.dtype))
     state = (
-        jnp.zeros(n, X.dtype),                    # l
+        l0.astype(X.dtype),                       # l
         jnp.ones(n, bool),                        # alive (= not computed)
         jnp.asarray(jnp.inf, X.dtype),            # e_cl
         jnp.asarray(-1, jnp.int32),               # m_cl
@@ -199,7 +209,11 @@ def _stage0(X, block, warm, metric, use_kernels, interpret, can_compact):
         jnp.asarray(0, jnp.int32),                # n_rounds
     )
     round_fn = functools.partial(_pipe_round0, X, x_sq, n, metric,
-                                 use_kernels, interpret)
+                                 use_kernels, interpret, budget)
+    if has_warm_idx:
+        bw = warm_arr.shape[0]
+        state = round_fn(state, bw, forced_idx=warm_arr,
+                         forced_valid=jnp.ones(bw, bool))
     for b in warm:                                # unrolled warm-up
         state = round_fn(state, b)
     state = _pad_prev(state, block, has_carry=not use_kernels)
@@ -210,9 +224,10 @@ def _stage0(X, block, warm, metric, use_kernels, interpret, can_compact):
 
     def cond(state):
         live = live_of(state)
+        go = jnp.logical_and(live > 0, state[8] < budget)
         if can_compact:
-            return jnp.logical_and(live > 0, 2 * live > n)
-        return live > 0
+            return jnp.logical_and(go, 2 * live > n)
+        return go
 
     state = jax.lax.while_loop(cond, lambda s: round_fn(s, block), state)
     return state, live_of(state)
@@ -232,7 +247,7 @@ def _compact(X, surv_idx, l_s, alive_s, e_cl, m_out):
 
 
 def _stage_round(X, Xs, surv_idx, x_sq, n, metric, use_kernels,
-                 interpret, block, state):
+                 interpret, budget, block, state):
     """One compacted-stage round: fold the previous block's bounds over
     the ``M`` survivor columns, then stream ``X`` once for the new
     block's exact energies."""
@@ -253,7 +268,7 @@ def _stage_round(X, Xs, surv_idx, x_sq, n, metric, use_kernels,
     # 2. candidate top_k over M survivors
     score = jnp.where(jnp.logical_and(alive_s, l_s < e_cl), -l_s, NEG_INF)
     top, pos = jax.lax.top_k(score, block)
-    valid = top > NEG_INF
+    valid = _budget_cap(top > NEG_INF, n_comp, budget)
     idx = jnp.take(surv_idx, pos)
     xb = jnp.take(X, idx, axis=0)
 
@@ -282,8 +297,8 @@ def _stage_round(X, Xs, surv_idx, x_sq, n, metric, use_kernels,
                      "is_floor"),
 )
 def _stage(X, surv_idx, l_s, alive_s, e_cl, m_cl, pidx, pe, pv,
-           n_comp, n_rounds, fold_cols, m_out, block, metric, use_kernels,
-           interpret, is_floor):
+           n_comp, n_rounds, fold_cols, budget, m_out, block, metric,
+           use_kernels, interpret, is_floor):
     """Compact the live survivors into an ``m_out``-sized buffer, then run
     rounds until the next ladder trigger (or termination)."""
     n = X.shape[0]
@@ -309,12 +324,13 @@ def _stage(X, surv_idx, l_s, alive_s, e_cl, m_cl, pidx, pe, pv,
 
     def cond(state):
         live = live_of(state)
+        go = jnp.logical_and(live > 0, state[8] < budget)
         if is_floor:
-            return live > 0
-        return jnp.logical_and(live > 0, 4 * live > m)
+            return go
+        return jnp.logical_and(go, 4 * live > m)
 
     body = functools.partial(_stage_round, X, Xs, surv_idx, x_sq, n,
-                             metric, use_kernels, interpret, block)
+                             metric, use_kernels, interpret, budget, block)
     state = jax.lax.while_loop(cond, body, state)
     return state, surv_idx, live_of(state)
 
@@ -328,6 +344,9 @@ def trimed_pipelined(
     ladder_min: int = LADDER_MIN,
     use_kernels: bool = False,
     interpret=None,
+    warm_idx=None,
+    l_init=None,
+    max_computed: int | None = None,
 ) -> MedoidResult:
     """Exact medoid via the survivor-compacted, software-pipelined engine
     (DESIGN.md §4). One X-stream per steady-state round; bound
@@ -336,6 +355,22 @@ def trimed_pipelined(
     Pallas kernels (``kernels.ops.pipelined_round`` et al.); the jnp
     path computes identical bound values while carrying the previous
     distance block instead of recomputing it.
+
+    Three hooks serve the bandit hybrid (DESIGN.md §9) — all of them
+    affect *cost only*, never the triangle-bound elimination logic,
+    except ``l_init`` which is the caller's promise:
+
+    * ``warm_idx`` — force these elements (deduplicated, at most one
+      block's worth) to be the first computed pivot block, establishing
+      an incumbent before regular lowest-bound selection takes over.
+    * ``l_init`` — seed the lower-bound vector. Entries must be valid
+      lower bounds on the internal ``E = S/N`` energies for the result
+      to stay exact; the bandit passes its (probabilistic) LCBs here
+      only on the explicitly opt-in ``seed_bounds`` path.
+    * ``max_computed`` — hard cap on computed rows. When the cap halts
+      elimination early the result carries ``certified=False`` and the
+      incumbent (whose energy is exact — its full row was computed) is
+      returned as the best-so-far.
 
     Only triangle-inequality metrics are admissible (the elimination
     bound is the triangle bound)."""
@@ -352,21 +387,35 @@ def trimed_pipelined(
     warm = resolve_schedule(block_schedule, block)
     floor = max(int(ladder_min), block)
     can_compact = n > floor
+    budget_host = (2**31 - 1 if max_computed is None
+                   else max(int(max_computed), 0))
+    budget = jnp.asarray(budget_host, jnp.int32)
+    l0 = (jnp.zeros(n, X.dtype) if l_init is None
+          else jnp.maximum(jnp.asarray(l_init, X.dtype), 0.0))
+    has_warm_idx = warm_idx is not None
+    if has_warm_idx:
+        # dedup preserving the caller's ranking (first occurrence wins) —
+        # under a budget cap the leading pivots are the ones computed
+        w = np.asarray(warm_idx, np.int64)
+        _, first = np.unique(w, return_index=True)
+        warm_arr = jnp.asarray(w[np.sort(first)][:block], jnp.int32)
+    else:
+        warm_arr = jnp.zeros((1,), jnp.int32)
 
-    state, live = _stage0(X, block, warm, metric, use_kernels, interpret,
-                          can_compact)
+    state, live = _stage0(X, l0, warm_arr, budget, block, warm, metric,
+                          use_kernels, interpret, can_compact, has_warm_idx)
     (l, alive, e_cl, m_cl, pidx, pe, pv, _d, n_comp, n_rounds) = state
     live = int(live)
     n_stages = 0
     fold_cols = jnp.asarray(0, jnp.int32)
     surv_idx, l_s, alive_s = jnp.arange(n, dtype=jnp.int32), l, alive
 
-    while live > 0:
-        m_out = max(_pow2_at_least(live), floor)
+    while live > 0 and int(n_comp) < budget_host:
+        m_out = max(pow2_at_least(live), floor)
         is_floor = m_out <= floor
         out, surv_idx, live_d = _stage(
             X, surv_idx, l_s, alive_s, e_cl, m_cl, pidx, pe, pv, n_comp,
-            n_rounds, fold_cols, m_out, block, metric, use_kernels,
+            n_rounds, fold_cols, budget, m_out, block, metric, use_kernels,
             interpret, is_floor)
         (l_s, alive_s, e_cl, m_cl, pidx, pe, pv, _d, n_comp, n_rounds,
          fold_cols) = out
@@ -380,6 +429,7 @@ def trimed_pipelined(
         int(m_cl), e_paper, n_comp, n_rounds, n_comp * n,
         n_stages=n_stages,
         x_cols_streamed=n_rounds * n + int(fold_cols),
+        certified=(live == 0),
     )
 
 
@@ -681,7 +731,7 @@ def batched_medoids_pipelined(
     surv_idx, l_s, alive_s = jnp.arange(n, dtype=jnp.int32), l, alive
 
     while live > 0:
-        m_out = max(_pow2_at_least(live), floor)
+        m_out = max(pow2_at_least(live), floor)
         is_floor = m_out <= floor
         out, surv_idx, live_d = _bstage(
             X, surv_idx, a, v, l_s, alive_s, s_best, m_best, pidx, ps, pv,

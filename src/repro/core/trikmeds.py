@@ -34,7 +34,8 @@ import jax
 import jax.numpy as jnp
 
 from .batched import batched_medoids_jit
-from .distances import VectorOracle, pairwise, sq_norms
+from .distances import (VectorOracle, elements_computed, pairwise,
+                        sq_norms)
 
 
 @dataclass
@@ -281,11 +282,14 @@ def _resolve_medoid_update(medoid_update: str, metric: str) -> str:
     """The trimed engine's elimination bound is the triangle bound, so
     it is only exact for triangle-inequality metrics. For the others
     (``sqeuclidean``, ``cosine``) fall back to the quadratic scan, which
-    is metric-agnostic — callers keep exact medoid updates either way."""
-    if medoid_update not in ("trimed", "scan", "pipelined"):
+    is metric-agnostic — callers keep exact medoid updates either way.
+    The ``bandit`` update (the paper's relaxed K-medoids, §5) estimates
+    by sampling and needs no triangle inequality, so it survives every
+    metric."""
+    if medoid_update not in ("trimed", "scan", "pipelined", "bandit"):
         raise ValueError(
-            "medoid_update must be 'trimed', 'pipelined' or 'scan', "
-            f"got {medoid_update!r}")
+            "medoid_update must be 'trimed', 'pipelined', 'bandit' or "
+            f"'scan', got {medoid_update!r}")
     if medoid_update in ("trimed", "pipelined") and metric not in ("l2", "l1"):
         return "scan"
     return medoid_update
@@ -331,6 +335,49 @@ def _kmedoids_pipelined_impl(X, k, seed, n_iter, metric, block,
     return m_idx, a, energy, jnp.asarray(n_rows, jnp.int32)
 
 
+def _kmedoids_bandit_impl(X, k, seed, n_iter, metric, bandit_budget,
+                          use_kernels):
+    """Voronoi iteration whose medoid-update step is the *budgeted
+    bandit* (the paper's §5 relaxation, served by ``repro.bandit``):
+    per cluster, a sampled-column race estimates the in-cluster medoid
+    on ``bandit_budget * |cluster|`` computed elements. The update is
+    approximate — the trade the paper makes "to obtain further
+    computational gains with only a minor loss in cluster quality" —
+    so it works for every metric (no triangle inequality required).
+    Tiny clusters fall through to the exact engine inside
+    ``bandit_medoid`` (its brute-force floor), the same auto-fallback
+    discipline as the trimed/pipelined updates."""
+    from repro.bandit import bandit_medoid
+
+    n = X.shape[0]
+    x_sq = sq_norms(X)
+    m_idx = _maximin_init(X, k, x_sq, seed, metric)
+    n_rows = float(k - 1)                                 # maximin rows
+    Xh = np.asarray(X)
+    a = jnp.zeros(n, jnp.int32)
+    for it in range(n_iter):
+        a, _ = _assign_step(X, m_idx, x_sq, metric)
+        n_rows += k
+        a_h = np.asarray(a)
+        m_new = np.asarray(m_idx).copy()
+        for c in range(k):
+            members = np.flatnonzero(a_h == c)
+            if len(members) == 0:
+                continue
+            r = bandit_medoid(
+                Xh[members], budget=max(8.0, bandit_budget * len(members)),
+                exact=None, engine="ucb", metric=metric,
+                seed=seed + 1009 * it + c, use_kernels=use_kernels)
+            m_new[c] = members[r.index]
+            # unified accounting: cluster-local scalars in full-X rows
+            n_rows += elements_computed(r.n_scalars, n)
+        m_idx = jnp.asarray(m_new, jnp.int32)
+    a, d_own = _assign_step(X, m_idx, x_sq, metric)
+    n_rows += k
+    energy = d_own.sum()
+    return m_idx, a, energy, jnp.asarray(n_rows, jnp.float32)
+
+
 def _engine_round_fn(metric: str, use_kernels: bool):
     if not use_kernels:
         return None
@@ -352,6 +399,7 @@ def kmedoids_jax(
     block: int = 128,
     use_kernels: bool = False,
     block_schedule=None,
+    bandit_budget: float = 0.25,
 ):
     """Batched Voronoi-iteration K-medoids on device. The medoid-update
     step runs the batched multi-cluster trimed engine (DESIGN.md §3): K
@@ -368,7 +416,12 @@ def kmedoids_jax(
     ``medoid_update="pipelined"`` selects the survivor-compacted
     pipelined engine (DESIGN.md §4; host-orchestrated compaction ladder);
     ``block_schedule`` threads the adaptive warm-up block schedule into
-    whichever engine runs the update.
+    whichever engine runs the update. ``medoid_update="bandit"`` selects
+    the *approximate* budgeted update (the paper's §5 relaxation) served
+    by :mod:`repro.bandit` — ``bandit_budget`` is the per-cluster element
+    budget as a fraction of the cluster size (DESIGN.md §9); it is the
+    only update that trades exactness of the step for cost, and the only
+    one valid for non-triangle metrics without falling back to scan.
     Returns (medoid_indices, assignment, energy).
     """
     from .pipelined import resolve_schedule
@@ -378,6 +431,11 @@ def kmedoids_jax(
     if medoid_update == "pipelined":
         m_idx, a, energy, _ = _kmedoids_pipelined_impl(
             jnp.asarray(X), k, seed, n_iter, metric, block, block_schedule,
+            use_kernels)
+        return m_idx, a, energy
+    if medoid_update == "bandit":
+        m_idx, a, energy, _ = _kmedoids_bandit_impl(
+            jnp.asarray(X), k, seed, n_iter, metric, bandit_budget,
             use_kernels)
         return m_idx, a, energy
     m_idx, a, energy, _ = _kmedoids_impl(
@@ -397,10 +455,12 @@ def kmedoids_batched(
     block: int = 128,
     use_kernels: bool = False,
     block_schedule=None,
+    bandit_budget: float = 0.25,
 ) -> KMedoidsJaxResult:
     """Instrumented wrapper around the device K-medoids: same iteration
     as :func:`kmedoids_jax` plus distance-computation accounting, for the
-    benchmarks and the data-pipeline callers that report costs."""
+    benchmarks and the data-pipeline callers that report costs (unified
+    computed elements — fractional rows under the bandit update)."""
     from .pipelined import resolve_schedule
 
     medoid_update = _resolve_medoid_update(medoid_update, metric)
@@ -410,13 +470,18 @@ def kmedoids_batched(
     if medoid_update == "pipelined":
         m_idx, a, energy, n_rows = _kmedoids_pipelined_impl(
             X, k, seed, n_iter, metric, block, block_schedule, use_kernels)
+    elif medoid_update == "bandit":
+        m_idx, a, energy, n_rows = _kmedoids_bandit_impl(
+            X, k, seed, n_iter, metric, bandit_budget, use_kernels)
     else:
         m_idx, a, energy, n_rows = _kmedoids_impl(
             X, k, seed, n_iter, metric, medoid_update, block,
             fused_round_fn=_engine_round_fn(metric, use_kernels),
             warm_blocks=resolve_schedule(block_schedule, block))
-    n_rows = int(n_rows)
+    n_rows = float(n_rows)
+    if medoid_update != "bandit":
+        n_rows = int(n_rows)
     return KMedoidsJaxResult(
         np.asarray(m_idx), np.asarray(a), float(energy), n_rows,
-        n_rows * n, n_iter,
+        int(round(n_rows * n)), n_iter,
     )

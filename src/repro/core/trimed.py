@@ -16,8 +16,9 @@ Two implementations:
   triangle-inequality argument proves are valid lower bounds — at a waste
   of at most ``B-1`` extra computed elements per round.
 
-Energies use the sum-including-self convention ``E = S/N`` (see
-``distances.py``) under which ``E(j) >= |E(i) - d(i,j)|`` holds exactly.
+Energy normalisation is stated once, in ``distances.py``: internal
+computations use the bound-exact ``E = S/N`` convention; ``.energy``
+fields are rescaled to the paper's ``S/(N-1)`` at the API boundary.
 """
 from __future__ import annotations
 
@@ -36,12 +37,13 @@ from .distances import VectorOracle, pairwise, sq_norms
 @dataclass
 class MedoidResult:
     index: int                 # argmin element
-    energy: float              # E = S/(N-1): the paper's normalisation
-    n_computed: int            # number of computed elements (full rows)
+    energy: float              # reported convention — see distances.py
+    n_computed: int            # computed elements (full rows; distances.py)
     n_rounds: int = 0          # block rounds (block variant only)
     n_distances: int = 0       # scalar distance evaluations
     n_stages: int = 0          # compaction ladder stages (pipelined only)
     x_cols_streamed: int = 0   # X columns streamed from HBM (pipelined only)
+    certified: bool = True     # elimination ran to completion (vs. budget-cut)
 
 
 # ---------------------------------------------------------------------------

@@ -2,16 +2,17 @@
 
 * pairwise / energy / bound-update: the trimed block round (fused variant
   never materialises the (B, N) distance block in HBM);
+* sample_stats: arm-tiled sampled-column moments for the bandit engines;
 * flash_attention: GQA forward attention, online softmax in VMEM scratch.
 ops.py holds the jit'd public wrappers; ref.py the pure-jnp oracles.
 """
 from . import ops, pairwise, ref
 from .flash_attention import flash_attention
 from .ops import (block_energies, bound_update, fused_round,
-                  make_pallas_distance_fn, pairwise_distances)
+                  make_pallas_distance_fn, pairwise_distances, sample_stats)
 
 __all__ = [
     "ops", "pairwise", "ref", "flash_attention", "block_energies",
     "bound_update", "fused_round", "make_pallas_distance_fn",
-    "pairwise_distances",
+    "pairwise_distances", "sample_stats",
 ]

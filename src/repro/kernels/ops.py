@@ -223,6 +223,43 @@ def masked_pipelined_round(xb_new, xb_prev, x, a_new, a_prev, a_x, s_prev,
     return s_sums, l_new[:n]
 
 
+DEFAULT_TB = 256  # arm-axis tile for the sampled-column kernel
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "tb", "interpret"))
+def sample_stats(xa, xs, metric="l2", tb=DEFAULT_TB, interpret=None):
+    """Per-arm ``(sums, sumsq, maxs)`` of distances to the sampled
+    columns ``xs`` (already gathered: ``xs = X[sample_idx]``), via the
+    arm-tiled Pallas kernel (DESIGN.md §9). Feeds the bandit engines'
+    running means and empirical-Bernstein confidence intervals; the
+    ``(M, S)`` distance block never reaches HBM."""
+    if interpret is None:
+        interpret = _interpret_default()
+    m = xa.shape[0]
+    s = xs.shape[0]
+    tb = min(tb, max(LANE, m))
+    xa = xa.astype(jnp.float32)
+    xs = xs.astype(jnp.float32)
+    d = xa.shape[1]
+    d_pad = (-d) % LANE
+    if d_pad:
+        xa = jnp.pad(xa, ((0, 0), (0, d_pad)))
+        xs = jnp.pad(xs, ((0, 0), (0, d_pad)))
+    m_pad = (-m) % tb
+    s_pad = (-s) % LANE
+    if m_pad:
+        xa = jnp.pad(xa, ((0, m_pad), (0, 0)))
+    if s_pad:
+        xs = jnp.pad(xs, ((0, s_pad), (0, 0)))
+    asq = jnp.sum(xa * xa, axis=1)[None, :]          # (1, Mpad)
+    ssq = jnp.sum(xs * xs, axis=1)[None, :]          # (1, Spad)
+    sums, sumsq, maxs = _pk.sample_stats_kernel(
+        xa, xs, asq, ssq, s_real=s, tb=tb, metric=metric,
+        interpret=interpret,
+    )
+    return sums[0, :m], sumsq[0, :m], maxs[0, :m]
+
+
 def make_pallas_distance_fn(metric="l2", tn=DEFAULT_TN, interpret=None):
     """Adapter for ``core.trimed.trimed_block(distance_fn=...)``: computes
     the materialised (B, N) block with the Pallas kernel."""

@@ -1,9 +1,11 @@
-"""Pallas TPU kernels for the trimed block round.
+"""Pallas TPU kernels for the trimed block round and the bandit sampler.
 
-Seven kernels, all tiled over the element axis ``N`` with MXU-aligned
-blocks (the pivot block ``B`` rides the sublane axis, ``N`` tiles ride the
-lane axis, and the ``-2 X_B Xᵀ`` term is a ``(B, d) x (d, TN)`` MXU
-matmul per tile):
+Eight kernels. Seven are tiled over the element axis ``N`` with
+MXU-aligned blocks (the pivot block ``B`` rides the sublane axis, ``N``
+tiles ride the lane axis, and the ``-2 X_B Xᵀ`` term is a
+``(B, d) x (d, TN)`` MXU matmul per tile); the eighth
+(``sample_stats_kernel``) flips the tiling for the bandit subsystem —
+grid over the *candidate* axis, sampled columns resident:
 
 * ``pairwise_kernel``     — materialises the ``(B, N)`` distance block.
 * ``energy_kernel``       — row-sums only; the block never leaves VMEM.
@@ -23,6 +25,12 @@ matmul per tile):
   cluster id matches the pivot's own, so K concurrent per-cluster
   searches share one ``(B, N)`` distance pass with the mask applied in
   VMEM (the masked block never reaches HBM either).
+* ``sample_stats_kernel`` — the sampled-column pass for the bandit
+  engines (DESIGN.md §9): per candidate arm, the sum / sum-of-squares /
+  max of distances to an ``S``-column sample of ``X``, with the
+  ``(M, S)`` distance block living only in VMEM. Because the bandit
+  races *many* arms over *few* columns, the grid runs over arm tiles
+  and the gathered sample block stays resident.
 
 ``energy`` + ``bound_update`` together implement a *fused trimed round*
 (DESIGN.md §2): HBM traffic is two streams of ``X`` plus the ``(N,)``
@@ -236,6 +244,58 @@ def pipelined_kernel(xb2, x, bsq2, xsq, e_prev, valid_prev, l, *, n_real,
         interpret=interpret,
     )(xb2, x, bsq2, xsq, e_prev, valid_prev, l)
     return e_out[0], l_out[0]
+
+
+# ---------------------------------------------------------------------------
+# sampled-column stats: per-arm sum / sum-of-squares / max of distances to
+# an S-column sample of X (DESIGN.md §9, the bandit subsystem). The roles
+# flip relative to the kernels above: the bandit has MANY candidate arms
+# and FEW sampled columns, so the grid tiles the *arm* axis and the whole
+# gathered sample block (S, d) stays VMEM-resident across grid steps.
+# ---------------------------------------------------------------------------
+def _sample_stats_body(s_real, metric, xa_ref, xs_ref, asq_ref, ssq_ref,
+                       sum_ref, sq_ref, mx_ref):
+    d = _dist_tile(xa_ref[...], xs_ref[...], asq_ref[0], ssq_ref[0], metric)
+    # zero the zero-padded sample columns so sums/sumsq/max are exact
+    # (distances are >= 0, so 0 is the identity for the running max too)
+    col = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    d = jnp.where(col < s_real, d, 0.0)
+    sum_ref[...] = d.sum(axis=1, keepdims=True).T        # (1, TB)
+    sq_ref[...] = (d * d).sum(axis=1, keepdims=True).T
+    mx_ref[...] = d.max(axis=1, keepdims=True).T
+
+
+def sample_stats_kernel(xa, xs, asq, ssq, *, s_real, tb, metric="l2",
+                        interpret=False):
+    """Per-arm first/second moments and max over the sampled columns.
+
+    ``xa`` is the (padded) ``(M, d)`` arm block, ``xs`` the gathered
+    ``(S, d)`` sample block. Returns ``(sums, sumsq, maxs)``, each
+    ``(1, M)``. One MXU matmul per ``(TB, d) x (d, S)`` arm tile."""
+    m, dpad = xa.shape
+    spad = xs.shape[0]
+    grid = (m // tb,)
+    return pl.pallas_call(
+        functools.partial(_sample_stats_body, s_real, metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, dpad), lambda i: (i, 0)),
+            pl.BlockSpec((spad, dpad), lambda i: (0, 0)),
+            pl.BlockSpec((1, tb), lambda i: (0, i)),
+            pl.BlockSpec((1, spad), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tb), lambda i: (0, i)),
+            pl.BlockSpec((1, tb), lambda i: (0, i)),
+            pl.BlockSpec((1, tb), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, m), jnp.float32),
+            jax.ShapeDtypeStruct((1, m), jnp.float32),
+            jax.ShapeDtypeStruct((1, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xa, xs, asq, ssq)
 
 
 # ---------------------------------------------------------------------------

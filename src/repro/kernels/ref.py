@@ -52,6 +52,16 @@ def fused_round_ref(xb, x, l, valid, metric: str = "l2"):
 
 
 # ---------------------------------------------------------------------------
+# sampled-column stats — DESIGN.md §9 (the bandit subsystem)
+# ---------------------------------------------------------------------------
+def sample_stats_ref(xa, xs, metric: str = "l2"):
+    """Per-arm (sum, sum-of-squares, max) of distances from each arm in
+    ``xa`` to every sampled column in ``xs``."""
+    d = pairwise_ref(xa, xs, metric)
+    return d.sum(axis=1), (d * d).sum(axis=1), d.max(axis=1)
+
+
+# ---------------------------------------------------------------------------
 # multi-cluster (assignment-masked) references — DESIGN.md §3
 # ---------------------------------------------------------------------------
 def masked_energy_ref(xb, x, a_piv, a_x, metric: str = "l2") -> jnp.ndarray:
