@@ -26,7 +26,7 @@ from pathlib import Path
 
 import numpy as np
 
-from .common import RESULTS_DIR, save_csv, timed
+from .common import RESULTS_DIR, save_csv, timed, timed_solve
 
 JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_bandit.json"
 
@@ -68,8 +68,8 @@ def _cell(engine, n, d, budget, elements, regret, match, certified, wall):
 def run(quick: bool = True, mode: str | None = None):
     """Returns ``(rows, csv_path)`` like every bench; also writes
     ``BENCH_bandit.json``."""
-    from repro.bandit import bandit_medoid
-    from repro.core import rand_medoid, toprank, trimed_pipelined
+    from repro.api import MedoidQuery
+    from repro.core.baselines import rand_medoid, toprank
 
     if mode == "smoke":
         sizes, d = [256], 3
@@ -89,33 +89,32 @@ def run(quick: bool = True, mode: str | None = None):
             return (float(e64[idx]) - e_star) / e_star
 
         # exact yardstick -------------------------------------------------
-        trimed_pipelined(X)                              # warm the jit
-        p, dt = timed(trimed_pipelined, X)
-        p_elems = float(p.n_computed)
+        p, dt = timed_solve(MedoidQuery(X), plan="pipelined")
+        p_elems = float(p.elements_computed)
         records.append(_cell("pipelined", n, d, None, p_elems,
                              regret_of(p.index), p.index == ti, True, dt))
 
         # budget sweep: pure bandits + the hybrid -------------------------
         for frac in BUDGET_FRACS:
             budget = max(frac * p_elems, 16.0)
-            for name, fn in (
-                ("bandit-ucb", lambda: bandit_medoid(
-                    X, budget=budget, exact=None, engine="ucb", seed=0)),
-                ("bandit-halving", lambda: bandit_medoid(
-                    X, budget=budget, exact=None, engine="halving", seed=0)),
-                ("hybrid", lambda: bandit_medoid(
-                    X, budget=budget, exact="trimed", seed=0)),
+            for name, plan, opts in (
+                ("bandit-ucb", "bandit", {"engine": "ucb"}),
+                ("bandit-halving", "bandit", {"engine": "halving"}),
+                ("hybrid", "hybrid", {}),
             ):
-                r, dt = timed(fn)
-                records.append(_cell(name, n, d, budget, r.n_computed,
+                q = MedoidQuery(X, budget=budget, seed=0, engine_opts=opts)
+                r, dt = timed_solve(q, plan=plan, warm=False)
+                records.append(_cell(name, n, d, budget,
+                                     r.elements_computed,
                                      regret_of(r.index), r.index == ti,
                                      r.certified, dt))
 
         # unbudgeted hybrid: the certified anytime path -------------------
-        r, dt = timed(bandit_medoid, X, exact="trimed", seed=0)
-        records.append(_cell("hybrid-certified", n, d, None, r.n_computed,
-                             regret_of(r.index), r.index == ti,
-                             r.certified, dt))
+        r, dt = timed_solve(MedoidQuery(X, mode="anytime", seed=0),
+                            plan="hybrid", warm=False)
+        records.append(_cell("hybrid-certified", n, d, None,
+                             r.elements_computed, regret_of(r.index),
+                             r.index == ti, r.certified, dt))
 
         # the paper's approximate baselines (host-side) -------------------
         if mode == "smoke" or n <= 8192:

@@ -8,9 +8,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import toprank, trimed_block, trimed_sequential
+from repro.core import toprank
 
-from .common import save_csv, shell_ball, timed
+from .common import save_csv, shell_ball, timed, timed_solve
 
 
 def run(quick: bool = True):
@@ -24,18 +24,23 @@ def run(quick: bool = True):
                 X = (rng.random((n, d)) if dist == "uniform"
                      else shell_ball(n, d, seed=n + d))
                 X = X.astype(np.float32)
-                r_seq, t_seq = timed(trimed_sequential, X, seed=0)
-                r_blk, t_blk = timed(trimed_block, X, block=128, seed=0)
+                from repro.api import MedoidQuery
+                r_seq, t_seq = timed_solve(MedoidQuery(X, seed=0),
+                                           plan="sequential", warm=False)
+                r_blk, t_blk = timed_solve(MedoidQuery(X, seed=0, block=128),
+                                           plan="block")
                 r_top, t_top = timed(toprank, X, seed=0)
                 assert r_seq.index == r_blk.index == r_top.index
-                xi = r_blk.n_computed / np.sqrt(n)
+                n_seq = int(r_seq.elements_computed)
+                n_blk = int(r_blk.elements_computed)
+                xi = n_blk / np.sqrt(n)
                 rows.append([
-                    dist, d, n, r_seq.n_computed, r_blk.n_computed,
+                    dist, d, n, n_seq, n_blk,
                     r_top.n_computed, round(xi, 2),
                     round(t_seq * 1e6 / n), round(t_blk * 1e6 / n),
                 ])
-                print(f"fig3 {dist} d={d} N={n}: seq={r_seq.n_computed} "
-                      f"blk={r_blk.n_computed} toprank={r_top.n_computed} "
+                print(f"fig3 {dist} d={d} N={n}: seq={n_seq} "
+                      f"blk={n_blk} toprank={r_top.n_computed} "
                       f"xi={xi:.1f}")
     path = save_csv("fig3", ["dist", "d", "N", "ncomp_seq", "ncomp_block",
                              "ncomp_toprank", "xi_sqrtN",

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import toprank, toprank2, trimed_sequential
+from repro.core import toprank, toprank2
 from repro.core.graph import GraphOracle, largest_component, sensor_network
 
 from .common import save_csv
@@ -103,7 +103,9 @@ def run(quick: bool = True):
             else:
                 from repro.core.distances import VectorOracle
                 oracles = [VectorOracle(data) for _ in range(3)]
-            r_tr = trimed_sequential(oracles[0], seed=s)
+            from repro.api import MedoidQuery, solve
+            r_tr = solve(MedoidQuery(oracles[0], seed=s),
+                         plan="sequential").extras["raw"]
             r_tp = toprank(oracles[1], seed=s)
             r_t2 = toprank2(oracles[2], seed=s)
             assert r_tr.index == r_tp.index == r_t2.index, name

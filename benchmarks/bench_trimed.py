@@ -24,7 +24,7 @@ from pathlib import Path
 
 import numpy as np
 
-from .common import RESULTS_DIR, save_csv, timed
+from .common import RESULTS_DIR, save_csv, timed_solve
 
 JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_trimed.json"
 
@@ -53,12 +53,11 @@ def _run_scan(X, block):
 
 
 def _run_block(X, block, kernels=False):
-    from repro.core import trimed_block
-    from repro.kernels.ops import fused_round
+    from repro.api import MedoidQuery
 
-    kw = dict(block=block, fused_round_fn=fused_round if kernels else None)
-    trimed_block(X, **kw)                                  # warm the jit
-    r, dt = timed(trimed_block, X, **kw)
+    q = MedoidQuery(X, block=block, use_kernels=kernels)
+    rep, dt = timed_solve(q, plan="block")
+    r = rep.extras["raw"]
     return dict(wall_s=dt, n_computed=r.n_computed, n_rounds=r.n_rounds,
                 n_distances=r.n_distances,
                 full_x_streams_per_round=2.0,              # fused-kernel model
@@ -67,11 +66,12 @@ def _run_block(X, block, kernels=False):
 
 
 def _run_pipelined(X, block, kernels=False, schedule=None):
-    from repro.core import trimed_pipelined
+    from repro.api import MedoidQuery
 
-    kw = dict(block=block, use_kernels=kernels, block_schedule=schedule)
-    trimed_pipelined(X, **kw)                              # warm the jit
-    r, dt = timed(trimed_pipelined, X, **kw)
+    q = MedoidQuery(X, block=block, use_kernels=kernels,
+                    block_schedule=schedule)
+    rep, dt = timed_solve(q, plan="pipelined")
+    r = rep.extras["raw"]
     # every pipelined round issues exactly ONE full pass over X (the
     # energy floor); x_streams_per_round adds the compacted fold columns
     spr = r.x_cols_streamed / max(r.n_rounds * len(X), 1)

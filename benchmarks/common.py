@@ -29,6 +29,18 @@ def timed(fn, *args, repeats: int = 1, **kw):
     return out, dt
 
 
+def timed_solve(query, plan=None, repeats: int = 1, warm: bool = True):
+    """Time ``repro.api.solve`` — the benchmarks' engine entry point
+    since the API redesign (every engine through the front door). One
+    unmeasured warm call first so jit compilation stays out of the
+    numbers. Returns ``(SolveReport, seconds)``."""
+    from repro.api import solve
+
+    if warm:
+        solve(query, plan=plan)
+    return timed(solve, query, plan=plan, repeats=repeats)
+
+
 def shell_ball(n: int, d: int, seed: int = 0, inner_prob: float = 1 / 20):
     """Paper SM-F distribution 2: unit ball with density ~19x higher
     beyond radius (1/2)^(1/d)."""

@@ -30,6 +30,19 @@ def main(argv=None):
                    roofline_report)
 
     if args.smoke:
+        # the benches now route every engine through repro.api.solve;
+        # check the front door itself first (planner + report schema)
+        import numpy as np
+
+        from repro.api import MedoidQuery, solve
+
+        X = np.random.default_rng(0).random((256, 3)).astype(np.float32)
+        plan = solve(MedoidQuery(X), explain=True)
+        rep = solve(MedoidQuery(X))
+        assert rep.plan.engine == plan.engine and rep.certified, rep
+        print(f"smoke OK [repro.api]: plan={plan.engine} "
+              f"index={rep.index} elements={rep.elements_computed:.0f}")
+
         checks = [(bench_trimed, "bench_trimed/v1"),
                   (bench_bandit, "bench_bandit/v1")]
         for bench, schema in checks:

@@ -9,7 +9,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import batched_medoids, kmedoids_batched, kmeds, trikmeds
+from repro.api import MedoidQuery, solve
+from repro.core import kmedoids_batched, kmeds, trikmeds
 
 rng = np.random.default_rng(1)
 centers = rng.random((12, 2)) * 10
@@ -51,32 +52,35 @@ print(f"device quadratic scan: energy={dev_s.energy:.2f} "
       f"distances={dev_s.n_distances:,} "
       f"({dev_s.n_distances / dev_t.n_distances:.1f}x more)")
 
-# the engine is also usable standalone on any fixed assignment — with the
-# adaptive geometric block schedule warming the incumbents (clustered
-# data is where the warm-up pays, DESIGN.md §4)
-eng = batched_medoids(Xf, dev_t.assignment, K, block_schedule="geometric")
-print(f"standalone engine: computed {eng.n_computed}/{len(X)} rows "
+# per-cluster medoids of any fixed assignment go through the front door
+# too (the planner picks the batched engine) — with the adaptive
+# geometric block schedule warming the incumbents (clustered data is
+# where the warm-up pays, DESIGN.md §4)
+eng = solve(MedoidQuery(Xf, k=K, assignments=dev_t.assignment,
+                        block_schedule="geometric"))
+print(f"standalone engine [{eng.plan.engine}]: computed "
+      f"{eng.elements_computed:.0f}/{len(X)} rows "
       f"in {eng.n_rounds} rounds; medoids match: "
-      f"{np.array_equal(np.sort(eng.medoids), np.sort(dev_t.medoids))}")
+      f"{np.array_equal(np.sort(eng.indices), np.sort(dev_t.medoids))}")
 
 # --- anytime / budgeted queries: the bandit subsystem (DESIGN.md §9).
-# Sampled-column racing answers a medoid query on a hard element budget
-# (approximate, with an (index, energy, CI) triple) or hands its survivor
-# ranking to the exact pipelined finisher for a certified answer.
-from repro.bandit import bandit_medoid
-
-q = bandit_medoid(Xf, budget=150.0, exact="trimed", seed=1)
-print(f"\nbandit hybrid (budget 150): index={q.index} "
+# budget= (or mode="anytime") routes the query to the sampled-column race
+# with the exact pipelined finisher; the SolveReport carries the residual
+# CI and the certificate flag.
+q = solve(MedoidQuery(Xf, budget=150.0, seed=1))
+print(f"\nbandit hybrid (budget 150) [{q.plan.engine}]: index={q.index} "
       f"energy={q.energy:.3f} ci={q.ci:.3f} certified={q.certified} "
-      f"elements={q.n_computed:.0f}")
-q = bandit_medoid(Xf, exact="trimed", seed=1)
+      f"elements={q.elements_computed:.0f}")
+q = solve(MedoidQuery(Xf, mode="anytime", seed=1))
 print(f"bandit hybrid (unbudgeted): certified={q.certified} "
-      f"elements={q.n_computed:.0f}")
+      f"elements={q.elements_computed:.0f}")
 
-# medoid_update="bandit" is the paper's relaxed K-medoids (§5): each
-# cluster's update runs the budgeted race instead of an exact engine —
-# minor quality loss, large cost savings, any metric.
-dev_b = kmedoids_batched(Xf, K, seed=1, n_iter=8, medoid_update="bandit")
+# a nested anytime MedoidQuery as the medoid_update is the paper's
+# relaxed K-medoids (§5): each cluster's update runs the budgeted race
+# instead of an exact engine — minor quality loss, large cost savings,
+# any metric.
+dev_b = kmedoids_batched(Xf, K, seed=1, n_iter=8,
+                         medoid_update=MedoidQuery(None, mode="anytime"))
 print(f"device bandit update: energy={dev_b.energy:.2f} "
       f"distances={dev_b.n_distances:,} "
       f"({dev_s.n_distances / dev_b.n_distances:.0f}x fewer than scan, "

@@ -11,15 +11,18 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
-from repro.core import sensor_network, trimed_sequential
+from repro.api import MedoidQuery, solve
+from repro.core import sensor_network
 from repro.core.distributed import trimed_sharded
 
-# --- graph medoid (shortest-path metric, Dijkstra oracle) ---
+# --- graph medoid (shortest-path metric, Dijkstra oracle): an oracle
+# input routes to the paper-faithful host sequential engine ---
 g, pts = sensor_network(3000, seed=0, radius_scale=1.6)
-r = trimed_sequential(g, seed=0)
-print(f"sensor network: |V|={g.n}, medoid node={r.index}, "
-      f"energy={r.energy:.4f}, Dijkstra sweeps={r.n_computed} "
-      f"({g.n / r.n_computed:.0f}x fewer than brute force)")
+r = solve(MedoidQuery(g, seed=0))
+print(f"sensor network: |V|={g.n}, medoid node={r.index} "
+      f"[{r.plan.engine}], energy={r.energy:.4f}, "
+      f"Dijkstra sweeps={r.elements_computed:.0f} "
+      f"({g.n / r.elements_computed:.0f}x fewer than brute force)")
 
 # --- distributed vector medoid on an 8-way data-parallel mesh ---
 mesh = jax.make_mesh((8,), ("data",),

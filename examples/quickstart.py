@@ -1,4 +1,4 @@
-"""Quickstart: find the exact medoid of a point set four ways.
+"""Quickstart: one front door — MedoidQuery -> planner -> SolveReport.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,42 +7,49 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import (exact_medoid, trimed_block, trimed_pipelined,
-                        trimed_sequential, toprank)
-from repro.kernels.ops import fused_round
+from repro.api import MedoidQuery, solve
+from repro.core import exact_medoid
+from repro.core.baselines import toprank
 
 rng = np.random.default_rng(0)
 X = rng.random((20_000, 2)).astype(np.float32)
 
-# 1) paper-faithful sequential trimed (host)
-r1 = trimed_sequential(X, seed=0)
-print(f"trimed(seq)    medoid={r1.index} energy={r1.energy:.5f} "
-      f"computed={r1.n_computed} of N={len(X)}")
+# 1) let the planner pick (N=20k -> survivor-compacted pipelined engine);
+#    explain=True shows the choice without computing anything
+plan = solve(MedoidQuery(X), explain=True)
+print(f"planner chose {plan.engine!r}: {'; '.join(plan.reasons)}")
+r = solve(MedoidQuery(X))
+print(f"solve(auto)    medoid={r.index} energy={r.energy:.5f} "
+      f"computed={r.elements_computed:.0f} of N={len(X)} "
+      f"certified={r.certified}")
 
-# 2) TPU block-synchronous trimed (device, jit)
-r2 = trimed_block(X, block=128)
-print(f"trimed(block)  medoid={r2.index} energy={r2.energy:.5f} "
-      f"computed={r2.n_computed} rounds={r2.n_rounds}")
+# 2) power users can force any engine with plan=
+r1 = solve(MedoidQuery(X, seed=0), plan="sequential")   # paper Alg. 1, host
+r2 = solve(MedoidQuery(X, block=128), plan="block")     # block-synchronous
+r3 = solve(MedoidQuery(X, block=128, use_kernels=True), plan="block")
+print(f"sequential     medoid={r1.index} computed={r1.elements_computed:.0f}")
+print(f"block          medoid={r2.index} rounds={r2.n_rounds}")
+print(f"block+pallas   medoid={r3.index} computed={r3.elements_computed:.0f}")
 
-# 3) Pallas fused kernels (distance block never materialised)
-r3 = trimed_block(X, block=128, fused_round_fn=fused_round)
-print(f"trimed(pallas) medoid={r3.index} energy={r3.energy:.5f} "
-      f"computed={r3.n_computed}")
+# 3) pipelined engine with the geometric warm-up schedule
+r5 = solve(MedoidQuery(X, block=128, block_schedule="geometric"),
+           plan="pipelined")
+raw = r5.extras["raw"]          # the engine's native MedoidResult
+print(f"pipelined      medoid={r5.index} rounds={r5.n_rounds} "
+      f"stages={raw.n_stages} "
+      f"x-streams/round={raw.x_cols_streamed / (raw.n_rounds * len(X)):.2f}")
 
-# 4) survivor-compacted pipelined engine (DESIGN.md §4): one X-stream
-#    per round, working set shrinks with the survivor set; the geometric
-#    block schedule warms the incumbent before wide blocks commit
-r5 = trimed_pipelined(X, block=128, block_schedule="geometric")
-print(f"trimed(pipe)   medoid={r5.index} energy={r5.energy:.5f} "
-      f"computed={r5.n_computed} rounds={r5.n_rounds} "
-      f"stages={r5.n_stages} "
-      f"x-streams/round={r5.x_cols_streamed / (r5.n_rounds * len(X)):.2f}")
+# 4) anytime / budgeted query — bandit race + exact finisher (DESIGN.md §9)
+rb = solve(MedoidQuery(X, budget=600.0))
+print(f"anytime        medoid={rb.index} ci={rb.ci:.5f} "
+      f"computed={rb.elements_computed:.0f} certified={rb.certified}")
 
 # baseline comparison (the paper's headline)
 r4 = toprank(X, seed=0)
-print(f"TOPRANK        medoid={r4.index} computed={r4.n_computed} "
-      f"({r4.n_computed / max(r2.n_computed,1):.1f}x more than trimed)")
+print(f"TOPRANK        medoid={r4.index} computed={r4.n_computed:.0f} "
+      f"({r4.n_computed / max(r2.elements_computed, 1):.1f}x more "
+      "than trimed)")
 
-assert r1.index == r2.index == r3.index == r4.index == r5.index
+assert r.index == r1.index == r2.index == r3.index == r4.index == r5.index
 ti, _ = exact_medoid(X[:2000])  # brute-force check on a subset
 print("OK — all methods agree")

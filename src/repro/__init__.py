@@ -1,11 +1,41 @@
 """repro — multi-pod JAX framework around the trimed exact-medoid algorithm.
 
-Layers: core (the paper), bandit (anytime / budgeted medoid queries:
-UCB racing + sequential halving + the exact-finisher hybrid), kernels
-(Pallas), models (arch zoo), distributed (sharding), train/serve
-(drivers), data/optim/checkpoint/runtime (substrate), launch (mesh +
-dry-run), roofline (perf analysis).
+The public surface is :mod:`repro.api` — one declarative front door
+(``MedoidQuery`` -> planner -> ``SolveReport``) over every engine, plus
+the first-class ``Metric`` registry. Layers underneath: core (the
+paper's engines), bandit (anytime / budgeted queries: UCB racing +
+sequential halving + the exact-finisher hybrid), kernels (Pallas),
+models (arch zoo), distributed (sharding), train/serve (drivers),
+data/optim/checkpoint/runtime (substrate), launch (mesh + dry-run),
+roofline (perf analysis).
 """
 from . import compat  # noqa: F401  (installs jax<0.5 mesh-API shims)
+from .api import (  # noqa: F401
+    ENGINES,
+    MedoidQuery,
+    Metric,
+    Plan,
+    SolveReport,
+    available_metrics,
+    get_metric,
+    plan_query,
+    register_metric,
+    solve,
+    unregister_metric,
+)
 
-__version__ = "1.0.0"
+__all__ = [
+    "ENGINES",
+    "MedoidQuery",
+    "Metric",
+    "Plan",
+    "SolveReport",
+    "available_metrics",
+    "get_metric",
+    "plan_query",
+    "register_metric",
+    "solve",
+    "unregister_metric",
+]
+
+__version__ = "2.0.0"

@@ -1,0 +1,53 @@
+"""repro.api — the single public surface (DESIGN.md §10).
+
+One declarative entry point over every engine in the repo::
+
+    from repro.api import MedoidQuery, solve
+
+    report = solve(MedoidQuery(X))                      # planner picks
+    plan = solve(MedoidQuery(X), explain=True)          # why it picked
+    report = solve(MedoidQuery(X, budget=200.0))        # anytime hybrid
+    report = solve(MedoidQuery(X, k=16))                # K-medoids
+    report = solve(MedoidQuery(X), plan="pipelined")    # power override
+
+plus the first-class :class:`Metric` registry (``register_metric``)
+that owns metric capabilities for every engine. The legacy entrypoints
+(``trimed_sequential`` / ``trimed_block`` / ``trimed_pipelined`` /
+``batched_medoids`` / ``batched_medoids_pipelined`` / ``bandit_medoid``
+/ ``trimed_topk`` / ``medoid``) are deprecated shims over this module.
+"""
+from __future__ import annotations
+
+import warnings
+
+from .metrics import (Metric, available_metrics, get_metric,
+                      register_metric, require_metric, unregister_metric)
+from .query import MedoidQuery, SolveReport
+from .planner import ENGINES, Plan, plan_query, resolve_update_plan, solve
+
+__all__ = [
+    "ENGINES",
+    "MedoidQuery",
+    "Metric",
+    "Plan",
+    "SolveReport",
+    "available_metrics",
+    "get_metric",
+    "plan_query",
+    "register_metric",
+    "require_metric",
+    "resolve_update_plan",
+    "solve",
+    "unregister_metric",
+]
+
+
+def _warn_legacy(name: str, hint: str = "") -> None:
+    """Deprecation notice emitted by every legacy entrypoint shim. The
+    message prefix is pinned: the tier-1 suite escalates it to an error
+    when raised from ``repro.*`` internals (pytest.ini), guaranteeing no
+    in-repo code still calls the shims."""
+    warnings.warn(
+        f"repro legacy entrypoint {name}() is deprecated; build a "
+        f"repro.api.MedoidQuery and call repro.api.solve{hint}",
+        DeprecationWarning, stacklevel=3)

@@ -1,0 +1,177 @@
+"""First-class Metric registry — the single capability source (DESIGN.md §10).
+
+Every engine in the repo dispatches on a metric *name*; this module owns
+what those names mean. A :class:`Metric` is a registered dataclass
+carrying the dense pairwise distance function plus the capability flags
+the planner and the engines consult:
+
+* ``has_triangle`` — the triangle inequality holds, so trimed's
+  elimination bound (``E(j) >= |E(i) - d(i, j)|``, paper Eq. 4/5) is a
+  valid lower bound and the exact bound-driven engines are admissible.
+  Non-triangle metrics (``sqeuclidean``, ``cosine``) can only be served
+  exactly by the quadratic scan, or approximately by the sampling
+  bandit (which needs no bounds).
+* ``kernel`` — the Pallas distance tile (``kernels/pairwise._dist_tile``)
+  supports the metric, so the fused-round / sampled-column kernels can
+  run it on device.
+* ``fused_round_fn`` / ``fused_masked_round_fn`` — optional Pallas
+  kernel hooks: drop-in replacements for a whole engine round (see
+  ``repro.kernels.ops.fused_round`` / ``fused_masked_round``). Resolved
+  lazily so importing the registry never imports the kernel stack.
+
+User metrics are first-class: :func:`register_metric` makes a new name
+admissible everywhere its capabilities allow — the host oracle, the
+dense ``pairwise`` path, and every engine built on them — without
+touching any ``repro`` internals. Validation error messages come from
+one place (:func:`require_metric`), so every engine reports admissible
+metrics identically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+__all__ = [
+    "Metric",
+    "available_metrics",
+    "get_metric",
+    "register_metric",
+    "require_metric",
+    "unregister_metric",
+]
+
+
+@dataclass(frozen=True)
+class Metric:
+    """A registered distance metric and its engine capabilities."""
+    name: str
+    pairwise_fn: Callable               # (a: (A,d), b: (B,d)) -> (A,B) dists
+    has_triangle: bool = False          # triangle-bound elimination valid
+    kernel: bool = False                # Pallas distance tile exists
+    fused_round_fn: Callable | None = None         # kernels.ops.fused_round-like
+    fused_masked_round_fn: Callable | None = None  # fused_masked_round-like
+    description: str = ""
+
+
+_REGISTRY: dict[str, Metric] = {}
+_BUILTIN_NAMES = ("l2", "sqeuclidean", "l1", "cosine")
+
+
+def register_metric(
+    name,
+    pairwise_fn: Callable | None = None,
+    *,
+    has_triangle: bool = False,
+    kernel: bool = False,
+    fused_round_fn: Callable | None = None,
+    fused_masked_round_fn: Callable | None = None,
+    description: str = "",
+    overwrite: bool = False,
+) -> Metric:
+    """Register a metric under ``name`` (or pass a ready :class:`Metric`).
+
+    ``pairwise_fn(a, b)`` must return the dense ``(A, B)`` distance block
+    for ``(A, d)`` / ``(B, d)`` operands (jnp-traceable; it runs inside
+    jitted engine rounds). Set ``has_triangle=True`` only if the metric
+    genuinely satisfies the triangle inequality — the exact engines'
+    correctness rests on it. Returns the registered :class:`Metric`.
+    """
+    if isinstance(name, Metric):
+        m = name
+    else:
+        if pairwise_fn is None:
+            raise ValueError("register_metric: pairwise_fn is required")
+        m = Metric(str(name), pairwise_fn, has_triangle=bool(has_triangle),
+                   kernel=bool(kernel), fused_round_fn=fused_round_fn,
+                   fused_masked_round_fn=fused_masked_round_fn,
+                   description=description)
+    if not overwrite and m.name in _REGISTRY:
+        raise ValueError(
+            f"register_metric: metric {m.name!r} is already registered "
+            "(pass overwrite=True to replace it)")
+    _REGISTRY[m.name] = m
+    return m
+
+
+def unregister_metric(name: str) -> None:
+    """Remove a user-registered metric. Built-ins cannot be removed."""
+    if name in _BUILTIN_NAMES:
+        raise ValueError(f"unregister_metric: {name!r} is a built-in metric")
+    _REGISTRY.pop(name, None)
+
+
+def available_metrics(require_triangle: bool = False,
+                      require_kernel: bool = False) -> tuple[str, ...]:
+    """Sorted names of registered metrics matching the capability filter."""
+    return tuple(sorted(
+        name for name, m in _REGISTRY.items()
+        if (m.has_triangle or not require_triangle)
+        and (m.kernel or not require_kernel)))
+
+
+def get_metric(name: str) -> Metric:
+    """Look up a registered metric; canonical error for unknown names."""
+    return require_metric(name)
+
+
+def require_metric(name: str, need_triangle: bool = False,
+                   caller: str | None = None) -> Metric:
+    """The one validation gate every engine uses: resolve ``name`` and
+    (optionally) demand triangle-inequality support, with the admissible
+    set reported from the registry. All metric errors in the repo have
+    this shape."""
+    prefix = f"{caller}: " if caller else ""
+    m = _REGISTRY.get(name)
+    if m is None:
+        raise ValueError(
+            f"{prefix}unknown metric {name!r}; registered metrics: "
+            f"{list(available_metrics())}")
+    if need_triangle and not m.has_triangle:
+        raise ValueError(
+            f"{prefix}metric {name!r} does not satisfy the triangle "
+            "inequality required for exact bound-driven elimination; "
+            f"admissible metrics: {list(available_metrics(True))}")
+    return m
+
+
+# ---------------------------------------------------------------------------
+# built-ins — implementations live in repro.core.distances / repro.kernels;
+# resolved lazily so this module stays import-cycle-free.
+# ---------------------------------------------------------------------------
+def _builtin_pairwise(name):
+    def pw(a, b):
+        from repro.core.distances import pairwise
+        return pairwise(a, b, name)
+    pw.__name__ = f"pairwise_{name}"
+    pw.__qualname__ = pw.__name__
+    return pw
+
+
+def _lazy_kernel_hook(attr):
+    """One stable callable per hook (jit-static identity), resolving the
+    Pallas op on first call."""
+    def hook(*args, **kw):
+        from repro.kernels import ops
+        return getattr(ops, attr)(*args, **kw)
+    hook.__name__ = attr
+    hook.__qualname__ = attr
+    return hook
+
+
+_FUSED_ROUND = _lazy_kernel_hook("fused_round")
+_FUSED_MASKED_ROUND = _lazy_kernel_hook("fused_masked_round")
+
+register_metric(Metric(
+    "l2", _builtin_pairwise("l2"), has_triangle=True, kernel=True,
+    fused_round_fn=_FUSED_ROUND, fused_masked_round_fn=_FUSED_MASKED_ROUND,
+    description="Euclidean distance"))
+register_metric(Metric(
+    "l1", _builtin_pairwise("l1"), has_triangle=True, kernel=True,
+    fused_round_fn=_FUSED_ROUND, fused_masked_round_fn=_FUSED_MASKED_ROUND,
+    description="Manhattan distance"))
+register_metric(Metric(
+    "sqeuclidean", _builtin_pairwise("sqeuclidean"), has_triangle=False,
+    kernel=True, description="squared Euclidean (violates triangle)"))
+register_metric(Metric(
+    "cosine", _builtin_pairwise("cosine"), has_triangle=False, kernel=False,
+    description="1 - cosine similarity (violates triangle)"))

@@ -1,0 +1,521 @@
+"""Query planner: `MedoidQuery` -> `Plan` -> engine -> `SolveReport`.
+
+``plan_query`` inspects N, the metric's registered capabilities, the
+budget/mode, the input kind (array vs host oracle) and the device policy
+to choose among the engines the repo has grown: the paper-faithful host
+``sequential``, the device ``block`` round (DESIGN.md §2), the
+survivor-compacted ``pipelined`` engine (§4), the multi-cluster
+``batched``/``batched_pipelined`` engines (§3/§4), the sampling
+``bandit`` and the bandit+finisher ``hybrid`` (§9), the ``kmedoids``
+driver (§5), host ``topk`` ranking (§6), and the quadratic ``scan``
+safety net for exact queries on non-triangle metrics.
+
+``solve(query)`` executes the plan; ``solve(query, explain=True)``
+returns the :class:`Plan` (engine + reasons) without computing anything;
+``solve(query, plan=...)`` overrides the planner for power users (a
+:class:`Plan` or an engine name from :data:`ENGINES`).
+
+Thresholds (pinned by ``tests/test_api.py`` golden tests): at
+``N <= SMALL_N`` host sequential wins (nothing to amortise a jit compile
+against); up to ``BLOCK_N`` the plain block round is the simplest device
+program; above it survivor compaction pays (the paper's Theorem 3.2
+regime); multi-cluster searches switch to the compaction ladder above
+``BATCHED_PIPELINE_N``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from .metrics import Metric, get_metric, require_metric
+from .query import MedoidQuery, SolveReport
+
+__all__ = ["Plan", "ENGINES", "plan_query", "solve", "resolve_update_plan"]
+
+SMALL_N = 256               # <=: host sequential (no jit warm-up to pay off)
+BLOCK_N = 2048              # <=: block round; above: survivor compaction pays
+BATCHED_PIPELINE_N = 4096   # multi-cluster: ladder pays above this
+
+ENGINES = ("sequential", "block", "pipelined", "batched",
+           "batched_pipelined", "bandit", "hybrid", "kmedoids", "topk",
+           "scan")
+
+
+@dataclass(frozen=True)
+class Plan:
+    """A chosen engine plus the planner's reasoning and derived params."""
+    engine: str
+    reasons: tuple = ()
+    params: dict = field(default_factory=dict)
+
+    def explain(self) -> str:
+        return f"engine={self.engine}: " + "; ".join(self.reasons)
+
+
+def _is_oracle(X) -> bool:
+    return hasattr(X, "row") and hasattr(X, "n")
+
+
+def _query_n(q: MedoidQuery) -> int:
+    return int(q.X.n) if _is_oracle(q.X) else int(np.shape(q.X)[0])
+
+
+def _resolve_kernels(q: MedoidQuery, m: Metric, reasons: list,
+                     need_hook: str | None = None) -> bool:
+    """``use_kernels=None`` means auto: Pallas only where a real Mosaic
+    backend exists and the metric has what the chosen engine needs — a
+    distance tile, plus the fused-round hook named by ``need_hook`` for
+    the engines whose kernel path is a whole-round replacement (on CPU
+    the interpret path is strictly slower than jnp, so auto stays off).
+    An explicit ``use_kernels=True`` is honoured as-is (the engine raises
+    its canonical error if the metric lacks the hook)."""
+    if q.use_kernels is not None:
+        return bool(q.use_kernels)
+    import jax
+    auto = jax.default_backend() == "tpu" and m.kernel
+    if auto and need_hook is not None and getattr(m, need_hook) is None:
+        auto = False
+    if auto:
+        reasons.append("use_kernels auto-on: TPU backend + kernel-capable "
+                       f"metric {m.name!r}")
+    return auto
+
+
+_KERNEL_ENGINES = ("block", "pipelined", "batched", "batched_pipelined",
+                   "kmedoids", "bandit", "hybrid")
+
+
+def _kmedoids_update_params(q: MedoidQuery):
+    """The K-medoids medoid-update derivation, shared by plan_query and
+    the ``plan=`` override path. ``mode="anytime"`` with no nested
+    update query means the paper's §5 relaxation (the budgeted bandit
+    update); a top-level ``budget`` is rejected as ambiguous."""
+    if q.budget is not None:
+        raise ValueError(
+            "solve: a top-level budget on a K-medoids query is ambiguous "
+            "(it is per medoid-update, not total); express it via a "
+            "nested update query — update=MedoidQuery(None, "
+            "mode='anytime', budget=...) (budget = per-cluster elements "
+            "as a fraction of cluster size)")
+    update = q.update
+    if update is None and q.mode == "anytime":
+        update = MedoidQuery(None, mode="anytime")
+    return resolve_update_plan(update, q.metric)
+
+
+def _derive_params(query: MedoidQuery, engine: str, reasons: list,
+                   m: Metric) -> dict:
+    """Engine-dependent derived params — one copy for both the planner
+    and the ``plan=`` string override."""
+    params: dict[str, Any] = {}
+    if engine in _KERNEL_ENGINES:
+        # block/batched/kmedoids kernel paths are whole-round hook
+        # replacements; pipelined/bandit only need the distance tile
+        need_hook = {"block": "fused_round_fn",
+                     "batched": "fused_masked_round_fn",
+                     "kmedoids": "fused_masked_round_fn"}.get(engine)
+        params["use_kernels"] = _resolve_kernels(query, m, reasons,
+                                                 need_hook)
+    if engine == "kmedoids":
+        mu, overrides = _kmedoids_update_params(query)
+        params["medoid_update"] = mu
+        params["update_overrides"] = overrides
+    return params
+
+
+def plan_query(query: MedoidQuery) -> Plan:
+    """Choose an engine for ``query`` (pure decision — nothing executes).
+    Raises the registry's canonical error for unknown metrics and for
+    exact bound-driven tasks on non-triangle metrics with no fallback."""
+    q = query
+    reasons: list[str] = []
+    m = require_metric(q.metric, caller="solve")
+    n = _query_n(q)
+    oracle = _is_oracle(q.X)
+    anytime = q.mode == "anytime" or q.budget is not None
+    params: dict[str, Any] = {"n": n}
+
+    if q.assignments is not None:
+        if anytime:
+            raise ValueError(
+                "solve: anytime per-cluster queries are not supported "
+                "standalone; use k= with an anytime nested update query")
+        require_metric(q.metric, need_triangle=True, caller="solve")
+        if n > BATCHED_PIPELINE_N:
+            reasons.append(f"multi-cluster exact, N={n} > "
+                           f"{BATCHED_PIPELINE_N}: compaction ladder pays")
+            engine = "batched_pipelined"
+        else:
+            reasons.append(f"multi-cluster exact, N={n} <= "
+                           f"{BATCHED_PIPELINE_N}: plain batched rounds")
+            engine = "batched"
+    elif q.k is not None:
+        engine = "kmedoids"
+        mu, _ = _kmedoids_update_params(q)     # validates; params below
+        reasons.append(f"K-medoids clustering (k={q.k}); medoid-update "
+                       f"engine {mu!r} from the nested update query"
+                       if q.update is not None or q.mode == "anytime" else
+                       f"K-medoids clustering (k={q.k}); "
+                       f"medoid-update engine {mu!r}")
+    elif anytime:
+        if oracle:
+            raise ValueError(
+                "solve: anytime mode needs a vector array input (the "
+                "bandit samples columns); got a host oracle")
+        if q.topk is not None:
+            raise ValueError("solve: anytime top-k is not supported")
+        if m.has_triangle:
+            engine = "hybrid"
+            reasons.append(
+                "anytime/budgeted + triangle metric: bandit race ordering "
+                "the field, exact trimed finisher settling it")
+        else:
+            engine = "bandit"
+            reasons.append(
+                f"anytime/budgeted + non-triangle metric {m.name!r}: pure "
+                "sampling race (no exact finisher available)")
+    elif q.topk is not None:
+        if m.has_triangle:
+            engine = "topk"
+            reasons.append("exact top-k ranking: host bound machinery "
+                           "(paper §6 extension)")
+        else:
+            engine = "scan"
+            reasons.append(f"exact top-k on non-triangle metric "
+                           f"{m.name!r}: quadratic scan is the only "
+                           "exact path")
+    elif not m.has_triangle:
+        # the scan executor serves oracle inputs too (row sweep)
+        engine = "scan"
+        reasons.append(
+            f"exact medoid on non-triangle metric {m.name!r}: elimination "
+            "bounds invalid, quadratic scan is the only exact path")
+    elif oracle:
+        engine = "sequential"
+        reasons.append("host oracle input: paper-faithful sequential "
+                       "algorithm (any oracle metric)")
+    elif q.device_policy == "host":
+        engine = "sequential"
+        reasons.append("device_policy='host': paper-faithful sequential")
+    elif n <= SMALL_N and q.device_policy != "device":
+        engine = "sequential"
+        reasons.append(f"N={n} <= {SMALL_N}: host sequential beats jit "
+                       "warm-up")
+    elif n <= BLOCK_N:
+        engine = "block"
+        reasons.append(f"N={n} <= {BLOCK_N}: block-synchronous round")
+    else:
+        engine = "pipelined"
+        reasons.append(f"N={n} > {BLOCK_N}: survivor-compacted pipelined "
+                       "engine (1 X-stream/round)")
+
+    params.update(_derive_params(q, engine, reasons, m))
+    return Plan(engine, tuple(reasons), params)
+
+
+def resolve_update_plan(update, metric: str):
+    """Map a K-medoids nested medoid-update query (or a legacy string)
+    onto ``(medoid_update, option_overrides)`` for the kmedoids driver.
+
+    * ``None`` -> the default exact engine (``"trimed"``; the driver
+      falls back to ``"scan"`` for non-triangle metrics);
+    * a string -> passed through (legacy spelling);
+    * a :class:`MedoidQuery` template (its ``X``/``assignments`` are
+      ignored) -> ``mode="anytime"``/``budget`` selects the budgeted
+      bandit update (the paper's §5 relaxation; ``budget`` is the
+      per-cluster element budget as a fraction of cluster size),
+      otherwise the exact engine, honouring ``engine_opts["engine"]``
+      (``"trimed" | "pipelined" | "scan"``) plus the template's
+      ``block`` / ``block_schedule`` / ``use_kernels``.
+    """
+    if update is None:
+        return "trimed", {}
+    if isinstance(update, str):
+        return update, {}
+    if not isinstance(update, MedoidQuery):
+        raise ValueError(
+            "medoid_update must be a string or a MedoidQuery template, "
+            f"got {type(update).__name__}")
+    # fields the kmedoids driver cannot thread through must not be
+    # silently dropped — reject them loudly
+    unsupported = [
+        name for name, ok in (
+            ("k", update.k is None),
+            ("assignments", update.assignments is None),
+            ("topk", update.topk is None),
+            ("warm_idx", update.warm_idx is None),
+            ("delta", update.delta == 0.01),
+            ("seed", update.seed == 0),
+            ("engine_opts",
+             set(update.engine_opts) <= {"engine"}),
+        ) if not ok]
+    if unsupported:
+        raise ValueError(
+            "nested update query: the K-medoids driver does not support "
+            f"overriding {unsupported} in the medoid-update template; "
+            "supported fields: mode/budget, block, block_schedule, "
+            "use_kernels, engine_opts={'engine': ...}")
+    import dataclasses
+    block_default = next(f.default for f in dataclasses.fields(MedoidQuery)
+                         if f.name == "block")
+    overrides: dict[str, Any] = {}
+    if int(update.block) != block_default:
+        overrides["block"] = int(update.block)
+    if update.block_schedule is not None:
+        overrides["block_schedule"] = update.block_schedule
+    if update.use_kernels is not None:
+        overrides["use_kernels"] = bool(update.use_kernels)
+    mu = update.engine_opts.get("engine")
+    if update.mode == "anytime" or update.budget is not None:
+        if mu not in (None, "bandit"):
+            raise ValueError(
+                f"nested update query: mode='anytime' conflicts with "
+                f"engine={mu!r}")
+        mu = "bandit"
+        if update.budget is not None:
+            overrides["bandit_budget"] = float(update.budget)
+    elif mu is None:
+        mu = "trimed"
+    elif mu not in ("trimed", "pipelined", "scan"):
+        raise ValueError(
+            "nested update query: engine must be 'trimed', 'pipelined', "
+            f"'scan' or 'bandit', got {mu!r}")
+    get_metric(metric)          # canonical unknown-metric error
+    return mu, overrides
+
+
+# ---------------------------------------------------------------------------
+# executors — engine imports are deferred so repro.api never drags the
+# engine stack in at import time (and stays cycle-free with repro.core)
+# ---------------------------------------------------------------------------
+def _report_from_medoid(r, extras=None) -> SolveReport:
+    return SolveReport(
+        indices=np.asarray([r.index], np.int64),
+        energies=np.asarray([r.energy], np.float64),
+        certified=bool(r.certified),
+        elements_computed=float(r.n_computed),
+        n_distances=int(r.n_distances),
+        n_rounds=int(r.n_rounds),
+        ci=0.0 if r.certified else float("nan"),
+        extras={"raw": r, **(extras or {})},
+    )
+
+
+def _run_sequential(q: MedoidQuery, plan: Plan) -> SolveReport:
+    from repro.core.trimed import _trimed_sequential
+    r = _trimed_sequential(q.X, seed=q.seed, metric=q.metric,
+                           **q.engine_opts)
+    return _report_from_medoid(r)
+
+
+def _run_block(q: MedoidQuery, plan: Plan) -> SolveReport:
+    from repro.core.trimed import _trimed_block
+    opts = dict(q.engine_opts)
+    if plan.params.get("use_kernels") and "fused_round_fn" not in opts:
+        hook = get_metric(q.metric).fused_round_fn
+        if hook is None:
+            from .metrics import available_metrics
+            hooked = [n for n in available_metrics()
+                      if get_metric(n).fused_round_fn is not None]
+            raise ValueError(
+                f"use_kernels=True: metric {q.metric!r} has no fused-round "
+                f"kernel hook; metrics with hooks: {hooked}")
+        opts["fused_round_fn"] = hook
+    r = _trimed_block(q.X, seed=q.seed, block=q.block, metric=q.metric,
+                      block_schedule=q.block_schedule, **opts)
+    return _report_from_medoid(r)
+
+
+def _run_pipelined(q: MedoidQuery, plan: Plan) -> SolveReport:
+    from repro.core.pipelined import _trimed_pipelined
+    r = _trimed_pipelined(
+        q.X, seed=q.seed, block=q.block, metric=q.metric,
+        block_schedule=q.block_schedule,
+        use_kernels=bool(plan.params.get("use_kernels")),
+        warm_idx=q.warm_idx, **q.engine_opts)
+    return _report_from_medoid(r)
+
+
+def _run_topk(q: MedoidQuery, plan: Plan) -> SolveReport:
+    from repro.core.trimed import _trimed_topk
+    r = _trimed_topk(q.X, q.topk, seed=q.seed, metric=q.metric,
+                     **q.engine_opts)
+    return SolveReport(
+        indices=np.asarray(r.indices, np.int64),
+        energies=np.asarray(r.energies, np.float64),
+        certified=True,
+        elements_computed=float(r.n_computed),
+        n_distances=int(r.n_computed) * _query_n(q),
+        n_rounds=0, ci=0.0, extras={"raw": r})
+
+
+def _run_scan(q: MedoidQuery, plan: Plan) -> SolveReport:
+    """Quadratic exact scan — blockwise so the (N, N) matrix never
+    materialises (host oracles take a full row sweep); the only exact
+    path for non-triangle metrics."""
+    from repro.core.trimed import MedoidResult, TopKResult
+    if _is_oracle(q.X):
+        n = int(q.X.n)
+        e = np.array([q.X.row(i).sum() for i in range(n)]) / n
+    else:
+        from repro.core.distances import pairwise
+        import jax.numpy as jnp
+        X = jnp.asarray(q.X)
+        n = X.shape[0]
+        blk = int(min(1024, n))
+        sums = [pairwise(X[s:s + blk], X, q.metric).sum(axis=1)
+                for s in range(0, n, blk)]
+        e = np.asarray(jnp.concatenate(sums), np.float64) / n
+    scale = n / max(n - 1, 1)
+    k = int(q.topk) if q.topk is not None else 1
+    order = np.argsort(e, kind="stable")[:k]
+    energies = np.asarray(e[order], np.float64) * scale
+    if q.topk is not None:
+        raw = TopKResult(order.astype(np.int64), energies, n)
+    else:
+        raw = MedoidResult(int(order[0]), float(energies[0]), n, 1, n * n)
+    return SolveReport(
+        indices=order.astype(np.int64),
+        energies=energies,
+        certified=True, elements_computed=float(n),
+        n_distances=n * n, n_rounds=1, ci=0.0, extras={"raw": raw})
+
+
+def _cluster_energies(sums, medoids, assignments, k):
+    """Paper-convention per-cluster energies S_k/(v_k - 1); NaN for empty."""
+    a = np.asarray(assignments)
+    valid = (a >= 0) & (a < k)
+    v = np.bincount(a[valid], minlength=k)
+    e = np.asarray(sums, np.float64) / np.maximum(v - 1, 1)
+    return np.where(np.asarray(medoids) >= 0, e, np.nan)
+
+
+def _run_batched(q: MedoidQuery, plan: Plan) -> SolveReport:
+    from repro.core.batched import _batched_medoids
+    opts = dict(q.engine_opts)
+    if plan.params.get("use_kernels") and "fused_round_fn" not in opts:
+        opts["fused_round_fn"] = get_metric(q.metric).fused_masked_round_fn
+    r = _batched_medoids(q.X, q.assignments, q.k, block=q.block,
+                         metric=q.metric, warm_idx=q.warm_idx,
+                         block_schedule=q.block_schedule, **opts)
+    return SolveReport(
+        indices=np.asarray(r.medoids, np.int64),
+        energies=_cluster_energies(r.sums, r.medoids, q.assignments, q.k),
+        certified=True, elements_computed=float(r.n_computed),
+        n_distances=int(r.n_distances), n_rounds=int(r.n_rounds),
+        ci=0.0, extras={"raw": r})
+
+
+def _run_batched_pipelined(q: MedoidQuery, plan: Plan) -> SolveReport:
+    from repro.core.pipelined import _batched_medoids_pipelined
+    r = _batched_medoids_pipelined(
+        q.X, q.assignments, q.k, block=q.block, metric=q.metric,
+        block_schedule=q.block_schedule,
+        use_kernels=bool(plan.params.get("use_kernels")),
+        warm_idx=q.warm_idx, **q.engine_opts)
+    return SolveReport(
+        indices=np.asarray(r.medoids, np.int64),
+        energies=_cluster_energies(r.sums, r.medoids, q.assignments, q.k),
+        certified=True, elements_computed=float(r.n_computed),
+        n_distances=int(r.n_distances), n_rounds=int(r.n_rounds),
+        ci=0.0, extras={"raw": r})
+
+
+def _run_bandit(q: MedoidQuery, plan: Plan, exact=None) -> SolveReport:
+    from repro.bandit.api import _bandit_medoid
+    r = _bandit_medoid(
+        q.X, budget=q.budget, delta=q.delta, exact=exact, metric=q.metric,
+        seed=q.seed, block=q.block,
+        use_kernels=bool(plan.params.get("use_kernels")), **q.engine_opts)
+    return SolveReport(
+        indices=np.asarray([r.index], np.int64),
+        energies=np.asarray([r.energy], np.float64),
+        certified=bool(r.certified),
+        elements_computed=float(r.n_computed),
+        n_distances=int(r.n_scalars), n_rounds=int(r.n_rounds),
+        ci=float(r.ci),
+        extras={"raw": r, "survivors": r.survivors,
+                "exact_energy": r.exact_energy, **r.extras})
+
+
+def _run_hybrid(q: MedoidQuery, plan: Plan) -> SolveReport:
+    return _run_bandit(q, plan, exact="trimed")
+
+
+def _run_kmedoids(q: MedoidQuery, plan: Plan) -> SolveReport:
+    from repro.core.distances import pairwise
+    from repro.core.trikmeds import kmedoids_batched
+    opts = dict(q.engine_opts)
+    overrides = dict(plan.params.get("update_overrides") or {})
+    mu = plan.params.get("medoid_update", "trimed")
+    kw = dict(block=q.block, block_schedule=q.block_schedule,
+              use_kernels=bool(plan.params.get("use_kernels")))
+    kw.update(overrides)
+    res = kmedoids_batched(q.X, q.k, seed=q.seed, n_iter=q.n_iter,
+                           metric=q.metric, medoid_update=mu, **kw, **opts)
+    # per-cluster energies for the unified schema: one (K, N) pass
+    import jax.numpy as jnp
+    X = jnp.asarray(q.X)
+    d = np.asarray(pairwise(jnp.take(X, jnp.asarray(res.medoids), axis=0),
+                            X, q.metric), np.float64)
+    same = res.assignment[None, :] == np.arange(q.k)[:, None]
+    sums = np.where(same, d, 0.0).sum(axis=1)
+    return SolveReport(
+        indices=np.asarray(res.medoids, np.int64),
+        energies=_cluster_energies(sums, res.medoids, res.assignment, q.k),
+        certified=mu != "bandit",       # bandit update is approximate
+        elements_computed=float(res.n_rows),
+        n_distances=int(res.n_distances), n_rounds=int(res.n_iterations),
+        ci=0.0 if mu != "bandit" else float("nan"),
+        assignment=np.asarray(res.assignment),
+        extras={"raw": res, "total_energy": float(res.energy),
+                "medoid_update": mu})
+
+
+_EXECUTORS = {
+    "sequential": _run_sequential,
+    "block": _run_block,
+    "pipelined": _run_pipelined,
+    "batched": _run_batched,
+    "batched_pipelined": _run_batched_pipelined,
+    "bandit": _run_bandit,
+    "hybrid": _run_hybrid,
+    "kmedoids": _run_kmedoids,
+    "topk": _run_topk,
+    "scan": _run_scan,
+}
+assert set(_EXECUTORS) == set(ENGINES)
+
+
+def solve(query, plan=None, explain=False):
+    """The front door: execute ``query`` and return a :class:`SolveReport`.
+
+    ``plan`` overrides the planner (an engine name from :data:`ENGINES`
+    or a full :class:`Plan`); ``explain=True`` returns the chosen
+    :class:`Plan` — engine, reasons, derived params — without executing.
+    """
+    if not isinstance(query, MedoidQuery):
+        raise TypeError(
+            f"solve expects a MedoidQuery, got {type(query).__name__}")
+    if plan is None:
+        p = plan_query(query)
+    elif isinstance(plan, Plan):
+        p = plan
+    else:
+        if plan not in _EXECUTORS:
+            raise ValueError(
+                f"solve: unknown plan {plan!r}; engines: {list(ENGINES)}")
+        params = _derive_params(
+            query, plan, [], require_metric(query.metric, caller="solve"))
+        p = Plan(plan, (f"user override: plan={plan!r}",), params)
+    if explain:
+        return p
+    if p.engine not in _EXECUTORS:
+        raise ValueError(
+            f"solve: unknown plan engine {p.engine!r}; engines: "
+            f"{list(ENGINES)}")
+    report = _EXECUTORS[p.engine](query, p)
+    report.plan = p
+    return report

@@ -1,0 +1,147 @@
+"""`MedoidQuery` / `SolveReport` — the declarative query schema (DESIGN.md §10).
+
+A :class:`MedoidQuery` describes *what* the caller wants — which data,
+which metric, single medoid / top-k / per-cluster medoids / full
+K-medoids, exact or anytime, under what budget — and never *how*: the
+planner (:mod:`repro.api.planner`) picks the engine. The dataclass is
+registered as a JAX pytree (arrays are leaves, configuration is aux
+data) so queries can ride through transformations and be carried in
+pytree containers.
+
+A :class:`SolveReport` is the one result schema for every engine. It
+subsumes ``MedoidResult`` / ``BatchedMedoidResult`` / ``TopKResult`` and
+the bandit ``(index, estimate, CI)`` triple: ``indices``/``energies``
+are always arrays (length 1 for a single-medoid query), ``certified``
+says whether the answer carries the deterministic triangle-bound
+certificate, ``ci`` the residual half-width (0.0 when certified, NaN
+when unknown), ``elements_computed`` the unified cost
+(:func:`repro.core.distances.elements_computed`), and ``plan`` the
+:class:`~repro.api.planner.Plan` that produced it. The engine's native
+result dataclass rides in ``extras["raw"]`` for the legacy shims.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, fields
+from typing import Any
+
+import numpy as np
+
+import jax
+
+__all__ = ["MedoidQuery", "SolveReport"]
+
+_MODES = ("exact", "anytime")
+_DEVICE_POLICIES = ("auto", "host", "device")
+
+
+@dataclass
+class MedoidQuery:
+    """Declarative medoid query — the single public entry schema.
+
+    Task selection (all exact unless ``mode="anytime"``/``budget``):
+
+    * default — the single medoid of ``X``;
+    * ``topk=k`` — the ``k`` lowest-energy elements, ranked;
+    * ``assignments=a, k=K`` — per-cluster medoids of a fixed assignment;
+    * ``k=K`` (no assignments) — full K-medoids clustering, with
+      ``update`` an optional *nested* MedoidQuery template describing the
+      per-iteration medoid-update search (e.g. ``mode="anytime"`` for the
+      paper's §5 budgeted relaxation).
+
+    ``budget`` is in unified computed elements; setting it (or
+    ``mode="anytime"``) routes to the bandit subsystem. ``device_policy``
+    steers host/device placement; ``engine_opts`` passes power-user knobs
+    straight to the chosen engine (e.g. ``policy=``, ``distance_fn=``,
+    ``eps=``, ``samples_per_round=``). ``X`` may be a ``(N, d)`` array or
+    a host oracle (``VectorOracle`` / ``GraphOracle``).
+    """
+    X: Any
+    metric: str = "l2"
+    k: int | None = None
+    assignments: Any = None
+    topk: int | None = None
+    mode: str = "exact"
+    budget: float | None = None
+    delta: float = 0.01
+    warm_idx: Any = None
+    device_policy: str = "auto"
+    seed: int = 0
+    block: int = 128
+    block_schedule: Any = None
+    use_kernels: bool | None = None
+    n_iter: int = 10
+    update: "MedoidQuery | None" = None
+    engine_opts: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(
+                f"MedoidQuery: mode must be one of {_MODES}, got "
+                f"{self.mode!r}")
+        if self.device_policy not in _DEVICE_POLICIES:
+            raise ValueError(
+                "MedoidQuery: device_policy must be one of "
+                f"{_DEVICE_POLICIES}, got {self.device_policy!r}")
+        if self.assignments is not None and self.k is None:
+            raise ValueError(
+                "MedoidQuery: assignments requires k (the cluster count)")
+        if self.topk is not None and (self.k is not None
+                                      or self.assignments is not None):
+            raise ValueError(
+                "MedoidQuery: topk is exclusive with k/assignments")
+
+    def with_(self, **changes) -> "MedoidQuery":
+        """A copy with the given fields replaced."""
+        cur = {f.name: getattr(self, f.name) for f in fields(self)}
+        cur.update(changes)
+        return MedoidQuery(**cur)
+
+
+_QUERY_LEAVES = ("X", "assignments", "warm_idx", "update")
+_QUERY_AUX = tuple(f for f in (
+    "metric", "k", "topk", "mode", "budget", "delta", "device_policy",
+    "seed", "block", "block_schedule", "use_kernels", "n_iter",
+    "engine_opts"))
+
+
+def _query_flatten(q: MedoidQuery):
+    return (tuple(getattr(q, f) for f in _QUERY_LEAVES),
+            tuple(getattr(q, f) for f in _QUERY_AUX))
+
+
+def _query_unflatten(aux, children):
+    kw = dict(zip(_QUERY_LEAVES, children))
+    kw.update(zip(_QUERY_AUX, aux))
+    return MedoidQuery(**kw)
+
+
+jax.tree_util.register_pytree_node(
+    MedoidQuery, _query_flatten, _query_unflatten)
+
+
+@dataclass
+class SolveReport:
+    """Unified result of :func:`repro.api.solve` — one schema for every
+    engine. ``energies`` are on the paper's ``S/(N-1)`` convention (see
+    ``repro.core.distances``); NaN marks unknown entries (empty clusters,
+    estimate-only modes that report via ``extras``)."""
+    indices: np.ndarray          # (1,) single; (k,) topk / per-cluster
+    energies: np.ndarray         # same shape; paper normalisation
+    certified: bool              # deterministic triangle-bound certificate
+    elements_computed: float     # unified cost (distances.py definition)
+    n_distances: int             # scalar distance evaluations
+    n_rounds: int
+    ci: float                    # residual half-width (0.0 certified; NaN unknown)
+    plan: Any = None             # the Plan that produced this report
+    assignment: np.ndarray | None = None   # K-medoids clustering only
+    extras: dict = field(default_factory=dict)
+
+    @property
+    def index(self) -> int:
+        """The (first) medoid index — the single-query convenience."""
+        return int(self.indices[0])
+
+    @property
+    def energy(self) -> float:
+        """The (first) medoid energy — the single-query convenience."""
+        return float(self.energies[0])

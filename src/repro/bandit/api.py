@@ -34,7 +34,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.pipelined import trimed_pipelined
+from repro.api.metrics import get_metric, require_metric
+from repro.core.pipelined import _trimed_pipelined
 
 from .halving import sequential_halving
 from .racing import ucb_race
@@ -69,7 +70,7 @@ def _paper_scale(n: int) -> float:
     return n / max(n - 1, 1)
 
 
-def bandit_medoid(
+def _bandit_medoid(
     X,
     budget: float | None = None,
     delta: float = 0.01,
@@ -94,10 +95,11 @@ def bandit_medoid(
         raise ValueError(f"exact must be 'trimed' or None, got {exact!r}")
     if engine not in ("ucb", "halving"):
         raise ValueError(f"engine must be 'ucb' or 'halving', got {engine!r}")
-    if exact == "trimed" and metric not in ("l2", "l1"):
-        raise ValueError(
-            "exact='trimed' needs a triangle-inequality metric ('l2' or "
-            f"'l1'); got {metric!r} — use exact=None for the pure bandit")
+    if exact == "trimed":
+        require_metric(metric, need_triangle=True,
+                       caller="bandit_medoid(exact='trimed')")
+    else:
+        require_metric(metric, caller="bandit_medoid")
     if seed_bounds and engine != "ucb":
         raise ValueError(
             "seed_bounds=True requires engine='ucb' — halving keeps no "
@@ -110,8 +112,8 @@ def bandit_medoid(
 
     # tiny inputs: the certified engine is already cheaper than sampling
     if n <= EXACT_FALLBACK_N or (budget is not None and budget >= n):
-        if metric in ("l2", "l1"):
-            r = trimed_pipelined(X, block=block, metric=metric,
+        if get_metric(metric).has_triangle:
+            r = _trimed_pipelined(X, block=block, metric=metric,
                                  use_kernels=use_kernels,
                                  interpret=interpret)
             return BanditMedoidResult(
@@ -182,7 +184,7 @@ def bandit_medoid(
     if seed_bounds and lcb_full is not None:
         l_init = lcb_full                      # probabilistic certificate
     bounds_seeded = l_init is not None         # halving has no LCBs to seed
-    fin = trimed_pipelined(
+    fin = _trimed_pipelined(
         X, block=block, metric=metric, use_kernels=use_kernels,
         interpret=interpret, warm_idx=np.asarray(survivors[:warm_w]),
         l_init=l_init, max_computed=finisher_budget)
@@ -214,3 +216,39 @@ def bandit_medoid(
                 "finisher_rows": int(fin.n_computed),
                 "finisher_certified": bool(fin.certified),
                 "seed_bounds": bounds_seeded})
+
+
+# ---------------------------------------------------------------------------
+# legacy entrypoint shim (deprecated — repro.api.solve is the front door)
+# ---------------------------------------------------------------------------
+def bandit_medoid(
+    X,
+    budget: float | None = None,
+    delta: float = 0.01,
+    exact: str | None = "trimed",
+    engine: str = "ucb",
+    metric: str = "l2",
+    seed: int = 0,
+    samples_per_round: int = 64,
+    survivor_target: int | None = None,
+    block: int = 128,
+    bandit_frac: float = 0.5,
+    seed_bounds: bool = False,
+    use_kernels: bool = False,
+    interpret=None,
+) -> BanditMedoidResult:
+    """**Deprecated** shim over ``solve(MedoidQuery(..., mode="anytime"))``
+    (plan ``"hybrid"`` for ``exact="trimed"``, ``"bandit"`` otherwise)."""
+    from repro.api import MedoidQuery, solve, _warn_legacy
+    _warn_legacy("bandit_medoid", " (mode='anytime')")
+    if exact not in ("trimed", None):
+        raise ValueError(f"exact must be 'trimed' or None, got {exact!r}")
+    q = MedoidQuery(
+        X, metric=metric, mode="anytime", budget=budget, delta=delta,
+        seed=seed, block=block, use_kernels=use_kernels,
+        engine_opts={"engine": engine, "samples_per_round": samples_per_round,
+                     "survivor_target": survivor_target,
+                     "bandit_frac": bandit_frac, "seed_bounds": seed_bounds,
+                     "interpret": interpret})
+    plan = "hybrid" if exact == "trimed" else "bandit"
+    return solve(q, plan=plan).extras["raw"]

@@ -86,8 +86,10 @@ def sequential_halving(
     charged at the padded buffer width (the device computes the padding
     lanes); the kernel path auto-falls back to jnp for metrics the
     sampled-column tile does not cover."""
-    if metric not in ("l2", "sqeuclidean", "l1"):
-        use_kernels = False                   # kernel has no cosine tile
+    from repro.api.metrics import require_metric
+    m = require_metric(metric, caller='sequential_halving')
+    if not m.kernel:
+        use_kernels = False       # no Pallas distance tile for this metric
     X = jnp.asarray(X)
     n = X.shape[0]
     target = max(1, int(target))

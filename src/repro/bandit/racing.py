@@ -167,8 +167,10 @@ def ucb_race(
     ``budget`` in computed elements / the pull cap is exhausted). The
     sampled-column kernel covers the triangle/squared metrics; for the
     others the jnp path runs instead (same estimates)."""
-    if metric not in ("l2", "sqeuclidean", "l1"):
-        use_kernels = False                   # kernel has no cosine tile
+    from repro.api.metrics import require_metric
+    m = require_metric(metric, caller='ucb_race')
+    if not m.kernel:
+        use_kernels = False       # no Pallas distance tile for this metric
     X = jnp.asarray(X)
     n = X.shape[0]
     n_pad = pow2_at_least(n) - n

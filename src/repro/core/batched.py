@@ -195,7 +195,7 @@ def _batched_medoids_entry(X, a, k, block, metric, fused_round_fn, warm,
                                warm=warm_blocks)
 
 
-def batched_medoids(
+def _batched_medoids(
     X,
     assignment,
     k: int,
@@ -217,10 +217,8 @@ def batched_medoids(
     bound is the triangle bound. ``sqeuclidean`` and ``cosine`` (as
     1-cos) violate it and would silently return wrong medoids, so they
     are rejected here."""
-    if metric not in ("l2", "l1"):
-        raise ValueError(
-            "batched_medoids requires a triangle-inequality metric "
-            f"('l2' or 'l1'); got {metric!r}")
+    from repro.api.metrics import require_metric
+    require_metric(metric, need_triangle=True, caller="batched_medoids")
     from .pipelined import resolve_schedule
 
     X = jnp.asarray(X)
@@ -238,3 +236,31 @@ def batched_medoids(
         np.asarray(m), np.asarray(s), int(n_comp), int(n_rounds),
         int(n_comp) * n,
     )
+
+
+# ---------------------------------------------------------------------------
+# legacy entrypoint shim (deprecated — repro.api.solve is the front door)
+# ---------------------------------------------------------------------------
+def batched_medoids(
+    X,
+    assignment,
+    k: int,
+    block: int = 128,
+    metric: str = "l2",
+    fused_round_fn: Callable | None = None,
+    warm_idx=None,
+    block_schedule=None,
+) -> BatchedMedoidResult:
+    """**Deprecated** shim over ``solve(MedoidQuery(..., assignments=...),
+    plan="batched")``."""
+    from repro.api import MedoidQuery, solve, _warn_legacy
+    _warn_legacy("batched_medoids", " (plan='batched')")
+    opts = {}
+    if fused_round_fn is not None:
+        opts["fused_round_fn"] = fused_round_fn
+    # use_kernels pinned False: the legacy kernel opt-in was
+    # fused_round_fn=, and the shim contract is bit-identical results
+    q = MedoidQuery(X, metric=metric, k=k, assignments=assignment,
+                    block=block, block_schedule=block_schedule,
+                    use_kernels=False, warm_idx=warm_idx, engine_opts=opts)
+    return solve(q, plan="batched").extras["raw"]

@@ -39,7 +39,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-_METRICS = ("l2", "sqeuclidean", "l1", "cosine")
+# validation lives in the Metric registry (repro.api.metrics); the
+# builtin names keep fast paths below, anything else resolves through
+# the registry's pairwise_fn
+from repro.api.metrics import require_metric
 
 
 def pow2_at_least(x: int) -> int:
@@ -68,8 +71,10 @@ class VectorOracle:
     """Instrumented distance oracle over a dense ``(N, d)`` array."""
 
     def __init__(self, X: np.ndarray, metric: str = "l2"):
-        if metric not in _METRICS:
-            raise ValueError(f"metric must be one of {_METRICS}, got {metric!r}")
+        # one capability source for the whole repo: the Metric registry
+        # (repro.api.metrics). Registered non-builtin metrics run through
+        # their pairwise_fn as a generic (slower) fallback.
+        self._metric_obj = require_metric(metric, caller="VectorOracle")
         self.X = np.asarray(X, dtype=np.float64)
         self.metric = metric
         self.n = self.X.shape[0]
@@ -98,10 +103,15 @@ class VectorOracle:
             return d2 if self.metric == "sqeuclidean" else np.sqrt(d2)
         if self.metric == "l1":
             return np.abs(self.X - self.X[i]).sum(axis=1)
-        # cosine
-        d = 1.0 - self._Xn @ self._Xn[i]
+        if self.metric == "cosine":
+            d = 1.0 - self._Xn @ self._Xn[i]
+            d[i] = 0.0
+            return np.maximum(d, 0.0)
+        # registered non-builtin metric: generic pairwise_fn fallback
+        d = np.asarray(self._metric_obj.pairwise_fn(self.X[i:i + 1], self.X),
+                       np.float64)[0]
         d[i] = 0.0
-        return np.maximum(d, 0.0)
+        return d
 
     def pair(self, i: int, j: int) -> float:
         self.scalar_distances += 1
@@ -111,7 +121,10 @@ class VectorOracle:
             return float(((self.X[i] - self.X[j]) ** 2).sum())
         if self.metric == "l1":
             return float(np.abs(self.X[i] - self.X[j]).sum())
-        return float(1.0 - self._Xn[i] @ self._Xn[j])
+        if self.metric == "cosine":
+            return float(1.0 - self._Xn[i] @ self._Xn[j])
+        return float(np.asarray(self._metric_obj.pairwise_fn(
+            self.X[i:i + 1], self.X[j:j + 1]))[0, 0])
 
     def subrow(self, i: int, idx: np.ndarray) -> np.ndarray:
         """Distances from ``i`` to the subset ``idx`` (used by trikmeds)."""
@@ -126,8 +139,11 @@ class VectorOracle:
             return d2 if self.metric == "sqeuclidean" else np.sqrt(d2)
         if self.metric == "l1":
             return np.abs(self.X[idx] - self.X[i]).sum(axis=1)
-        d = 1.0 - self._Xn[idx] @ self._Xn[i]
-        return np.maximum(d, 0.0)
+        if self.metric == "cosine":
+            d = 1.0 - self._Xn[idx] @ self._Xn[i]
+            return np.maximum(d, 0.0)
+        return np.asarray(self._metric_obj.pairwise_fn(
+            self.X[i:i + 1], self.X[idx]), np.float64)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -159,7 +175,8 @@ def pairwise(
         an = a / jnp.maximum(jnp.linalg.norm(a, axis=-1, keepdims=True), 1e-30)
         bn = b / jnp.maximum(jnp.linalg.norm(b, axis=-1, keepdims=True), 1e-30)
         return jnp.maximum(1.0 - an @ bn.T, 0.0)
-    raise ValueError(f"unknown metric {metric!r}")
+    # registered non-builtin metric (or the registry's canonical error)
+    return require_metric(metric, caller="pairwise").pairwise_fn(a, b)
 
 
 def exact_energies(X, metric: str = "l2") -> jnp.ndarray:

@@ -54,6 +54,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api.metrics import require_metric
 from repro.kernels import ops as _ops
 
 from .batched import BatchedMedoidResult
@@ -335,7 +336,7 @@ def _stage(X, surv_idx, l_s, alive_s, e_cl, m_cl, pidx, pe, pv,
     return state, surv_idx, live_of(state)
 
 
-def trimed_pipelined(
+def _trimed_pipelined(
     X,
     seed: int = 0,
     block: int = 128,
@@ -375,10 +376,7 @@ def trimed_pipelined(
     Only triangle-inequality metrics are admissible (the elimination
     bound is the triangle bound)."""
     del seed  # selection is deterministic (lowest-bound); kept for API parity
-    if metric not in ("l2", "l1"):
-        raise ValueError(
-            "trimed_pipelined requires a triangle-inequality metric "
-            f"('l2' or 'l1'); got {metric!r}")
+    require_metric(metric, need_triangle=True, caller="trimed_pipelined")
     X = jnp.asarray(X)
     n = X.shape[0]
     if n == 1:
@@ -688,7 +686,7 @@ def _bstage(X, surv_idx, a, v, l_s, alive_s, s_best, m_best,
     return state, surv_idx, live_of(state)
 
 
-def batched_medoids_pipelined(
+def _batched_medoids_pipelined(
     X,
     assignment,
     k: int,
@@ -705,10 +703,8 @@ def batched_medoids_pipelined(
     :func:`repro.core.batched.batched_medoids`; ``warm_idx`` seeds the
     incumbents (inside K-medoids: the previous iteration's medoids) and
     replaces the geometric warm-up."""
-    if metric not in ("l2", "l1"):
-        raise ValueError(
-            "batched_medoids_pipelined requires a triangle-inequality "
-            f"metric ('l2' or 'l1'); got {metric!r}")
+    require_metric(metric, need_triangle=True,
+                   caller="batched_medoids_pipelined")
     X = jnp.asarray(X)
     a = jnp.asarray(assignment)
     n = X.shape[0]
@@ -750,3 +746,57 @@ def batched_medoids_pipelined(
         n_stages=n_stages,
         x_cols_streamed=n_rounds * n + int(fold_cols),
     )
+
+
+# ---------------------------------------------------------------------------
+# legacy entrypoint shims (deprecated — repro.api.solve is the front door)
+# ---------------------------------------------------------------------------
+def trimed_pipelined(
+    X,
+    seed: int = 0,
+    block: int = 128,
+    metric: str = "l2",
+    block_schedule=None,
+    ladder_min: int = LADDER_MIN,
+    use_kernels: bool = False,
+    interpret=None,
+    warm_idx=None,
+    l_init=None,
+    max_computed: int | None = None,
+) -> MedoidResult:
+    """**Deprecated** shim over ``solve(MedoidQuery(...), plan="pipelined")``."""
+    from repro.api import MedoidQuery, solve, _warn_legacy
+    _warn_legacy("trimed_pipelined", " (plan='pipelined')")
+    opts = {"ladder_min": ladder_min, "interpret": interpret}
+    if l_init is not None:
+        opts["l_init"] = l_init
+    if max_computed is not None:
+        opts["max_computed"] = max_computed
+    q = MedoidQuery(X, metric=metric, seed=seed, block=block,
+                    block_schedule=block_schedule, use_kernels=use_kernels,
+                    warm_idx=warm_idx, engine_opts=opts)
+    return solve(q, plan="pipelined").extras["raw"]
+
+
+def batched_medoids_pipelined(
+    X,
+    assignment,
+    k: int,
+    block: int = 128,
+    metric: str = "l2",
+    block_schedule=None,
+    ladder_min: int = LADDER_MIN,
+    use_kernels: bool = False,
+    interpret=None,
+    warm_idx=None,
+) -> BatchedMedoidResult:
+    """**Deprecated** shim over ``solve(MedoidQuery(..., assignments=...),
+    plan="batched_pipelined")``."""
+    from repro.api import MedoidQuery, solve, _warn_legacy
+    _warn_legacy("batched_medoids_pipelined", " (plan='batched_pipelined')")
+    q = MedoidQuery(X, metric=metric, k=k, assignments=assignment,
+                    block=block, block_schedule=block_schedule,
+                    use_kernels=use_kernels, warm_idx=warm_idx,
+                    engine_opts={"ladder_min": ladder_min,
+                                 "interpret": interpret})
+    return solve(q, plan="batched_pipelined").extras["raw"]

@@ -33,6 +33,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api.metrics import get_metric
+
 from .batched import batched_medoids_jit
 from .distances import (VectorOracle, elements_computed, pairwise,
                         sq_norms)
@@ -278,21 +280,29 @@ def _kmedoids_impl(X, k, seed, n_iter, metric, medoid_update, block,
     return m_idx, a, energy, n_rows
 
 
-def _resolve_medoid_update(medoid_update: str, metric: str) -> str:
-    """The trimed engine's elimination bound is the triangle bound, so
-    it is only exact for triangle-inequality metrics. For the others
-    (``sqeuclidean``, ``cosine``) fall back to the quadratic scan, which
-    is metric-agnostic — callers keep exact medoid updates either way.
-    The ``bandit`` update (the paper's relaxed K-medoids, §5) estimates
-    by sampling and needs no triangle inequality, so it survives every
-    metric."""
+def _resolve_medoid_update(medoid_update, metric: str):
+    """Normalise ``medoid_update`` to an engine string plus option
+    overrides. A nested :class:`repro.api.MedoidQuery` template is
+    translated by the planner (``repro.api.resolve_update_plan``); legacy
+    strings pass through. The trimed/pipelined engines' elimination
+    bound is the triangle bound, so they are only exact for metrics the
+    registry marks ``has_triangle`` — for the others fall back to the
+    quadratic scan, which is metric-agnostic, keeping the update exact
+    either way. The ``bandit`` update (the paper's relaxed K-medoids,
+    §5) estimates by sampling and needs no triangle inequality, so it
+    survives every metric."""
+    overrides = {}
+    if not isinstance(medoid_update, str):
+        from repro.api.planner import resolve_update_plan
+        medoid_update, overrides = resolve_update_plan(medoid_update, metric)
     if medoid_update not in ("trimed", "scan", "pipelined", "bandit"):
         raise ValueError(
-            "medoid_update must be 'trimed', 'pipelined', 'bandit' or "
-            f"'scan', got {medoid_update!r}")
-    if medoid_update in ("trimed", "pipelined") and metric not in ("l2", "l1"):
-        return "scan"
-    return medoid_update
+            "medoid_update must be 'trimed', 'pipelined', 'bandit', "
+            f"'scan' or a MedoidQuery template, got {medoid_update!r}")
+    if (medoid_update in ("trimed", "pipelined")
+            and not get_metric(metric).has_triangle):
+        return "scan", overrides
+    return medoid_update, overrides
 
 
 @functools.partial(jax.jit, static_argnames=("metric",))
@@ -312,7 +322,7 @@ def _kmedoids_pipelined_impl(X, k, seed, n_iter, metric, block,
     loop over jitted stage programs rather than one ``lax.scan`` — a few
     host syncs per iteration against an asymptotically smaller
     medoid-update step."""
-    from .pipelined import batched_medoids_pipelined
+    from .pipelined import _batched_medoids_pipelined
 
     n = X.shape[0]
     x_sq = sq_norms(X)
@@ -322,7 +332,7 @@ def _kmedoids_pipelined_impl(X, k, seed, n_iter, metric, block,
     for _ in range(n_iter):
         a, _ = _assign_step(X, m_idx, x_sq, metric)
         n_rows += k
-        res = batched_medoids_pipelined(
+        res = _batched_medoids_pipelined(
             X, a, k, block=block, metric=metric,
             block_schedule=block_schedule, use_kernels=use_kernels,
             warm_idx=np.asarray(m_idx))
@@ -347,7 +357,7 @@ def _kmedoids_bandit_impl(X, k, seed, n_iter, metric, bandit_budget,
     Tiny clusters fall through to the exact engine inside
     ``bandit_medoid`` (its brute-force floor), the same auto-fallback
     discipline as the trimed/pipelined updates."""
-    from repro.bandit import bandit_medoid
+    from repro.bandit.api import _bandit_medoid
 
     n = X.shape[0]
     x_sq = sq_norms(X)
@@ -364,7 +374,7 @@ def _kmedoids_bandit_impl(X, k, seed, n_iter, metric, bandit_budget,
             members = np.flatnonzero(a_h == c)
             if len(members) == 0:
                 continue
-            r = bandit_medoid(
+            r = _bandit_medoid(
                 Xh[members], budget=max(8.0, bandit_budget * len(members)),
                 exact=None, engine="ucb", metric=metric,
                 seed=seed + 1009 * it + c, use_kernels=use_kernels)
@@ -381,12 +391,17 @@ def _kmedoids_bandit_impl(X, k, seed, n_iter, metric, bandit_budget,
 def _engine_round_fn(metric: str, use_kernels: bool):
     if not use_kernels:
         return None
-    if metric != "l2":
-        # the fused-round hook (like trimed_block's) is wired for l2;
-        # other metrics take the jnp round inside the engine instead
-        raise ValueError("use_kernels=True requires metric='l2'")
-    from repro.kernels.ops import fused_masked_round
-    return fused_masked_round
+    hook = get_metric(metric).fused_masked_round_fn
+    if hook is None:
+        # only metrics with a registered fused masked-round hook can run
+        # the Pallas round; others take the jnp round inside the engine
+        from repro.api.metrics import available_metrics
+        hooked = [n for n in available_metrics()
+                  if get_metric(n).fused_masked_round_fn is not None]
+        raise ValueError(
+            f"use_kernels=True: metric {metric!r} has no fused "
+            f"masked-round kernel hook; metrics with hooks: {hooked}")
+    return hook
 
 
 def kmedoids_jax(
@@ -422,11 +437,19 @@ def kmedoids_jax(
     budget as a fraction of the cluster size (DESIGN.md §9); it is the
     only update that trades exactness of the step for cost, and the only
     one valid for non-triangle metrics without falling back to scan.
-    Returns (medoid_indices, assignment, energy).
+    ``medoid_update`` may also be a nested :class:`repro.api.MedoidQuery`
+    template describing the per-iteration update search declaratively
+    (``mode="anytime"``/``budget`` selects the bandit update; its
+    ``block`` / ``block_schedule`` / ``use_kernels`` override this
+    call's). Returns (medoid_indices, assignment, energy).
     """
     from .pipelined import resolve_schedule
 
-    medoid_update = _resolve_medoid_update(medoid_update, metric)
+    medoid_update, ov = _resolve_medoid_update(medoid_update, metric)
+    block = ov.get("block", block)
+    block_schedule = ov.get("block_schedule", block_schedule)
+    use_kernels = ov.get("use_kernels", use_kernels)
+    bandit_budget = ov.get("bandit_budget", bandit_budget)
     block = int(min(block, X.shape[0]))
     if medoid_update == "pipelined":
         m_idx, a, energy, _ = _kmedoids_pipelined_impl(
@@ -463,7 +486,11 @@ def kmedoids_batched(
     computed elements — fractional rows under the bandit update)."""
     from .pipelined import resolve_schedule
 
-    medoid_update = _resolve_medoid_update(medoid_update, metric)
+    medoid_update, ov = _resolve_medoid_update(medoid_update, metric)
+    block = ov.get("block", block)
+    block_schedule = ov.get("block_schedule", block_schedule)
+    use_kernels = ov.get("use_kernels", use_kernels)
+    bandit_budget = ov.get("bandit_budget", bandit_budget)
     X = jnp.asarray(X)
     n = X.shape[0]
     block = int(min(block, n))

@@ -49,7 +49,7 @@ class MedoidResult:
 # ---------------------------------------------------------------------------
 # Paper-faithful sequential algorithm (Alg. 1)
 # ---------------------------------------------------------------------------
-def trimed_sequential(
+def _trimed_sequential(
     oracle_or_X,
     seed: int = 0,
     metric: str = "l2",
@@ -189,7 +189,7 @@ def _trimed_block_jit(X, seed, block, metric, policy, distance_fn,
     return m_cl, e_cl, n_computed, n_rounds
 
 
-def trimed_block(
+def _trimed_block(
     X,
     seed: int = 0,
     block: int = 128,
@@ -221,16 +221,32 @@ def trimed_block(
     )
 
 
-def medoid(X, backend: str = "block", **kw) -> MedoidResult:
-    """Convenience dispatcher used by the public API and examples."""
-    if backend == "block":
-        return trimed_block(X, **kw)
-    if backend == "pipelined":
-        from .pipelined import trimed_pipelined
-        return trimed_pipelined(X, **kw)
-    if backend == "sequential":
-        return trimed_sequential(np.asarray(X), **kw)
-    raise ValueError(f"unknown backend {backend!r}")
+def medoid(X, backend: str = "auto", **kw):
+    """**Deprecated** dispatcher — now a shim over :func:`repro.api.solve`.
+
+    ``backend`` maps to a planner override: ``"auto"`` lets the planner
+    choose; ``"sequential"`` / ``"block"`` / ``"pipelined"`` force the
+    exact engines; ``"bandit"`` routes to the anytime subsystem (returns
+    its :class:`~repro.bandit.api.BanditMedoidResult`, with ``budget=`` /
+    ``delta=`` honoured). Returns the chosen engine's native result."""
+    from repro.api import MedoidQuery, solve, _warn_legacy
+    _warn_legacy("medoid", " (plan=... to force a backend)")
+    known = ("auto", "sequential", "block", "pipelined", "bandit")
+    if backend not in known:
+        raise ValueError(f"unknown backend {backend!r}; expected one of "
+                         f"{known}")
+    q_kw = {f: kw.pop(f) for f in ("metric", "seed", "block",
+                                   "block_schedule", "budget", "delta",
+                                   "use_kernels", "warm_idx")
+            if f in kw}
+    # legacy callers never opted into planner auto-kernels; keep the
+    # pre-redesign jnp default unless they pass use_kernels themselves
+    q_kw.setdefault("use_kernels", False)
+    if backend == "bandit":
+        q_kw["mode"] = "anytime"
+    q = MedoidQuery(X, engine_opts=kw, **q_kw)
+    plan = None if backend in ("auto", "bandit") else backend
+    return solve(q, plan=plan).extras["raw"]
 
 
 # ---------------------------------------------------------------------------
@@ -243,7 +259,7 @@ class TopKResult:
     n_computed: int
 
 
-def trimed_topk(
+def _trimed_topk(
     oracle_or_X,
     k: int,
     seed: int = 0,
@@ -285,3 +301,60 @@ def trimed_topk(
     idx = np.array([i for _, i in best])
     en = np.array([e for e, _ in best]) * n / max(n - 1, 1)
     return TopKResult(idx, en, n_computed)
+
+
+# ---------------------------------------------------------------------------
+# legacy entrypoint shims (deprecated — repro.api.solve is the front door)
+# ---------------------------------------------------------------------------
+def trimed_sequential(
+    oracle_or_X,
+    seed: int = 0,
+    metric: str = "l2",
+    eps: float = 0.0,
+    order: np.ndarray | None = None,
+) -> MedoidResult:
+    """**Deprecated** shim over ``solve(MedoidQuery(...), plan="sequential")``."""
+    from repro.api import MedoidQuery, solve, _warn_legacy
+    _warn_legacy("trimed_sequential", " (plan='sequential')")
+    q = MedoidQuery(oracle_or_X, metric=metric, seed=seed,
+                    engine_opts={"eps": eps, "order": order})
+    return solve(q, plan="sequential").extras["raw"]
+
+
+def trimed_block(
+    X,
+    seed: int = 0,
+    block: int = 128,
+    metric: str = "l2",
+    policy: str = "lowest_bound",
+    distance_fn: Callable | None = None,
+    fused_round_fn: Callable | None = None,
+    block_schedule=None,
+) -> MedoidResult:
+    """**Deprecated** shim over ``solve(MedoidQuery(...), plan="block")``."""
+    from repro.api import MedoidQuery, solve, _warn_legacy
+    _warn_legacy("trimed_block", " (plan='block')")
+    opts = {"policy": policy}
+    if distance_fn is not None:
+        opts["distance_fn"] = distance_fn
+    if fused_round_fn is not None:
+        opts["fused_round_fn"] = fused_round_fn
+    # use_kernels pinned False: the legacy kernel opt-in was
+    # fused_round_fn=, and the shim contract is bit-identical results
+    q = MedoidQuery(X, metric=metric, seed=seed, block=block,
+                    block_schedule=block_schedule, use_kernels=False,
+                    engine_opts=opts)
+    return solve(q, plan="block").extras["raw"]
+
+
+def trimed_topk(
+    oracle_or_X,
+    k: int,
+    seed: int = 0,
+    metric: str = "l2",
+) -> TopKResult:
+    """**Deprecated** shim over ``solve(MedoidQuery(..., topk=k))``."""
+    from repro.api import MedoidQuery, solve, _warn_legacy
+    _warn_legacy("trimed_topk", " (topk=k)")
+    q = MedoidQuery(oracle_or_X, metric=metric, seed=seed, topk=k)
+    return solve(q, plan="topk").extras["raw"]

@@ -1,0 +1,530 @@
+"""The front door: MedoidQuery -> planner -> SolveReport (DESIGN.md §10).
+
+Covers the acceptance criteria of the API redesign:
+
+* planner golden tests across the (N, metric, budget, mode) grid;
+* ``solve`` reaches every engine, with parity against the legacy
+  entrypoints (which must warn exactly once per call and return
+  bit-identical results — they are shims over ``solve``);
+* ``explain=True`` returns the chosen plan and why, without executing;
+* a ``register_metric``-defined Chebyshev metric runs through multiple
+  engines without touching repro internals;
+* the public-API snapshot (``repro.__all__`` + api signatures) so
+  surface changes are deliberate.
+"""
+import inspect
+import warnings
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro
+from repro.api import (ENGINES, MedoidQuery, Plan, SolveReport,
+                       available_metrics, get_metric, plan_query,
+                       register_metric, require_metric, solve,
+                       unregister_metric)
+
+
+def _X(n, d=3, seed=0):
+    return np.random.default_rng(seed).random((n, d)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# planner golden tests — pure decisions, no engine executes (np.empty)
+# ---------------------------------------------------------------------------
+GOLDEN = [
+    # (n, query-kwargs, expected engine)
+    (128, {}, "sequential"),                       # tiny: host wins
+    (256, {}, "sequential"),                       # boundary inclusive
+    (1024, {}, "block"),                           # mid: block round
+    (2048, {}, "block"),                           # boundary inclusive
+    (4096, {}, "pipelined"),                       # large: compaction pays
+    (100_000, {}, "pipelined"),
+    (128, {"device_policy": "device"}, "block"),   # forced off host
+    (100_000, {"device_policy": "host"}, "sequential"),
+    (1024, {"metric": "cosine"}, "scan"),          # no triangle -> scan
+    (1024, {"metric": "sqeuclidean"}, "scan"),
+    (4096, {"budget": 200.0}, "hybrid"),           # budget -> anytime
+    (4096, {"mode": "anytime"}, "hybrid"),
+    (4096, {"budget": 200.0, "metric": "cosine"}, "bandit"),
+    (4096, {"mode": "anytime", "metric": "sqeuclidean"}, "bandit"),
+    (1024, {"topk": 5}, "topk"),
+    (1024, {"topk": 5, "metric": "cosine"}, "scan"),
+    (1024, {"k": 4}, "kmedoids"),
+    (1024, {"k": 4, "update": MedoidQuery(None, mode="anytime")},
+     "kmedoids"),
+]
+
+
+@pytest.mark.parametrize("n,kw,engine", GOLDEN)
+def test_planner_golden(n, kw, engine):
+    X = np.empty((n, 3), np.float32)       # planning must not touch values
+    plan = plan_query(MedoidQuery(X, **kw))
+    assert plan.engine == engine, plan
+    assert plan.reasons                     # every choice carries a why
+
+
+def test_planner_golden_assignments():
+    a = np.zeros(1024, np.int64)
+    p = plan_query(MedoidQuery(np.empty((1024, 3), np.float32),
+                               k=2, assignments=a))
+    assert p.engine == "batched"
+    a = np.zeros(8192, np.int64)
+    p = plan_query(MedoidQuery(np.empty((8192, 3), np.float32),
+                               k=2, assignments=a))
+    assert p.engine == "batched_pipelined"
+
+
+def test_planner_oracle_input_goes_sequential():
+    from repro.core import VectorOracle
+    p = plan_query(MedoidQuery(VectorOracle(_X(64))))
+    assert p.engine == "sequential"
+
+
+def test_oracle_with_non_triangle_metric_scans():
+    from repro.core import VectorOracle
+    X = _X(80, seed=11)
+    q = MedoidQuery(VectorOracle(X, "cosine"), metric="cosine")
+    assert plan_query(q).engine == "scan"
+    rep = solve(q)
+    Xn = X.astype(np.float64)
+    Xn /= np.linalg.norm(Xn, axis=1, keepdims=True)
+    e = np.maximum(1.0 - Xn @ Xn.T, 0.0).sum(1)
+    assert rep.index == int(e.argmin())
+
+
+def test_scan_plan_keeps_shims_working():
+    """The dispatcher shim returns extras['raw'] — the scan executor
+    must provide one (MedoidResult / TopKResult)."""
+    from repro.core import MedoidResult, medoid, trimed_topk
+    X = _X(120)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        r = medoid(X, metric="sqeuclidean")          # auto -> scan
+    assert isinstance(r, MedoidResult) and r.certified
+    rep = solve(MedoidQuery(X, metric="cosine", topk=3))
+    assert rep.plan.engine == "scan"
+    assert rep.extras["raw"].indices.shape == (3,)
+
+
+def test_tpu_auto_kernels_respects_engine_hooks(monkeypatch):
+    """use_kernels=None auto-resolution: on TPU, hook-replacement engines
+    (block/batched/kmedoids) need the fused-round hooks, not just the
+    distance tile; explicit False always wins."""
+    import jax
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    X = np.empty((1024, 3), np.float32)
+    assert plan_query(MedoidQuery(X)).params["use_kernels"] is True
+    assert plan_query(MedoidQuery(X, metric="l1")).params["use_kernels"] \
+        is True                                   # l1 has the hooks
+    # sqeuclidean has a tile but no fused-round hook: auto stays off for
+    # the block engine, on for the tile-only pipelined path
+    p = solve(MedoidQuery(X, metric="sqeuclidean"), plan="block",
+              explain=True)
+    assert p.params["use_kernels"] is False
+    p = solve(MedoidQuery(X, metric="sqeuclidean"), plan="bandit",
+              explain=True)
+    assert p.params["use_kernels"] is True
+    # shims pin use_kernels=False — TPU auto must not flip them
+    p = plan_query(MedoidQuery(X, use_kernels=False))
+    assert p.params["use_kernels"] is False
+
+
+def test_l1_fused_round_hooks_execute():
+    """The l1 Metric registers the fused-round kernel hooks; run them
+    (interpret path on CPU) and check parity with the jnp round."""
+    X = _X(260, seed=13)
+    r_jnp = solve(MedoidQuery(X, metric="l1", block=32), plan="block")
+    r_ker = solve(MedoidQuery(X, metric="l1", block=32, use_kernels=True),
+                  plan="block")
+    assert r_jnp.index == r_ker.index
+
+
+def test_nested_update_unsupported_fields_rejected():
+    with pytest.raises(ValueError, match="does not support overriding"):
+        plan_query(MedoidQuery(
+            _X(64), k=2,
+            update=MedoidQuery(None, mode="anytime", delta=0.1)))
+    with pytest.raises(ValueError, match="does not support overriding"):
+        plan_query(MedoidQuery(
+            _X(64), k=2,
+            update=MedoidQuery(None, engine_opts={"samples_per_round": 8})))
+
+
+def test_kmedoids_toplevel_budget_rejected_anytime_maps_to_bandit():
+    X = _X(200)
+    with pytest.raises(ValueError, match="nested update query"):
+        plan_query(MedoidQuery(X, k=4, budget=100.0))
+    p = plan_query(MedoidQuery(X, k=4, mode="anytime"))
+    assert p.engine == "kmedoids"
+    assert p.params["medoid_update"] == "bandit"
+
+
+def test_explain_returns_plan_without_executing():
+    # N large enough that execution would be very noticeable; empty data
+    # would also produce garbage answers — explain must not compute.
+    q = MedoidQuery(np.empty((10_000_000, 8), np.float32))
+    p = solve(q, explain=True)
+    assert isinstance(p, Plan) and p.engine == "pipelined" and p.reasons
+
+
+def test_plan_override_and_unknown_plan():
+    X = _X(300)
+    rep = solve(MedoidQuery(X), plan="sequential")
+    assert rep.plan.engine == "sequential"
+    with pytest.raises(ValueError, match="unknown plan"):
+        solve(MedoidQuery(X), plan="warp-drive")
+
+
+def test_query_validation():
+    with pytest.raises(ValueError, match="mode"):
+        MedoidQuery(None, mode="fast")
+    with pytest.raises(ValueError, match="assignments requires k"):
+        MedoidQuery(None, assignments=np.zeros(4))
+    with pytest.raises(ValueError, match="topk is exclusive"):
+        MedoidQuery(None, topk=3, k=2)
+    with pytest.raises(ValueError, match="unknown metric"):
+        plan_query(MedoidQuery(_X(32), metric="warp"))
+
+
+# ---------------------------------------------------------------------------
+# solve reaches every engine; parity with the legacy entrypoints
+# ---------------------------------------------------------------------------
+def test_solve_reaches_every_engine():
+    X = _X(300)
+    a = np.random.default_rng(1).integers(0, 3, 300)
+    reached = set()
+    cases = [
+        (MedoidQuery(X[:64]), None),                      # sequential
+        (MedoidQuery(X), None),                           # block
+        (MedoidQuery(X), "pipelined"),
+        (MedoidQuery(X, k=3, assignments=a), None),       # batched
+        (MedoidQuery(X, k=3, assignments=a), "batched_pipelined"),
+        (MedoidQuery(X, budget=64.0), None),              # hybrid
+        (MedoidQuery(X, budget=64.0, metric="cosine"), None),  # bandit
+        (MedoidQuery(X, k=3, n_iter=2), None),            # kmedoids
+        (MedoidQuery(X, topk=4), None),                   # topk
+        (MedoidQuery(X, metric="sqeuclidean"), None),     # scan
+    ]
+    for q, plan in cases:
+        rep = solve(q, plan=plan)
+        assert isinstance(rep, SolveReport)
+        reached.add(rep.plan.engine)
+        assert rep.indices.shape == rep.energies.shape
+        assert rep.elements_computed >= 0
+    assert reached == set(ENGINES)
+
+
+def test_exact_engines_agree_and_match_bruteforce():
+    X = _X(300)
+    e = np.asarray(
+        np.abs(X[:, None, :] - X[None, :, :]) ** 2).sum(-1) ** 0.5
+    ti = int(e.sum(1).argmin())
+    for plan in ("sequential", "block", "pipelined", "scan"):
+        rep = solve(MedoidQuery(X), plan=plan)
+        assert rep.index == ti, plan
+        assert rep.certified
+        assert rep.ci == 0.0
+
+
+def test_hybrid_certified_matches_exact():
+    X = _X(512, seed=5)
+    exact = solve(MedoidQuery(X), plan="pipelined")
+    hyb = solve(MedoidQuery(X, mode="anytime"), plan="hybrid")
+    assert hyb.index == exact.index
+    assert hyb.certified
+    assert hyb.extras["exact_energy"]
+
+
+def test_internal_paths_emit_no_legacy_warnings():
+    """No in-repo code may route through the deprecated shims."""
+    X = _X(300)
+    a = np.random.default_rng(1).integers(0, 3, 300)
+    with warnings.catch_warnings():
+        warnings.filterwarnings("error", message="repro legacy entrypoint")
+        solve(MedoidQuery(X))
+        solve(MedoidQuery(X), plan="pipelined")
+        solve(MedoidQuery(X, budget=64.0))
+        solve(MedoidQuery(X, k=3, assignments=a))
+        solve(MedoidQuery(X, k=3, n_iter=2))
+        solve(MedoidQuery(
+            X, k=3, n_iter=2,
+            update=MedoidQuery(None, mode="anytime", budget=0.5)))
+
+
+# --- shim layer -------------------------------------------------------------
+def _assert_warns_once(w):
+    msgs = [x for x in w if issubclass(x.category, DeprecationWarning)
+            and "repro legacy entrypoint" in str(x.message)]
+    assert len(msgs) == 1, [str(x.message) for x in w]
+
+
+def test_shim_trimed_sequential():
+    from repro.core import trimed_sequential
+    X = _X(96)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r = trimed_sequential(X, seed=3)
+    _assert_warns_once(w)
+    rep = solve(MedoidQuery(X, seed=3,
+                            engine_opts={"eps": 0.0, "order": None}),
+                plan="sequential")
+    assert r == rep.extras["raw"]
+
+
+def test_shim_trimed_block():
+    from repro.core import trimed_block
+    X = _X(300)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r = trimed_block(X, block=32, seed=1)
+    _assert_warns_once(w)
+    rep = solve(MedoidQuery(X, block=32, seed=1,
+                            engine_opts={"policy": "lowest_bound"}),
+                plan="block")
+    assert r == rep.extras["raw"]
+
+
+def test_shim_trimed_pipelined():
+    from repro.core import trimed_pipelined
+    X = _X(300)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r = trimed_pipelined(X, block=32)
+    _assert_warns_once(w)
+    rep = solve(MedoidQuery(X, block=32), plan="pipelined")
+    assert r == rep.extras["raw"]
+
+
+def test_shim_trimed_topk():
+    from repro.core import trimed_topk
+    X = _X(200)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r = trimed_topk(X, 5, seed=2)
+    _assert_warns_once(w)
+    rep = solve(MedoidQuery(X, topk=5, seed=2), plan="topk")
+    raw = rep.extras["raw"]
+    assert np.array_equal(r.indices, raw.indices)
+    assert np.array_equal(r.energies, raw.energies)
+    assert r.n_computed == raw.n_computed
+
+
+def test_shim_batched_medoids():
+    from repro.core import batched_medoids
+    X = _X(256)
+    a = np.random.default_rng(2).integers(0, 4, 256)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r = batched_medoids(X, a, 4, block=32)
+    _assert_warns_once(w)
+    rep = solve(MedoidQuery(X, k=4, assignments=a, block=32), plan="batched")
+    raw = rep.extras["raw"]
+    assert np.array_equal(r.medoids, raw.medoids)
+    assert np.array_equal(r.sums, raw.sums)
+    assert r.n_computed == raw.n_computed
+
+
+def test_shim_batched_medoids_pipelined():
+    from repro.core import batched_medoids_pipelined
+    X = _X(256)
+    a = np.random.default_rng(2).integers(0, 4, 256)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r = batched_medoids_pipelined(X, a, 4, block=32)
+    _assert_warns_once(w)
+    rep = solve(MedoidQuery(X, k=4, assignments=a, block=32),
+                plan="batched_pipelined")
+    raw = rep.extras["raw"]
+    assert np.array_equal(r.medoids, raw.medoids)
+    assert np.array_equal(r.sums, raw.sums)
+
+
+def test_shim_bandit_medoid():
+    from repro.bandit import bandit_medoid
+    X = _X(400, seed=7)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r = bandit_medoid(X, budget=80.0, seed=4)
+    _assert_warns_once(w)
+    rep = solve(MedoidQuery(X, budget=80.0, seed=4,
+                            engine_opts={"engine": "ucb",
+                                         "samples_per_round": 64,
+                                         "survivor_target": None,
+                                         "bandit_frac": 0.5,
+                                         "seed_bounds": False,
+                                         "interpret": None}),
+                plan="hybrid")
+    raw = rep.extras["raw"]
+    assert r.index == raw.index and r.energy == raw.energy
+    assert r.n_computed == raw.n_computed and r.certified == raw.certified
+
+
+def test_shim_medoid_dispatcher_backends():
+    from repro.bandit.api import BanditMedoidResult
+    from repro.core import MedoidResult, medoid
+    X = _X(300)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r_auto = medoid(X)
+        r_pipe = medoid(X, backend="pipelined")
+        r_band = medoid(X, backend="bandit", budget=64.0)
+    assert isinstance(r_auto, MedoidResult)
+    assert isinstance(r_pipe, MedoidResult)
+    assert isinstance(r_band, BanditMedoidResult)     # new: anytime backend
+    assert r_auto.index == r_pipe.index
+    assert sum("repro legacy entrypoint" in str(x.message) for x in w) == 3
+    with pytest.raises(ValueError, match="unknown backend"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            medoid(X, backend="warp")
+
+
+# ---------------------------------------------------------------------------
+# metric registry
+# ---------------------------------------------------------------------------
+def test_registry_capabilities_are_single_source():
+    assert set(available_metrics()) >= {"l2", "l1", "sqeuclidean", "cosine"}
+    assert set(available_metrics(require_triangle=True)) == {"l1", "l2"}
+    assert get_metric("l2").kernel and get_metric("l2").has_triangle
+    assert not get_metric("cosine").has_triangle
+    # matching error messages from the one gate, everywhere
+    from repro.core import VectorOracle
+    from repro.core.distances import pairwise
+    with pytest.raises(ValueError, match="unknown metric 'warp'"):
+        VectorOracle(_X(8), "warp")
+    with pytest.raises(ValueError, match="unknown metric 'warp'"):
+        pairwise(jnp.ones((2, 2)), jnp.ones((2, 2)), "warp")
+    with pytest.raises(ValueError, match="triangle"):
+        solve(MedoidQuery(_X(32), metric="cosine"), plan="pipelined")
+    with pytest.raises(ValueError, match="triangle"):
+        solve(MedoidQuery(_X(32), metric="sqeuclidean", mode="anytime"),
+              plan="hybrid")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_metric("l2", lambda a, b: None)
+    with pytest.raises(ValueError, match="built-in"):
+        unregister_metric("l2")
+
+
+@pytest.fixture
+def chebyshev_metric():
+    def chebyshev(a, b):
+        return jnp.max(jnp.abs(a[:, None, :] - b[None, :, :]), axis=-1)
+    register_metric("chebyshev", chebyshev, has_triangle=True,
+                    description="L-infinity")
+    yield "chebyshev"
+    unregister_metric("chebyshev")
+
+
+def test_user_metric_through_engines(chebyshev_metric):
+    """A user-registered metric runs through multiple engines via the
+    public surface only — no repro internals touched."""
+    X = _X(220, d=4, seed=9)
+    D = np.abs(X[:, None, :] - X[None, :, :]).max(-1)
+    ti = int(D.sum(1).argmin())
+    r_seq = solve(MedoidQuery(X, metric="chebyshev"), plan="sequential")
+    r_blk = solve(MedoidQuery(X, metric="chebyshev", block=32), plan="block")
+    r_pipe = solve(MedoidQuery(X, metric="chebyshev", block=32),
+                   plan="pipelined")
+    assert r_seq.index == r_blk.index == r_pipe.index == ti
+    # planner treats it like any triangle metric
+    assert plan_query(MedoidQuery(X, metric="chebyshev")).engine == \
+        "sequential"
+    assert "chebyshev" in available_metrics(require_triangle=True)
+
+
+def test_user_metric_non_triangle_gets_scan(chebyshev_metric):
+    register_metric("halfsq", lambda a, b: jnp.sum(
+        (a[:, None, :] - b[None, :, :]) ** 2, -1), has_triangle=False)
+    try:
+        p = plan_query(MedoidQuery(_X(100), metric="halfsq"))
+        assert p.engine == "scan"
+    finally:
+        unregister_metric("halfsq")
+
+
+# ---------------------------------------------------------------------------
+# K-medoids nested update query
+# ---------------------------------------------------------------------------
+def test_kmedoids_nested_anytime_update():
+    X = _X(400, seed=3)
+    rep = solve(MedoidQuery(
+        X, k=4, n_iter=3,
+        update=MedoidQuery(None, mode="anytime", budget=0.5)))
+    assert rep.plan.params["medoid_update"] == "bandit"
+    assert not rep.certified and np.isnan(rep.ci)
+    assert rep.assignment is not None and rep.assignment.shape == (400,)
+    exact = solve(MedoidQuery(X, k=4, n_iter=3))
+    assert exact.certified and exact.plan.params["medoid_update"] == "trimed"
+    # the relaxation trades a little energy for fewer computed elements
+    assert rep.extras["total_energy"] <= 1.10 * exact.extras["total_energy"]
+
+
+def test_kmedoids_legacy_string_update_still_works():
+    from repro.core import kmedoids_batched
+    X = _X(256)
+    r1 = kmedoids_batched(X, 3, n_iter=2, medoid_update="trimed")
+    r2 = kmedoids_batched(
+        X, 3, n_iter=2,
+        medoid_update=MedoidQuery(None))       # nested exact template
+    assert np.array_equal(r1.medoids, r2.medoids)
+
+
+# ---------------------------------------------------------------------------
+# public-API snapshot — surface changes must be deliberate
+# ---------------------------------------------------------------------------
+EXPECTED_TOP_LEVEL = {
+    "ENGINES", "MedoidQuery", "Metric", "Plan", "SolveReport",
+    "available_metrics", "get_metric", "plan_query", "register_metric",
+    "solve", "unregister_metric",
+}
+
+EXPECTED_SIGNATURES = {
+    "solve": "(query, plan=None, explain=False)",
+    "plan_query": "(query: 'MedoidQuery') -> 'Plan'",
+    "require_metric": ("(name: 'str', need_triangle: 'bool' = False, "
+                       "caller: 'str | None' = None) -> 'Metric'"),
+}
+
+EXPECTED_QUERY_FIELDS = [
+    "X", "metric", "k", "assignments", "topk", "mode", "budget", "delta",
+    "warm_idx", "device_policy", "seed", "block", "block_schedule",
+    "use_kernels", "n_iter", "update", "engine_opts",
+]
+
+EXPECTED_REPORT_FIELDS = [
+    "indices", "energies", "certified", "elements_computed", "n_distances",
+    "n_rounds", "ci", "plan", "assignment", "extras",
+]
+
+
+def test_public_api_snapshot():
+    assert set(repro.__all__) == EXPECTED_TOP_LEVEL
+    for name in EXPECTED_TOP_LEVEL:
+        assert getattr(repro, name) is not None
+    assert str(inspect.signature(solve)) == EXPECTED_SIGNATURES["solve"]
+    assert str(inspect.signature(plan_query)) == \
+        EXPECTED_SIGNATURES["plan_query"]
+    assert str(inspect.signature(require_metric)) == \
+        EXPECTED_SIGNATURES["require_metric"]
+    assert list(inspect.signature(MedoidQuery).parameters) == \
+        EXPECTED_QUERY_FIELDS
+    assert list(inspect.signature(SolveReport).parameters) == \
+        EXPECTED_REPORT_FIELDS
+    assert ENGINES == ("sequential", "block", "pipelined", "batched",
+                       "batched_pipelined", "bandit", "hybrid", "kmedoids",
+                       "topk", "scan")
+
+
+def test_query_is_a_pytree():
+    import jax
+    q = MedoidQuery(jnp.ones((8, 2)), metric="l1", block=64)
+    leaves = jax.tree_util.tree_leaves(q)
+    assert any(getattr(x, "shape", None) == (8, 2) for x in leaves)
+    q2 = jax.tree_util.tree_map(lambda x: x, q)
+    assert q2.metric == "l1" and q2.block == 64
