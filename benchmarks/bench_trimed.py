@@ -86,6 +86,25 @@ def _run_pipelined_warm(X, block, kernels=False):
     return _run_pipelined(X, block, kernels, schedule="geometric")
 
 
+def _run_sharded(X, block, kernels=False):
+    """The multi-device sharded engine (DESIGN.md §11); only swept when
+    more than one device is visible (e.g. under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``). Counters
+    are bit-identical to the pipelined row — that equality is itself
+    part of the bench contract (the index assert below)."""
+    from repro.api import MedoidQuery
+
+    q = MedoidQuery(X, block=block, use_kernels=kernels,
+                    device_policy="sharded")
+    rep, dt = timed_solve(q, plan="sharded")
+    r = rep.extras["raw"]
+    spr = r.x_cols_streamed / max(r.n_rounds * len(X), 1)
+    return dict(wall_s=dt, n_computed=r.n_computed, n_rounds=r.n_rounds,
+                n_distances=r.n_distances,
+                full_x_streams_per_round=1.0,
+                x_streams_per_round=round(spr, 4), index=r.index)
+
+
 def run(quick: bool = True, mode: str | None = None):
     """Returns ``(rows, csv_path)`` like every bench; also writes
     ``BENCH_trimed.json``."""
@@ -109,6 +128,9 @@ def run(quick: bool = True, mode: str | None = None):
         if n >= kernel_min:                    # Pallas interpret path
             cells += [("block-kernels", _run_block, True),
                       ("pipelined-kernels", _run_pipelined, True)]
+        import jax
+        if jax.device_count() > 1:             # multi-device hosts only
+            cells += [("sharded", _run_sharded, False)]
         indices = {}
         for name, fn, kernels in cells:
             rec = {"engine": name, "n": n, "d": d,

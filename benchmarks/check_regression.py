@@ -1,0 +1,104 @@
+"""CI perf-regression gate over the benchmark smoke outputs.
+
+    PYTHONPATH=src python -m benchmarks.check_regression
+
+Compares the smoke-mode benchmark JSONs (written under ``results/`` by
+``python -m benchmarks.run --smoke``) against the committed baselines in
+``benchmarks/baselines/`` and **fails** (exit 1) when a tracked cost
+counter regresses by more than ``TOLERANCE``. Wall-clock is deliberately
+not gated (CI machines are noisy); the gated fields are the
+deterministic work counters the engines are built around:
+
+* ``bench_trimed``: ``full_x_streams_per_round`` (the HBM-traffic model
+  — the pipelined engine's 1-stream-per-round claim) and ``n_computed``
+  (computed elements, the paper's cost axis);
+* ``bench_bandit``: ``elements`` (unified computed elements per engine
+  cell).
+
+Records are matched by their identity fields; a record present in the
+baseline but missing from the current run also fails (an engine cell
+silently dropping out of the sweep is a regression of coverage, not a
+win). Regenerate the baselines deliberately with::
+
+    PYTHONPATH=src python -m benchmarks.run --smoke
+    cp results/BENCH_trimed_smoke.json results/BENCH_bandit_smoke.json \\
+        benchmarks/baselines/
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+BASELINE_DIR = Path(__file__).resolve().parent / "baselines"
+RESULTS_DIR = ROOT / "results"
+
+TOLERANCE = 0.10          # >10% growth of a cost counter fails the gate
+
+# file -> (identity fields, gated cost fields)
+GATES = {
+    "BENCH_trimed_smoke.json": (("engine", "n", "d"),
+                                ("full_x_streams_per_round", "n_computed")),
+    "BENCH_bandit_smoke.json": (("engine", "n", "d", "budget_elements"),
+                                ("elements",)),
+}
+
+
+def _index(records, id_fields):
+    return {tuple(r.get(f) for f in id_fields): r for r in records}
+
+
+def check_file(name: str, id_fields, cost_fields) -> list[str]:
+    failures: list[str] = []
+    base_path = BASELINE_DIR / name
+    cur_path = RESULTS_DIR / name
+    if not base_path.exists():
+        return [f"{name}: missing committed baseline {base_path}"]
+    if not cur_path.exists():
+        return [f"{name}: missing current smoke output {cur_path} "
+                "(run `python -m benchmarks.run --smoke` first)"]
+    base = json.loads(base_path.read_text())
+    cur = json.loads(cur_path.read_text())
+    if base.get("schema") != cur.get("schema"):
+        failures.append(f"{name}: schema drift "
+                        f"{base.get('schema')} -> {cur.get('schema')}")
+    cur_by_id = _index(cur.get("records", []), id_fields)
+    for key, b in _index(base.get("records", []), id_fields).items():
+        c = cur_by_id.get(key)
+        ident = dict(zip(id_fields, key))
+        if c is None:
+            failures.append(f"{name}: baseline record {ident} missing "
+                            "from the current run")
+            continue
+        for f in cost_fields:
+            bv, cv = b.get(f), c.get(f)
+            if bv is None or cv is None:
+                failures.append(f"{name}: {ident} field {f!r} absent "
+                                f"(baseline={bv}, current={cv})")
+                continue
+            if float(cv) > float(bv) * (1.0 + TOLERANCE) + 1e-12:
+                failures.append(
+                    f"{name}: {ident} {f} regressed "
+                    f"{bv} -> {cv} (>{TOLERANCE:.0%} over baseline)")
+    return failures
+
+
+def main(argv=None) -> int:
+    del argv
+    failures: list[str] = []
+    for name, (id_fields, cost_fields) in GATES.items():
+        failures.extend(check_file(name, id_fields, cost_fields))
+    if failures:
+        print("PERF REGRESSION GATE: FAIL")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    n = len(GATES)
+    print(f"PERF REGRESSION GATE: OK ({n} benchmark files within "
+          f"{TOLERANCE:.0%} of committed baselines)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,7 +20,9 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: tiny trimed + bandit sweeps (interpret "
                          "path), validates BENCH_trimed.json and "
-                         "BENCH_bandit.json schemas + imports")
+                         "BENCH_bandit.json schemas + imports; the smoke "
+                         "JSONs land in results/ and feed the "
+                         "benchmarks.check_regression CI gate")
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
     quick = not args.full

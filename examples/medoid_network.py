@@ -13,7 +13,6 @@ import numpy as np
 
 from repro.api import MedoidQuery, solve
 from repro.core import sensor_network
-from repro.core.distributed import trimed_sharded
 
 # --- graph medoid (shortest-path metric, Dijkstra oracle): an oracle
 # input routes to the paper-faithful host sequential engine ---
@@ -24,10 +23,14 @@ print(f"sensor network: |V|={g.n}, medoid node={r.index} "
       f"Dijkstra sweeps={r.elements_computed:.0f} "
       f"({g.n / r.elements_computed:.0f}x fewer than brute force)")
 
-# --- distributed vector medoid on an 8-way data-parallel mesh ---
+# --- distributed vector medoid on an 8-way data-parallel mesh
+# (DESIGN.md §11: a production mesh axis named "data") ---
 mesh = jax.make_mesh((8,), ("data",),
                      axis_types=(jax.sharding.AxisType.Auto,))
 X = np.random.default_rng(0).random((65536, 3)).astype(np.float32)
-rs = trimed_sharded(X, mesh, axis="data", block=128)
-print(f"sharded trimed over {mesh.size} devices: medoid={rs.index} "
-      f"computed={rs.n_computed} rounds={rs.n_rounds}")
+rs = solve(MedoidQuery(X, block=128, device_policy="sharded", mesh=mesh,
+                       engine_opts={"axis": "data"}))
+print(f"sharded trimed over {rs.plan.params['n_shards']} devices: "
+      f"medoid={rs.index} computed={rs.elements_computed:.0f} "
+      f"rounds={rs.n_rounds} "
+      f"per-shard={rs.plan.params['per_shard_elements']}")

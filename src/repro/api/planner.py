@@ -5,10 +5,12 @@ budget/mode, the input kind (array vs host oracle) and the device policy
 to choose among the engines the repo has grown: the paper-faithful host
 ``sequential``, the device ``block`` round (DESIGN.md §2), the
 survivor-compacted ``pipelined`` engine (§4), the multi-cluster
-``batched``/``batched_pipelined`` engines (§3/§4), the sampling
+``batched``/``batched_pipelined`` engines (§3/§4), the multi-device
+``sharded``/``batched_sharded`` engines (§11), the sampling
 ``bandit`` and the bandit+finisher ``hybrid`` (§9), the ``kmedoids``
 driver (§5), host ``topk`` ranking (§6), and the quadratic ``scan``
-safety net for exact queries on non-triangle metrics.
+safety net for exact queries on non-triangle metrics (itself sharded
+under ``device_policy="sharded"``).
 
 ``solve(query)`` executes the plan; ``solve(query, explain=True)``
 returns the :class:`Plan` (engine + reasons) without computing anything;
@@ -37,10 +39,11 @@ __all__ = ["Plan", "ENGINES", "plan_query", "solve", "resolve_update_plan"]
 SMALL_N = 256               # <=: host sequential (no jit warm-up to pay off)
 BLOCK_N = 2048              # <=: block round; above: survivor compaction pays
 BATCHED_PIPELINE_N = 4096   # multi-cluster: ladder pays above this
+SHARDED_N = 4096            # auto-shard above this when >1 device is up
 
-ENGINES = ("sequential", "block", "pipelined", "batched",
-           "batched_pipelined", "bandit", "hybrid", "kmedoids", "topk",
-           "scan")
+ENGINES = ("sequential", "block", "pipelined", "sharded", "batched",
+           "batched_pipelined", "batched_sharded", "bandit", "hybrid",
+           "kmedoids", "topk", "scan")
 
 
 @dataclass(frozen=True)
@@ -83,15 +86,41 @@ def _resolve_kernels(q: MedoidQuery, m: Metric, reasons: list,
     return auto
 
 
-_KERNEL_ENGINES = ("block", "pipelined", "batched", "batched_pipelined",
-                   "kmedoids", "bandit", "hybrid")
+_KERNEL_ENGINES = ("block", "pipelined", "sharded", "batched",
+                   "batched_pipelined", "batched_sharded", "kmedoids",
+                   "bandit", "hybrid")
+
+_SHARDED_ENGINES = ("sharded", "batched_sharded")
+
+
+def _device_count() -> int:
+    import jax
+    return jax.device_count()
+
+
+def _shard_params(q: MedoidQuery):
+    """Resolved (shard count, mesh axis) for a sharded plan: the query's
+    mesh if given, else the default 1-axis mesh the executor will build
+    (largest REDUCE_CHUNKS divisor <= the local device count)."""
+    from repro.core.distributed import AXIS, shard_count_for
+    axis = q.engine_opts.get("axis", AXIS)
+    if q.mesh is not None:
+        if axis not in q.mesh.shape:
+            raise ValueError(
+                f"solve: mesh has no axis {axis!r} (axes: "
+                f"{list(q.mesh.shape)}); name the element axis via "
+                "engine_opts={'axis': ...}")
+        return int(q.mesh.shape[axis]), axis
+    return shard_count_for(_device_count()), axis
 
 
 def _kmedoids_update_params(q: MedoidQuery):
     """The K-medoids medoid-update derivation, shared by plan_query and
     the ``plan=`` override path. ``mode="anytime"`` with no nested
     update query means the paper's §5 relaxation (the budgeted bandit
-    update); a top-level ``budget`` is rejected as ambiguous."""
+    update); a top-level ``budget`` is rejected as ambiguous.
+    ``device_policy="sharded"`` promotes the exact update engines to the
+    sharded multi-cluster engine (DESIGN.md §11)."""
     if q.budget is not None:
         raise ValueError(
             "solve: a top-level budget on a K-medoids query is ambiguous "
@@ -102,7 +131,16 @@ def _kmedoids_update_params(q: MedoidQuery):
     update = q.update
     if update is None and q.mode == "anytime":
         update = MedoidQuery(None, mode="anytime")
-    return resolve_update_plan(update, q.metric)
+    mu, overrides = resolve_update_plan(update, q.metric)
+    if q.device_policy == "sharded":
+        if mu == "bandit":
+            raise ValueError(
+                "solve: device_policy='sharded' does not support the "
+                "bandit medoid-update (the sampling race is single-"
+                "device); drop the anytime update or the sharded policy")
+        if mu in ("trimed", "pipelined"):
+            mu = "sharded"
+    return mu, overrides
 
 
 def _derive_params(query: MedoidQuery, engine: str, reasons: list,
@@ -112,16 +150,28 @@ def _derive_params(query: MedoidQuery, engine: str, reasons: list,
     params: dict[str, Any] = {}
     if engine in _KERNEL_ENGINES:
         # block/batched/kmedoids kernel paths are whole-round hook
-        # replacements; pipelined/bandit only need the distance tile
+        # replacements; pipelined/sharded/bandit only need the distance
+        # tile (the sharded engine reuses the masked kernels)
         need_hook = {"block": "fused_round_fn",
                      "batched": "fused_masked_round_fn",
                      "kmedoids": "fused_masked_round_fn"}.get(engine)
         params["use_kernels"] = _resolve_kernels(query, m, reasons,
                                                  need_hook)
+    if engine in _SHARDED_ENGINES or (
+            engine == "scan" and query.device_policy == "sharded"):
+        n_shards, axis = _shard_params(query)
+        params["n_shards"] = n_shards
+        params["mesh_axis"] = axis
+        if engine == "scan":
+            params["sharded"] = True
     if engine == "kmedoids":
         mu, overrides = _kmedoids_update_params(query)
         params["medoid_update"] = mu
         params["update_overrides"] = overrides
+        if mu == "sharded":
+            n_shards, axis = _shard_params(query)
+            params["n_shards"] = n_shards
+            params["mesh_axis"] = axis
     return params
 
 
@@ -137,13 +187,38 @@ def plan_query(query: MedoidQuery) -> Plan:
     anytime = q.mode == "anytime" or q.budget is not None
     params: dict[str, Any] = {"n": n}
 
+    sharded_req = q.device_policy == "sharded"
+    if sharded_req:
+        if oracle:
+            raise ValueError(
+                "solve: device_policy='sharded' needs a vector array "
+                "input (host oracles cannot be device-sharded)")
+        if anytime:
+            raise ValueError(
+                "solve: device_policy='sharded' does not combine with "
+                "anytime/budgeted mode (the bandit race is single-"
+                "device); drop one of the two")
+        if q.topk is not None:
+            raise ValueError(
+                "solve: device_policy='sharded' does not support topk "
+                "(the ranking engine is host-side)")
+    auto_shard = (q.device_policy == "auto" and not oracle
+                  and n > SHARDED_N and _device_count() > 1)
+
     if q.assignments is not None:
         if anytime:
             raise ValueError(
                 "solve: anytime per-cluster queries are not supported "
                 "standalone; use k= with an anytime nested update query")
         require_metric(q.metric, need_triangle=True, caller="solve")
-        if n > BATCHED_PIPELINE_N:
+        if sharded_req or auto_shard:
+            reasons.append(
+                "multi-cluster exact, "
+                + ("device_policy='sharded'" if sharded_req else
+                   f"N={n} > {SHARDED_N} with {_device_count()} devices")
+                + ": column-sharded batched engine (DESIGN.md §11)")
+            engine = "batched_sharded"
+        elif n > BATCHED_PIPELINE_N:
             reasons.append(f"multi-cluster exact, N={n} > "
                            f"{BATCHED_PIPELINE_N}: compaction ladder pays")
             engine = "batched_pipelined"
@@ -187,11 +262,18 @@ def plan_query(query: MedoidQuery) -> Plan:
                            f"{m.name!r}: quadratic scan is the only "
                            "exact path")
     elif not m.has_triangle:
-        # the scan executor serves oracle inputs too (row sweep)
+        # the scan executor serves oracle inputs too (row sweep); under
+        # device_policy='sharded' it row-shards across the mesh (§11)
         engine = "scan"
         reasons.append(
             f"exact medoid on non-triangle metric {m.name!r}: elimination "
-            "bounds invalid, quadratic scan is the only exact path")
+            "bounds invalid, quadratic scan is the only exact path"
+            + (" (row-sharded across the mesh)" if sharded_req else ""))
+    elif sharded_req:
+        engine = "sharded"
+        reasons.append("device_policy='sharded': column-sharded pipelined "
+                       "engine (DESIGN.md §11), bit-identical to "
+                       "single-device")
     elif oracle:
         engine = "sequential"
         reasons.append("host oracle input: paper-faithful sequential "
@@ -206,6 +288,11 @@ def plan_query(query: MedoidQuery) -> Plan:
     elif n <= BLOCK_N:
         engine = "block"
         reasons.append(f"N={n} <= {BLOCK_N}: block-synchronous round")
+    elif auto_shard:
+        engine = "sharded"
+        reasons.append(f"N={n} > {SHARDED_N} with {_device_count()} "
+                       "devices up: column-sharded pipelined engine "
+                       "(DESIGN.md §11)")
     else:
         engine = "pipelined"
         reasons.append(f"N={n} > {BLOCK_N}: survivor-compacted pipelined "
@@ -248,6 +335,8 @@ def resolve_update_plan(update, metric: str):
             ("warm_idx", update.warm_idx is None),
             ("delta", update.delta == 0.01),
             ("seed", update.seed == 0),
+            ("mesh", update.mesh is None),
+            ("device_policy", update.device_policy == "auto"),
             ("engine_opts",
              set(update.engine_opts) <= {"engine"}),
         ) if not ok]
@@ -278,10 +367,10 @@ def resolve_update_plan(update, metric: str):
             overrides["bandit_budget"] = float(update.budget)
     elif mu is None:
         mu = "trimed"
-    elif mu not in ("trimed", "pipelined", "scan"):
+    elif mu not in ("trimed", "pipelined", "sharded", "scan"):
         raise ValueError(
             "nested update query: engine must be 'trimed', 'pipelined', "
-            f"'scan' or 'bandit', got {mu!r}")
+            f"'sharded', 'scan' or 'bandit', got {mu!r}")
     get_metric(metric)          # canonical unknown-metric error
     return mu, overrides
 
@@ -338,6 +427,28 @@ def _run_pipelined(q: MedoidQuery, plan: Plan) -> SolveReport:
     return _report_from_medoid(r)
 
 
+def _sharded_engine_kw(q: MedoidQuery):
+    """Split ``engine_opts`` for the sharded executors: ``axis`` names
+    the mesh axis, everything else passes through to the engine."""
+    opts = dict(q.engine_opts)
+    kw = {}
+    if "axis" in opts:
+        kw["axis"] = opts.pop("axis")
+    return kw, opts
+
+
+def _run_sharded(q: MedoidQuery, plan: Plan) -> SolveReport:
+    from repro.core.distributed import _trimed_sharded
+    kw, opts = _sharded_engine_kw(q)
+    r, per_shard = _trimed_sharded(
+        q.X, mesh=q.mesh, block=q.block, metric=q.metric,
+        block_schedule=q.block_schedule,
+        use_kernels=bool(plan.params.get("use_kernels")), **kw, **opts)
+    plan.params["per_shard_elements"] = per_shard.tolist()
+    return _report_from_medoid(
+        r, extras={"per_shard_elements": per_shard})
+
+
 def _run_topk(q: MedoidQuery, plan: Plan) -> SolveReport:
     from repro.core.trimed import _trimed_topk
     r = _trimed_topk(q.X, q.topk, seed=q.seed, metric=q.metric,
@@ -354,20 +465,25 @@ def _run_topk(q: MedoidQuery, plan: Plan) -> SolveReport:
 def _run_scan(q: MedoidQuery, plan: Plan) -> SolveReport:
     """Quadratic exact scan — blockwise so the (N, N) matrix never
     materialises (host oracles take a full row sweep); the only exact
-    path for non-triangle metrics."""
+    path for non-triangle metrics. Under ``device_policy="sharded"``
+    the rows shard across the mesh (DESIGN.md §11) with bit-identical
+    results (both paths sum on the fixed reduction grid)."""
     from repro.core.trimed import MedoidResult, TopKResult
     if _is_oracle(q.X):
         n = int(q.X.n)
         e = np.array([q.X.row(i).sum() for i in range(n)]) / n
+    elif plan.params.get("sharded"):
+        from repro.core.distributed import _scan_rowsums_sharded
+        kw, opts = _sharded_engine_kw(q)
+        sums, per_shard = _scan_rowsums_sharded(q.X, q.metric, mesh=q.mesh,
+                                                **kw, **opts)
+        n = int(np.shape(q.X)[0])
+        plan.params["per_shard_elements"] = per_shard.tolist()
+        e = np.asarray(sums, np.float64) / n
     else:
-        from repro.core.distances import pairwise
-        import jax.numpy as jnp
-        X = jnp.asarray(q.X)
-        n = X.shape[0]
-        blk = int(min(1024, n))
-        sums = [pairwise(X[s:s + blk], X, q.metric).sum(axis=1)
-                for s in range(0, n, blk)]
-        e = np.asarray(jnp.concatenate(sums), np.float64) / n
+        from repro.core.distances import scan_rowsums
+        n = int(np.shape(q.X)[0])
+        e = np.asarray(scan_rowsums(q.X, q.metric), np.float64) / n
     scale = n / max(n - 1, 1)
     k = int(q.topk) if q.topk is not None else 1
     order = np.argsort(e, kind="stable")[:k]
@@ -423,6 +539,23 @@ def _run_batched_pipelined(q: MedoidQuery, plan: Plan) -> SolveReport:
         ci=0.0, extras={"raw": r})
 
 
+def _run_batched_sharded(q: MedoidQuery, plan: Plan) -> SolveReport:
+    from repro.core.distributed import _batched_medoids_sharded
+    kw, opts = _sharded_engine_kw(q)
+    r, per_shard = _batched_medoids_sharded(
+        q.X, q.assignments, q.k, mesh=q.mesh, block=q.block,
+        metric=q.metric, block_schedule=q.block_schedule,
+        use_kernels=bool(plan.params.get("use_kernels")),
+        warm_idx=q.warm_idx, **kw, **opts)
+    plan.params["per_shard_elements"] = per_shard.tolist()
+    return SolveReport(
+        indices=np.asarray(r.medoids, np.int64),
+        energies=_cluster_energies(r.sums, r.medoids, q.assignments, q.k),
+        certified=True, elements_computed=float(r.n_computed),
+        n_distances=int(r.n_distances), n_rounds=int(r.n_rounds),
+        ci=0.0, extras={"raw": r, "per_shard_elements": per_shard})
+
+
 def _run_bandit(q: MedoidQuery, plan: Plan, exact=None) -> SolveReport:
     from repro.bandit.api import _bandit_medoid
     r = _bandit_medoid(
@@ -452,6 +585,11 @@ def _run_kmedoids(q: MedoidQuery, plan: Plan) -> SolveReport:
     mu = plan.params.get("medoid_update", "trimed")
     kw = dict(block=q.block, block_schedule=q.block_schedule,
               use_kernels=bool(plan.params.get("use_kernels")))
+    if mu == "sharded":
+        kw["mesh"] = q.mesh
+        opts.pop("axis", None)
+        if "axis" in q.engine_opts:
+            kw["mesh_axis"] = q.engine_opts["axis"]
     kw.update(overrides)
     res = kmedoids_batched(q.X, q.k, seed=q.seed, n_iter=q.n_iter,
                            metric=q.metric, medoid_update=mu, **kw, **opts)
@@ -478,8 +616,10 @@ _EXECUTORS = {
     "sequential": _run_sequential,
     "block": _run_block,
     "pipelined": _run_pipelined,
+    "sharded": _run_sharded,
     "batched": _run_batched,
     "batched_pipelined": _run_batched_pipelined,
+    "batched_sharded": _run_batched_sharded,
     "bandit": _run_bandit,
     "hybrid": _run_hybrid,
     "kmedoids": _run_kmedoids,

@@ -31,7 +31,7 @@ import jax
 __all__ = ["MedoidQuery", "SolveReport"]
 
 _MODES = ("exact", "anytime")
-_DEVICE_POLICIES = ("auto", "host", "device")
+_DEVICE_POLICIES = ("auto", "host", "device", "sharded")
 
 
 @dataclass
@@ -50,9 +50,13 @@ class MedoidQuery:
 
     ``budget`` is in unified computed elements; setting it (or
     ``mode="anytime"``) routes to the bandit subsystem. ``device_policy``
-    steers host/device placement; ``engine_opts`` passes power-user knobs
-    straight to the chosen engine (e.g. ``policy=``, ``distance_fn=``,
-    ``eps=``, ``samples_per_round=``). ``X`` may be a ``(N, d)`` array or
+    steers host/device placement — ``"sharded"`` forces the multi-device
+    engines (DESIGN.md §11) on ``mesh`` (or a default 1-axis mesh over
+    all local devices; ``auto`` also shards when more than one device is
+    available and N clears the planner threshold). ``engine_opts``
+    passes power-user knobs straight to the chosen engine (e.g.
+    ``policy=``, ``distance_fn=``, ``eps=``, ``samples_per_round=``,
+    ``axis=`` for sharded meshes). ``X`` may be a ``(N, d)`` array or
     a host oracle (``VectorOracle`` / ``GraphOracle``).
     """
     X: Any
@@ -65,6 +69,7 @@ class MedoidQuery:
     delta: float = 0.01
     warm_idx: Any = None
     device_policy: str = "auto"
+    mesh: Any = None
     seed: int = 0
     block: int = 128
     block_schedule: Any = None
@@ -100,7 +105,7 @@ class MedoidQuery:
 _QUERY_LEAVES = ("X", "assignments", "warm_idx", "update")
 _QUERY_AUX = tuple(f for f in (
     "metric", "k", "topk", "mode", "budget", "delta", "device_policy",
-    "seed", "block", "block_schedule", "use_kernels", "n_iter",
+    "mesh", "seed", "block", "block_schedule", "use_kernels", "n_iter",
     "engine_opts"))
 
 

@@ -83,12 +83,57 @@ if not hasattr(jax, "set_mesh"):
     _sharding.get_abstract_mesh = _get_abstract_mesh
 
 
+def _install_optimization_barrier_batching():
+    """jax 0.4.x ships ``lax.optimization_barrier`` without a vmap
+    batching rule (added upstream later), which breaks ``vmap`` over
+    anything using the fixed reduction geometry of
+    ``core/distances.py`` (e.g. the per-head K-medoids in
+    ``serve/kv_compress.py``). The barrier is an elementwise identity,
+    so the rule is pass-through. No-op where the rule already exists."""
+    try:
+        from jax._src.interpreters import batching
+        from jax._src.lax import lax as _lax_impl
+        prim = _lax_impl.optimization_barrier_p
+    except (ImportError, AttributeError):      # pragma: no cover
+        return
+
+    if prim in batching.primitive_batchers:    # pragma: no cover
+        return
+
+    def _batcher(batched_args, batch_dims, **params):
+        return prim.bind(*batched_args, **params), batch_dims
+
+    batching.primitive_batchers[prim] = _batcher
+
+
+_install_optimization_barrier_batching()
+
+
 if not hasattr(jax.lax, "axis_size"):
     def _axis_size(axis_name):
         # psum of a literal 1 constant-folds to the static axis size
         return jax.lax.psum(1, axis_name)
 
     jax.lax.axis_size = _axis_size
+
+
+def make_1d_mesh(n_shards: int | None = None, axis: str = "shard"):
+    """A one-axis mesh over the first ``n_shards`` local devices.
+
+    Version-portable mesh construction for the sharded medoid engine
+    (``core/distributed.py``): ``jax.make_mesh`` only learned to take a
+    device subset and ``axis_types`` in newer releases, while the plain
+    :class:`jax.sharding.Mesh` constructor has been stable across every
+    version the repo supports — so build on that."""
+    import numpy as np
+
+    devs = jax.devices()
+    p = len(devs) if n_shards is None else int(n_shards)
+    if not 1 <= p <= len(devs):
+        raise ValueError(
+            f"make_1d_mesh: n_shards={p} outside [1, {len(devs)}] "
+            "available devices")
+    return _sharding.Mesh(np.asarray(devs[:p]), (axis,))
 
 
 if not hasattr(jax, "shard_map"):

@@ -45,7 +45,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .distances import pairwise, sq_norms
+from .distances import chunked_rowsum, pairwise, sq_norms
 
 
 @dataclass
@@ -82,7 +82,8 @@ def _round_core(X, x_sq, a, v, k, metric, fused_round_fn, state, idx, valid):
     else:
         d_blk = pairwise(xb, X, metric, a_sq=jnp.take(x_sq, idx), b_sq=x_sq)
         same = a_piv[:, None] == a[None, :]           # (B, N) cluster mask
-        s_blk = jnp.where(same, d_blk, 0.0).sum(axis=1)   # in-cluster sums
+        # in-cluster sums on the fixed reduction grid (distances.py §11)
+        s_blk = chunked_rowsum(jnp.where(same, d_blk, 0.0))
         gap = jnp.abs(d_blk * v_piv[:, None] - s_blk[:, None])
         gap = jnp.where(jnp.logical_and(same, valid[:, None]), gap, -jnp.inf)
         l = jnp.maximum(l, gap.max(axis=0))

@@ -55,6 +55,94 @@ def pow2_at_least(x: int) -> int:
     return p
 
 
+# ---------------------------------------------------------------------------
+# fixed reduction geometry (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+# Energy row-sums in the device engines always reduce over this fixed,
+# shard-count-independent column grid: REDUCE_CHUNKS chunks of
+# ceil(N / REDUCE_CHUNKS) columns each, combined by an explicit in-order
+# fold. A shard holding a contiguous slice of columns computes exactly a
+# sub-range of the same chunk partials, so the sharded engine
+# (core.distributed) reproduces single-device energies bit-for-bit for
+# any shard count dividing REDUCE_CHUNKS. 48 is divisor-rich (1, 2, 3,
+# 4, 6, 8, 12, 16, 24, 48), covering every host/pod shard count in use.
+REDUCE_CHUNKS = 48
+
+
+def chunk_size(n: int, chunks: int = REDUCE_CHUNKS) -> int:
+    """Columns per chunk of the fixed reduction grid for ``n`` elements."""
+    return -(-int(n) // chunks)
+
+
+def fold_chunks(parts: jnp.ndarray) -> jnp.ndarray:
+    """Combine chunk partials with an explicit left-to-right fold.
+
+    A ``sum`` reduction's accumulation order is an XLA lowering detail
+    that shifts with fusion context; a chain of individual adds has
+    fixed fp semantics the compiler must preserve. This is what makes
+    the final combine identical between the single-device engines and
+    the gathered per-shard partials of the sharded engine."""
+    acc = parts[..., 0]
+    for i in range(1, parts.shape[-1]):
+        acc = acc + parts[..., i]
+    return acc
+
+
+def chunk_partials(d: jnp.ndarray, chunks: int, size: int) -> jnp.ndarray:
+    """``(B, chunks)`` per-chunk row sums of a zero-masked ``(B, M)``
+    block with ``M == chunks * size``.
+
+    The within-chunk accumulation is a ``lax.scan`` left fold rather
+    than a ``sum`` reduction: a reduce op's accumulation order is an
+    XLA lowering choice (SIMD-lane partials, context-dependent fusion)
+    that differs between otherwise-identical programs, while a scan's
+    sequential semantics must be preserved. This is what makes the
+    partials bit-identical between the single-device engines and the
+    shard_map programs of ``core.distributed``. The barrier pins the
+    masked block's values first so producer fusion cannot specialise
+    them either."""
+    d, = jax.lax.optimization_barrier((d,))
+    dr = d.reshape(d.shape[0], chunks, size)
+    cols = jnp.moveaxis(dr, 2, 0)                 # (size, B, chunks)
+    acc0 = jnp.zeros(dr.shape[:2], d.dtype)
+    parts, _ = jax.lax.scan(lambda acc, c: (acc + c, None), acc0, cols)
+    return parts
+
+
+def chunked_rowsum(d: jnp.ndarray) -> jnp.ndarray:
+    """Row sums of a dense ``(B, M)`` block over the fixed reduction
+    grid (zero-padding the trailing partial chunk). Bit-reproducible
+    against any conforming sharded evaluation of the same rows."""
+    b, m = d.shape
+    s = chunk_size(m)
+    pad = REDUCE_CHUNKS * s - m
+    if pad:
+        d = jnp.pad(d, ((0, 0), (0, pad)))
+    return fold_chunks(chunk_partials(d, REDUCE_CHUNKS, s))
+
+
+SCAN_ROW_BLOCK = 1024   # fixed pivot-block height of the quadratic scan
+
+
+def scan_rowsums(X, metric: str = "l2") -> jnp.ndarray:
+    """Exact ``(N,)`` distance row sums, blockwise so the ``(N, N)``
+    matrix never materialises — the quadratic path behind the planner's
+    ``scan`` engine. Row blocks have a fixed padded height and column
+    sums run on the fixed reduction grid, so the sharded scan
+    (``core.distributed._scan_rowsums_sharded``) reproduces this
+    bit-for-bit: both walk identical ``(blk, d)`` pivot blocks (XLA's
+    matmul lowering is shape-specialised — equal operand shapes are part
+    of the reproducibility contract, see DESIGN.md §11)."""
+    X = jnp.asarray(X)
+    n = X.shape[0]
+    blk = int(min(SCAN_ROW_BLOCK, n))
+    r_pad = (-n) % blk
+    Xr = jnp.pad(X, ((0, r_pad), (0, 0)))
+    sums = [chunked_rowsum(pairwise(Xr[s:s + blk], X, metric))
+            for s in range(0, n + r_pad, blk)]
+    return jnp.concatenate(sums)[:n]
+
+
 def elements_computed(n_scalar_distances, n: int) -> float:
     """Unified 'computed elements' cost: scalar distance evaluations
     expressed in full-row units (one element = one full ``(N,)`` row;

@@ -1,18 +1,46 @@
-"""Distributed (sharded) block-trimed via shard_map.
+"""Sharded survivor-compacted pipelined trimed engine (DESIGN.md §11).
 
-The element set is sharded over one mesh axis (the ``data`` axis of the
-production mesh). Per round (DESIGN.md §2):
+The element set (= X's columns in the energy pass) is sharded in
+contiguous slices over one mesh axis. Each round runs the pipelined
+round of :mod:`repro.core.pipelined` *locally per shard* — bounds,
+survivor buffers and the distance stream never leave their shard — and
+exchanges only three tiny replicated quantities:
 
-* candidate selection: each shard proposes its local top-``B`` surviving
-  bounds; an ``all_gather`` of ``(B,)`` scores + ``(B, d)`` vectors is
-  followed by a replicated global top-``B`` — communication ``O(P·B·d)``,
-  tiny next to the ``B·N/P·d`` local distance block;
-* energies: local partial row-sums + ``psum`` over the axis;
-* bound updates: fully local;
-* termination: ``psum`` of local survivor counts.
+* **candidate election**: each shard proposes its local top-``B``
+  surviving bounds; an ``all_gather`` of ``(B,)`` scores + ``(B, d)``
+  pivot vectors followed by a replicated global ``top_k`` elects the
+  round's pivot block (communication ``O(P*B*d)``, vanishing next to
+  the ``B * N/P * d`` local distance block);
+* **energy reduction**: per-shard chunk partials on the *fixed
+  reduction grid* (``distances.REDUCE_CHUNKS`` chunks, independent of
+  the shard count) are ``all_gather``-ed and combined by an explicit
+  in-order fold — the same arithmetic, in the same order, as the
+  single-device engine's :func:`~repro.core.distances.chunked_rowsum`.
+  This is what makes the sharded engine **bit-identical** (pivot
+  sequence, medoid index, energy, computed-element count) to the
+  single-device pipelined engine for any shard count dividing
+  ``REDUCE_CHUNKS``;
+* **termination / ladder control**: ``psum`` of integer survivor
+  counts — exact.
 
-Every shard finishes with identical ``(medoid_index, energy)``, so the
-mapped function's outputs are replicated.
+Per-shard survivor compaction keeps the fold, selection and loop
+predicate ``O(M/P)`` per shard on the same power-of-two ladder as the
+single-device engine; the energy pass keeps its exactness-mandated
+full-``N`` floor, now streamed as ``N/P`` columns per shard.
+
+``use_kernels=True`` runs the per-shard rounds through the Pallas
+kernels: the column-validity mask of the sharded layout is encoded as
+single-cluster membership so the assignment-masked kernels serve as the
+masked partial-sum / fused round kernels (``kernels.ops.partial_energies``,
+``masked_pipelined_round``) — one fused energy+bound-fold stream of the
+local block per steady-state round, VMEM-resident pivot block included.
+The kernel path is exact but not bit-level against the jnp path (the
+kernel accumulates per tile, not on the fixed grid).
+
+Entry points: the planner executes ``_trimed_sharded`` /
+``_batched_medoids_sharded`` / ``_scan_rowsums_sharded`` behind
+``MedoidQuery(device_policy="sharded")``; the pre-planner
+``trimed_sharded`` symbol survives as a deprecated shim.
 """
 from __future__ import annotations
 
@@ -24,120 +52,757 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat as _compat  # noqa: F401  (jax<0.5 shard_map/mesh)
+from repro.api.metrics import require_metric
+from repro.compat import make_1d_mesh
+from repro.kernels import ops as _ops
 
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from .distances import pairwise, sq_norms
+from .batched import BatchedMedoidResult
+from .distances import (REDUCE_CHUNKS, chunk_partials, chunk_size,
+                        fold_chunks, pairwise, pow2_at_least, sq_norms)
+from .pipelined import (LADDER_MIN, NEG_INF, _budget_cap, _incumbent,
+                        _masked_colmax, resolve_schedule)
 from .trimed import MedoidResult
 
+AXIS = "shard"          # default mesh axis name for the sharded engines
 
-def _sharded_round(axis, metric, block, body_state):
-    (xl, sql, l, computed, e_cl, m_cl, n_computed, n_rounds) = body_state
-    n_local, d = xl.shape
-    p_idx = jax.lax.axis_index(axis)
-    n_shards = jax.lax.axis_size(axis)
-    gbase = p_idx.astype(jnp.int32) * n_local
 
-    # --- local candidate proposal ---
-    survivor = jnp.logical_and(~computed, l < e_cl)
-    score = jnp.where(survivor, -l, -jnp.inf)
-    loc_top, loc_idx = jax.lax.top_k(score, block)
+def shard_count_for(requested: int) -> int:
+    """Largest shard count <= ``requested`` dividing ``REDUCE_CHUNKS``
+    (the fixed reduction grid must tile evenly across shards)."""
+    p = max(1, min(int(requested), REDUCE_CHUNKS))
+    while REDUCE_CHUNKS % p:
+        p -= 1
+    return p
 
-    # --- global candidate election (replicated on every shard) ---
-    all_scores = jax.lax.all_gather(loc_top, axis)                 # (P, B)
-    all_gidx = jax.lax.all_gather(loc_idx.astype(jnp.int32) + gbase, axis)
-    all_vecs = jax.lax.all_gather(jnp.take(xl, loc_idx, axis=0), axis)
-    flat_scores = all_scores.reshape(-1)
-    top, flat_pos = jax.lax.top_k(flat_scores, block)              # (B,)
-    valid = top > -jnp.inf
-    cand_gidx = all_gidx.reshape(-1)[flat_pos]                     # (B,)
-    xb = all_vecs.reshape(-1, d)[flat_pos]                         # (B, d)
 
-    # --- distance block against local shard + global energy psum ---
-    d_blk = pairwise(
-        xb, xl, metric,
-        a_sq=sq_norms(xb) if metric in ("l2", "sqeuclidean") else None,
-        b_sq=sql if metric in ("l2", "sqeuclidean") else None,
-    )                                                              # (B, n_local)
-    e_blk = jax.lax.psum(d_blk.sum(axis=1), axis) / (n_local * n_shards)
-    e_blk = jnp.where(valid, e_blk, jnp.inf)
+def _resolve_mesh(mesh, axis):
+    if mesh is None:
+        mesh = make_1d_mesh(shard_count_for(jax.device_count()), axis)
+    if axis not in mesh.shape:
+        raise ValueError(
+            f"sharded engine: mesh has no axis {axis!r} (axes: "
+            f"{list(mesh.shape)}); name the element axis via "
+            "engine_opts={'axis': ...} on the query")
+    p = mesh.shape[axis]
+    if REDUCE_CHUNKS % p:
+        raise ValueError(
+            f"sharded engine: mesh axis {axis!r} has size {p}, which does "
+            f"not divide the fixed reduction grid REDUCE_CHUNKS="
+            f"{REDUCE_CHUNKS}; use a divisor shard count (see "
+            "repro.core.distributed.shard_count_for)")
+    return mesh, p
 
-    b_best = jnp.argmin(e_blk)
-    better = e_blk[b_best] < e_cl
-    e_cl = jnp.where(better, e_blk[b_best], e_cl)
-    m_cl = jnp.where(better, cand_gidx[b_best], m_cl)
 
-    # --- local bound update against all B pivots ---
-    gap = jnp.abs(e_blk[:, None] - d_blk)
-    gap = jnp.where(valid[:, None], gap, -jnp.inf)
-    l = jnp.maximum(l, gap.max(axis=0))
+def _layout(n: int, p: int):
+    """(chunk size, padded N, local columns, local chunks) of the fixed
+    reduction grid laid out over ``p`` contiguous column shards."""
+    s = chunk_size(n)
+    n_pad = REDUCE_CHUNKS * s
+    return s, n_pad, n_pad // p, REDUCE_CHUNKS // p
 
-    # --- mark computed candidates owned by this shard; tighten their bound
-    owned = jnp.logical_and(
-        valid,
-        jnp.logical_and(cand_gidx >= gbase, cand_gidx < gbase + n_local),
+
+def _shard_base(axis, n_local):
+    p_idx = jax.lax.axis_index(axis).astype(jnp.int32)
+    return p_idx * n_local
+
+
+def _global_rowsums(d_loc, col_valid, axis, c_loc, s):
+    """Exact global row sums from a ``(B, n_local)`` local block: masked
+    local chunk partials, gathered and folded in fixed chunk order —
+    bit-identical to ``chunked_rowsum`` over the full ``(B, N)`` block."""
+    dl = jnp.where(col_valid[None, :], d_loc, 0.0)
+    parts = chunk_partials(dl, c_loc, s)                 # (B, C/P)
+    allp = jax.lax.all_gather(parts, axis)               # (P, B, C/P)
+    full = jnp.moveaxis(allp, 0, 1).reshape(d_loc.shape[0], REDUCE_CHUNKS)
+    return fold_chunks(full)
+
+
+def _kernel_rowsums(xb, xl, col_valid, axis, metric, interpret):
+    """Kernel-path global row sums: one masked Pallas stream of the
+    local block per shard, shard partials folded in shard order."""
+    loc = _ops.partial_energies(xb, xl, col_valid, metric=metric,
+                                interpret=interpret)
+    allp = jax.lax.all_gather(loc, axis)                 # (P, B)
+    return fold_chunks(jnp.moveaxis(allp, 0, 1))
+
+
+def _merge_topk(score_loc, cand_sources, b, axis):
+    """Global candidate election. Each shard proposes its local top-``b``
+    (scores + per-candidate payloads); the replicated merge re-ranks the
+    ``(P*b,)`` proposals. Tie-breaking matches a single-device ``top_k``
+    over the concatenated domain: equal scores resolve to the lowest
+    shard, then the lowest local index — i.e. the lowest global index.
+
+    ``cand_sources`` maps payload name -> local ``(M, ...)`` array to
+    gather at the proposed positions. Returns ``(valid, payloads, bpos,
+    owner)`` where ``bpos`` is the winning candidate's position in its
+    *own* shard's buffer and ``owner`` its shard index."""
+    top, pos = jax.lax.top_k(score_loc, b)
+    gathered = {}
+    for name, arr in cand_sources.items():
+        gathered[name] = jax.lax.all_gather(jnp.take(arr, pos, axis=0),
+                                            axis)
+    ts = jax.lax.all_gather(top, axis)                   # (P, b)
+    ps = jax.lax.all_gather(pos.astype(jnp.int32), axis)
+    flat_t = ts.reshape(-1)
+    t2, fp = jax.lax.top_k(flat_t, b)
+    valid = t2 > NEG_INF
+    payloads = {}
+    for name, g in gathered.items():
+        flat = g.reshape((-1,) + g.shape[2:])
+        payloads[name] = flat[fp]
+    bpos = ps.reshape(-1)[fp]
+    owner = (fp // b).astype(jnp.int32)
+    return valid, payloads, bpos, owner
+
+
+def _mark_owned(alive_loc, axis, owner, bpos, valid, size):
+    """Mark the winning candidates dead in their owning shard's buffer;
+    returns the updated buffer and this shard's owned-count increment."""
+    mine = jnp.logical_and(valid,
+                           owner == jax.lax.axis_index(axis).astype(
+                               jnp.int32))
+    tgt = jnp.where(mine, bpos, size)                    # foreign -> dropped
+    alive_loc = alive_loc.at[tgt].set(False, mode="drop")
+    return alive_loc, mine.sum()
+
+
+# ---------------------------------------------------------------------------
+# single-medoid engine
+# ---------------------------------------------------------------------------
+def _sh_round0(cfg, xl, sql, colv, base, budget, state, b):
+    """One full-domain sharded pipelined round at static width ``b``.
+    Mirrors ``pipelined._pipe_round0``: jnp path folds the carried
+    previous block before selection; kernel path fuses the fold into the
+    masked pipelined stream (select-then-fold, one-round lag)."""
+    (axis, metric, n, n_local, c_loc, s, use_kernels, interpret) = cfg
+    (l, alive, e_cl, m_cl, pe, pv, pvecs, psq, dprev, n_comp, n_rounds,
+     own) = state
+
+    if not use_kernels:
+        l = jnp.maximum(l, _masked_colmax(jnp.abs(pe[:, None] - dprev), pv))
+
+    score = jnp.where(jnp.logical_and(alive, l < e_cl), -l, NEG_INF)
+    valid, pay, bpos, owner = _merge_topk(
+        score, {"gidx": jnp.arange(n_local, dtype=jnp.int32) + base,
+                "vecs": xl, "sq": sql},
+        b, axis)
+    valid = _budget_cap(valid, n_comp, budget)
+    cand_gidx, xb, xsq = pay["gidx"], pay["vecs"], pay["sq"]
+
+    if use_kernels:
+        if pvecs.shape[0] == 0:      # first round: no previous block yet
+            e_sums = _kernel_rowsums(xb, xl, colv, axis, metric, interpret)
+        else:
+            a_x = jnp.where(colv, 0, -1).astype(jnp.int32)
+            s_loc, l = _ops.masked_pipelined_round(
+                xb, pvecs, xl, jnp.zeros(b, jnp.int32),
+                jnp.zeros(pvecs.shape[0], jnp.int32), a_x, pe,
+                jnp.ones(pvecs.shape[0], xl.dtype), pv, l,
+                metric=metric, interpret=interpret)
+            allp = jax.lax.all_gather(s_loc, axis)
+            e_sums = fold_chunks(jnp.moveaxis(allp, 0, 1))
+        dnew = dprev                                  # unused carry (0, M)
+    else:
+        dnew = pairwise(xb, xl, metric, a_sq=xsq, b_sq=sql)
+        e_sums = _global_rowsums(dnew, colv, axis, c_loc, s)
+
+    e_blk = jnp.where(valid, e_sums / n, jnp.inf)
+    e_cl, m_cl = _incumbent(e_blk, cand_gidx, e_cl, m_cl)
+    alive, mine = _mark_owned(alive, axis, owner, bpos, valid, n_local)
+    n_comp = n_comp + valid.sum()
+    pe = jnp.where(valid, e_blk, 0.0)
+    return (l, alive, e_cl, m_cl, pe, valid, xb, xsq, dnew, n_comp,
+            n_rounds + 1, own + mine)
+
+
+def _sh_pad_prev(state, block, has_carry):
+    (l, alive, e_cl, m_cl, pe, pv, pvecs, psq, dprev, n_comp, n_rounds,
+     own) = state
+    pad = block - pe.shape[0]
+    if pad:
+        pe = jnp.pad(pe, (0, pad))
+        pv = jnp.pad(pv, (0, pad))
+        pvecs = jnp.pad(pvecs, ((0, pad), (0, 0)))
+        psq = jnp.pad(psq, (0, pad))
+        if has_carry:
+            dprev = jnp.pad(dprev, ((0, pad), (0, 0)))
+    return (l, alive, e_cl, m_cl, pe, pv, pvecs, psq, dprev, n_comp,
+            n_rounds, own)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_stage0(mesh, axis, n, d, block, warm, metric, use_kernels,
+                  interpret, can_compact):
+    p = mesh.shape[axis]
+    s, n_pad, n_local, c_loc = _layout(n, p)
+    cfg = (axis, metric, n, n_local, c_loc, s, use_kernels, interpret)
+
+    def local_fn(xl, budget):
+        base = _shard_base(axis, n_local)
+        colv = (jnp.arange(n_local, dtype=jnp.int32) + base) < n
+        sql = (sq_norms(xl) if metric in ("l2", "sqeuclidean")
+               else jnp.zeros(n_local, xl.dtype))
+        state = (
+            jnp.zeros(n_local, xl.dtype),             # l
+            colv,                                     # alive (pad cols dead)
+            jnp.asarray(jnp.inf, xl.dtype),           # e_cl
+            jnp.asarray(-1, jnp.int32),               # m_cl
+            jnp.zeros(0, xl.dtype),                   # prev energies
+            jnp.zeros(0, bool),                       # prev valid
+            jnp.zeros((0, d), xl.dtype),              # prev pivot vectors
+            jnp.zeros(0, xl.dtype),                   # prev pivot sq norms
+            jnp.zeros((0, n_local), xl.dtype),        # prev rows (jnp carry)
+            jnp.asarray(0, jnp.int32),                # n_computed
+            jnp.asarray(0, jnp.int32),                # n_rounds
+            jnp.asarray(0, jnp.int32),                # owned rows this shard
+        )
+        round_fn = functools.partial(_sh_round0, cfg, xl, sql, colv,
+                                     _shard_base(axis, n_local), budget)
+        for b in warm:                                # unrolled warm-up
+            state = round_fn(state, b)
+        state = _sh_pad_prev(state, block, has_carry=not use_kernels)
+
+        def live_of(state):
+            l, alive, e_cl = state[0], state[1], state[2]
+            loc = jnp.logical_and(alive, l < e_cl).sum()
+            return jax.lax.psum(loc, axis)
+
+        def cond(state):
+            live = live_of(state)
+            go = jnp.logical_and(live > 0, state[9] < budget)
+            if can_compact:
+                return jnp.logical_and(go, 2 * live > n)
+            return go
+
+        state = jax.lax.while_loop(cond, lambda st: round_fn(st, block),
+                                   state)
+        (l, alive, e_cl, m_cl, pe, pv, pvecs, psq, _d, n_comp, n_rounds,
+         own) = state
+        live_loc = jnp.logical_and(alive, l < e_cl).sum()[None]
+        return (l, alive, own[None], live_loc,
+                (e_cl, m_cl, pe, pv, pvecs, psq, n_comp, n_rounds))
+
+    return jax.jit(jax.shard_map(
+        local_fn, mesh=mesh, in_specs=(P(axis), P()),
+        out_specs=(P(axis), P(axis), P(axis), P(axis), P()),
+        check_vma=False))
+
+
+def _sh_stage_round(cfg, xl, sql, colv, base, Xs, xs_sq, lpos, surv_gidx,
+                    budget, block, state):
+    """One compacted-stage sharded round: fold the previous block over
+    the local ``M/P`` survivor buffer, then stream the full local column
+    block once for the new pivots' exact energies."""
+    (axis, metric, n, n_local, c_loc, s, use_kernels, interpret) = cfg
+    (l_s, alive_s, e_cl, m_cl, pe, pv, pvecs, psq, dprev_s, n_comp,
+     n_rounds, own, fold_cols) = state
+    m = Xs.shape[0]
+
+    # 1. fold previous block — bound tightening over M/P local survivors
+    if use_kernels:
+        l_s = _ops.bound_update(pvecs, Xs, pe, pv, l_s, metric=metric,
+                                interpret=interpret)
+    else:
+        l_s = jnp.maximum(
+            l_s, _masked_colmax(jnp.abs(pe[:, None] - dprev_s), pv))
+    fold_cols = fold_cols + jax.lax.psum(m, axis)
+
+    # 2. candidate election over the compacted buffers
+    score = jnp.where(jnp.logical_and(alive_s, l_s < e_cl), -l_s, NEG_INF)
+    valid, pay, bpos, owner = _merge_topk(
+        score, {"gidx": surv_gidx, "vecs": Xs, "sq": xs_sq},
+        block, axis)
+    valid = _budget_cap(valid, n_comp, budget)
+    cand_gidx, xb, xsq = pay["gidx"], pay["vecs"], pay["sq"]
+
+    # 3. exact energies — the one full stream of the local block
+    if use_kernels:
+        e_sums = _kernel_rowsums(xb, xl, colv, axis, metric, interpret)
+        dnew_s = dprev_s                              # unused carry (0, M)
+    else:
+        d_full = pairwise(xb, xl, metric, a_sq=xsq, b_sq=sql)
+        e_sums = _global_rowsums(d_full, colv, axis, c_loc, s)
+        dnew_s = jnp.take(d_full, lpos, axis=1)       # rows at survivors
+    e_blk = jnp.where(valid, e_sums / n, jnp.inf)
+
+    e_cl, m_cl = _incumbent(e_blk, cand_gidx, e_cl, m_cl)
+    alive_s, mine = _mark_owned(alive_s, axis, owner, bpos, valid, m)
+    n_comp = n_comp + valid.sum()
+    pe = jnp.where(valid, e_blk, 0.0)
+    return (l_s, alive_s, e_cl, m_cl, pe, valid, xb, xsq, dnew_s, n_comp,
+            n_rounds + 1, own + mine, fold_cols)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_stage(mesh, axis, n, d, m_loc, block, metric, use_kernels,
+                 interpret, is_floor):
+    p = mesh.shape[axis]
+    s, n_pad, n_local, c_loc = _layout(n, p)
+    cfg = (axis, metric, n, n_local, c_loc, s, use_kernels, interpret)
+
+    def local_fn(xl, surv_gidx, l_in, alive_in, own_in, budget, rep):
+        (e_cl, m_cl, pe, pv, pvecs, psq, n_comp, n_rounds, fold_cols) = rep
+        base = _shard_base(axis, n_local)
+        colv = (jnp.arange(n_local, dtype=jnp.int32) + base) < n
+        sql = (sq_norms(xl) if metric in ("l2", "sqeuclidean")
+               else jnp.zeros(n_local, xl.dtype))
+
+        # per-shard compaction onto the shared ladder rung m_loc
+        keep = jnp.logical_and(alive_in, l_in < e_cl)
+        posn = jnp.cumsum(keep.astype(jnp.int32)) - 1
+        tgt = jnp.where(keep, posn, m_loc)            # dead -> dropped
+        new_g = jnp.zeros(m_loc, jnp.int32).at[tgt].set(surv_gidx,
+                                                        mode="drop")
+        l_s = jnp.full(m_loc, jnp.inf, l_in.dtype).at[tgt].set(l_in,
+                                                               mode="drop")
+        alive_s = jnp.zeros(m_loc, bool).at[tgt].set(True, mode="drop")
+        lpos = jnp.clip(new_g - base, 0, n_local - 1)
+        Xs = jnp.take(xl, lpos, axis=0)
+        xs_sq = (sq_norms(Xs) if metric in ("l2", "sqeuclidean")
+                 else jnp.zeros(m_loc, Xs.dtype))
+        if use_kernels:
+            dprev_s = jnp.zeros((0, m_loc), xl.dtype)
+        else:
+            # one (B, M/P) block at stage entry re-seeds the carried rows
+            dprev_s = pairwise(pvecs, Xs, metric, a_sq=psq, b_sq=xs_sq)
+        state = (l_s, alive_s, e_cl, m_cl, pe, pv, pvecs, psq, dprev_s,
+                 n_comp, n_rounds, own_in[0], fold_cols)
+
+        def live_of(state):
+            l_s, alive_s, e_cl = state[0], state[1], state[2]
+            loc = jnp.logical_and(alive_s, l_s < e_cl).sum()
+            return jax.lax.psum(loc, axis)
+
+        def cond(state):
+            live = live_of(state)
+            go = jnp.logical_and(live > 0, state[9] < budget)
+            if is_floor:
+                return go
+            return jnp.logical_and(go, 4 * live > m_loc * p)
+
+        body = functools.partial(_sh_stage_round, cfg, xl, sql, colv,
+                                 base, Xs, xs_sq, lpos, new_g, budget,
+                                 block)
+        state = jax.lax.while_loop(cond, body, state)
+        (l_s, alive_s, e_cl, m_cl, pe, pv, pvecs, psq, _d, n_comp,
+         n_rounds, own, fold_cols) = state
+        live_loc = jnp.logical_and(alive_s, l_s < e_cl).sum()[None]
+        return (new_g, l_s, alive_s, own[None], live_loc,
+                (e_cl, m_cl, pe, pv, pvecs, psq, n_comp, n_rounds,
+                 fold_cols))
+
+    return jax.jit(jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(), P()),
+        out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P()),
+        check_vma=False))
+
+
+def _trimed_sharded(
+    X,
+    mesh=None,
+    axis: str = AXIS,
+    block: int = 128,
+    metric: str = "l2",
+    block_schedule=None,
+    ladder_min: int = LADDER_MIN,
+    use_kernels: bool = False,
+    interpret=None,
+    max_computed: int | None = None,
+    seed: int = 0,
+):
+    """Exact medoid via the sharded pipelined engine (DESIGN.md §11).
+
+    Bit-identical — pivot sequence, medoid index, energy, computed
+    elements — to :func:`repro.core.pipelined._trimed_pipelined` on the
+    jnp path, for any ``mesh`` whose ``axis`` size divides
+    ``REDUCE_CHUNKS`` and any ``block <= ceil(N/P)`` (the planner's
+    thresholds guarantee both). ``N`` need not divide the shard count:
+    the fixed reduction grid pads the tail shard and masks the fake
+    columns out of every sum and candidate election.
+
+    Returns ``(MedoidResult, per_shard_rows)`` where ``per_shard_rows``
+    counts the pivot rows each shard owned (summing to ``n_computed``).
+    """
+    del seed    # selection is deterministic (lowest-bound)
+    require_metric(metric, need_triangle=True, caller="trimed_sharded")
+    X = jnp.asarray(X)
+    n, d = X.shape
+    mesh, p = _resolve_mesh(mesh, axis)
+    if n == 1:
+        per_shard = np.zeros(p, np.int64)
+        per_shard[0] = 1                      # shard 0 owns the only row
+        return MedoidResult(0, 0.0, 1, 0, 1), per_shard
+    s, n_pad, n_local, c_loc = _layout(n, p)
+    block = int(min(block, n, n_local))
+    warm = resolve_schedule(block_schedule, block)
+    floor = max(int(ladder_min), block)
+    can_compact = n_local > floor
+    budget_host = (2**31 - 1 if max_computed is None
+                   else max(int(max_computed), 0))
+    budget = jnp.asarray(budget_host, jnp.int32)
+    interpret = (bool(interpret) if interpret is not None
+                 else jax.default_backend() == "cpu")
+
+    Xp = jnp.pad(X, ((0, n_pad - n), (0, 0)))
+    Xg = jax.device_put(Xp, NamedSharding(mesh, P(axis)))
+
+    stage0 = _build_stage0(mesh, axis, n, d, block, warm, metric,
+                           use_kernels, interpret, can_compact)
+    l, alive, own, live_loc, rep = stage0(Xg, budget)
+    (e_cl, m_cl, pe, pv, pvecs, psq, n_comp, n_rounds) = rep
+    live = int(np.asarray(live_loc).sum())
+    n_stages = 0
+    fold_cols = jnp.asarray(0, jnp.int32)
+    surv_gidx = jax.device_put(
+        jnp.arange(n_pad, dtype=jnp.int32), NamedSharding(mesh, P(axis)))
+    l_s, alive_s = l, alive
+
+    while live > 0 and int(n_comp) < budget_host:
+        max_loc = int(np.asarray(live_loc).max())
+        m_loc = max(pow2_at_least(max(max_loc, 1)), floor)
+        is_floor = m_loc <= floor
+        stage = _build_stage(mesh, axis, n, d, m_loc, block, metric,
+                             use_kernels, interpret, is_floor)
+        surv_gidx, l_s, alive_s, own, live_loc, rep2 = stage(
+            Xg, surv_gidx, l_s, alive_s, own, budget,
+            (e_cl, m_cl, pe, pv, pvecs, psq, n_comp, n_rounds, fold_cols))
+        (e_cl, m_cl, pe, pv, pvecs, psq, n_comp, n_rounds,
+         fold_cols) = rep2
+        live = int(np.asarray(live_loc).sum())
+        n_stages += 1
+
+    n_rounds = int(n_rounds)
+    n_comp = int(n_comp)
+    e_paper = float(e_cl) * n / max(n - 1, 1)
+    result = MedoidResult(
+        int(m_cl), e_paper, n_comp, n_rounds, n_comp * n,
+        n_stages=n_stages,
+        x_cols_streamed=n_rounds * n + int(fold_cols),
+        certified=(live == 0),
     )
-    local_pos = jnp.clip(cand_gidx - gbase, 0, n_local - 1)
-    l = l.at[local_pos].set(
-        jnp.where(owned, jnp.where(jnp.isfinite(e_blk), e_blk, l[local_pos]), l[local_pos])
-    )
-    computed = computed.at[local_pos].set(
-        jnp.logical_or(computed[local_pos], owned)
-    )
-    n_computed = n_computed + valid.sum()
-    return (xl, sql, l, computed, e_cl, m_cl, n_computed, n_rounds + 1)
+    return result, np.asarray(own, np.int64)
 
 
-def _trimed_sharded_fn(xl, axis, metric, block):
-    n_local = xl.shape[0]
-    sql = sq_norms(xl) if metric in ("l2", "sqeuclidean") else jnp.zeros(n_local, xl.dtype)
-    state = (
-        xl,
-        sql,
-        jnp.zeros(n_local, xl.dtype),            # l
-        jnp.zeros(n_local, bool),                # computed
-        jnp.asarray(jnp.inf, xl.dtype),          # e_cl
-        jnp.asarray(-1, jnp.int32),              # m_cl
-        jnp.asarray(0, jnp.int32),               # n_computed
-        jnp.asarray(0, jnp.int32),               # n_rounds
-    )
+# ---------------------------------------------------------------------------
+# batched multi-cluster engine (K concurrent searches, sharded columns)
+# ---------------------------------------------------------------------------
+def _sh_bround(cfg, xl, sql, a_loc, v, k, state, b):
+    """One sharded multi-cluster pipelined round (full local domain;
+    mirrors ``pipelined._bpipe_round0`` with elected candidates)."""
+    (axis, metric, n, n_local, c_loc, s, use_kernels, interpret) = cfg
+    (l, alive, s_best, m_best, ps, pv, pvecs, psq, pa, dprev, n_comp,
+     n_rounds, own) = state
+    v_prev = jnp.take(v, pa).astype(xl.dtype)
 
-    def cond(state):
-        _, _, l, computed, e_cl = state[:5]
-        local_alive = jnp.logical_and(~computed, l < e_cl).sum()
-        return jax.lax.psum(local_alive, axis) > 0
+    if not use_kernels:
+        same_prev = pa[:, None] == a_loc[None, :]
+        gap = jnp.abs(dprev * v_prev[:, None] - ps[:, None])
+        gap = jnp.where(same_prev, gap, NEG_INF)
+        l = jnp.maximum(l, _masked_colmax(gap, pv))
 
-    state = jax.lax.while_loop(
-        cond, functools.partial(_sharded_round, axis, metric, block), state
-    )
-    _, _, _, _, e_cl, m_cl, n_computed, n_rounds = state
-    return m_cl, e_cl, n_computed, n_rounds
+    base = _shard_base(axis, n_local)
+    thresh = jnp.take(s_best, a_loc)
+    v_a = jnp.take(v, a_loc).astype(xl.dtype)
+    score = jnp.where(jnp.logical_and(alive, l < thresh),
+                      -l / jnp.maximum(v_a, 1.0), NEG_INF)
+    valid, pay, bpos, owner = _merge_topk(
+        score, {"gidx": jnp.arange(n_local, dtype=jnp.int32) + base,
+                "vecs": xl, "sq": sql, "a": a_loc},
+        b, axis)
+    cand_gidx, xb, xsq, a_piv = (pay["gidx"], pay["vecs"], pay["sq"],
+                                 pay["a"])
+
+    if use_kernels:
+        if pvecs.shape[0] == 0:
+            s_loc = _ops.masked_energies(xb, xl, a_piv, a_loc,
+                                         metric=metric, interpret=interpret)
+        else:
+            s_loc, l = _ops.masked_pipelined_round(
+                xb, pvecs, xl, a_piv, pa, a_loc, ps, v_prev, pv, l,
+                metric=metric, interpret=interpret)
+        allp = jax.lax.all_gather(s_loc, axis)
+        s_sums = fold_chunks(jnp.moveaxis(allp, 0, 1))
+        dnew = dprev
+    else:
+        dnew = pairwise(xb, xl, metric, a_sq=xsq, b_sq=sql)
+        same_new = a_piv[:, None] == a_loc[None, :]
+        s_sums = _global_rowsums(jnp.where(same_new, dnew, 0.0),
+                                 jnp.ones(n_local, bool), axis, c_loc, s)
+
+    s_blk = jnp.where(valid, s_sums, jnp.inf)
+    # per-cluster incumbent update (replicated (K, B) masked view)
+    per_k = jnp.where(
+        jnp.logical_and(a_piv[None, :] == jnp.arange(k)[:, None],
+                        valid[None, :]),
+        s_blk[None, :], jnp.inf)
+    r_min = per_k.min(axis=1)
+    r_arg = jnp.take(cand_gidx, per_k.argmin(axis=1))
+    better = r_min < s_best
+    s_best = jnp.where(better, r_min, s_best)
+    m_best = jnp.where(better, r_arg, m_best)
+
+    alive, mine = _mark_owned(alive, axis, owner, bpos, valid, n_local)
+    n_comp = n_comp + valid.sum()
+    ps = jnp.where(valid, s_blk, 0.0)
+    return (l, alive, s_best, m_best, ps, valid, xb, xsq, a_piv, dnew,
+            n_comp, n_rounds + 1, own + mine)
 
 
+def _sh_bwarm_round(cfg, xl, sql, a_loc, v, k, state, warm_idx, bw):
+    """Forced warm round: the seed pivots' vectors/clusters are owned by
+    exactly one shard each, so a psum of one-hot contributions
+    reconstructs the replicated pivot block exactly."""
+    (axis, metric, n, n_local, c_loc, s, use_kernels, interpret) = cfg
+    base = _shard_base(axis, n_local)
+    # single-device semantics: lookups clip out-of-range seeds to the
+    # domain (jnp.take's clip mode maps -1 -> element 0) ...
+    wc = jnp.clip(warm_idx, 0, n - 1)
+    lpos = wc - base
+    owned = jnp.logical_and(lpos >= 0, lpos < n_local)
+    safe = jnp.clip(lpos, 0, n_local - 1)
+    zero = jnp.zeros((), xl.dtype)
+    xb = jax.lax.psum(
+        jnp.where(owned[:, None], jnp.take(xl, safe, axis=0), zero), axis)
+    xsq = jax.lax.psum(jnp.where(owned, jnp.take(sql, safe), zero), axis)
+    a_piv = jax.lax.psum(
+        jnp.where(owned, jnp.take(a_loc, safe), 0).astype(jnp.int32), axis)
+    valid = jnp.arange(bw) < jnp.minimum(k, bw)
+
+    (l, alive, s_best, m_best, ps, pv, pvecs, psq, pa, dprev, n_comp,
+     n_rounds, own) = state
+    if use_kernels:
+        s_loc = _ops.masked_energies(xb, xl, a_piv, a_loc, metric=metric,
+                                     interpret=interpret)
+        allp = jax.lax.all_gather(s_loc, axis)
+        s_sums = fold_chunks(jnp.moveaxis(allp, 0, 1))
+        dnew = dprev
+    else:
+        dnew = pairwise(xb, xl, metric, a_sq=xsq, b_sq=sql)
+        same_new = a_piv[:, None] == a_loc[None, :]
+        s_sums = _global_rowsums(jnp.where(same_new, dnew, 0.0),
+                                 jnp.ones(n_local, bool), axis, c_loc, s)
+    s_blk = jnp.where(valid, s_sums, jnp.inf)
+    per_k = jnp.where(
+        jnp.logical_and(a_piv[None, :] == jnp.arange(k)[:, None],
+                        valid[None, :]),
+        s_blk[None, :], jnp.inf)
+    r_min = per_k.min(axis=1)
+    r_arg = jnp.take(warm_idx, per_k.argmin(axis=1))
+    better = r_min < s_best
+    s_best = jnp.where(better, r_min, s_best)
+    m_best = jnp.where(better, r_arg, m_best)
+
+    # ... while the alive-scatter drops them (mode="drop" discards the
+    # out-of-bounds index), so only in-range seeds die
+    inrange = jnp.logical_and(warm_idx >= 0, warm_idx < n)
+    mine = jnp.logical_and(owned, valid)
+    kill = jnp.logical_and(mine, inrange)
+    alive = alive.at[jnp.where(kill, safe, n_local)].set(False, mode="drop")
+    n_comp = n_comp + valid.sum()
+    ps = jnp.where(valid, s_blk, 0.0)
+    return (l, alive, s_best, m_best, ps, valid, xb, xsq, a_piv, dnew,
+            n_comp, n_rounds + 1, own + mine.sum())
+
+
+def _sh_bpad_prev(state, block, d, has_carry):
+    (l, alive, s_best, m_best, ps, pv, pvecs, psq, pa, dprev, n_comp,
+     n_rounds, own) = state
+    pad = block - ps.shape[0]
+    if pad:
+        ps = jnp.pad(ps, (0, pad))
+        pv = jnp.pad(pv, (0, pad))
+        pvecs = jnp.pad(pvecs, ((0, pad), (0, 0)))
+        psq = jnp.pad(psq, (0, pad))
+        pa = jnp.pad(pa, (0, pad))
+        if has_carry:
+            dprev = jnp.pad(dprev, ((0, pad), (0, 0)))
+    return (l, alive, s_best, m_best, ps, pv, pvecs, psq, pa, dprev,
+            n_comp, n_rounds, own)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_batched(mesh, axis, n, d, k, block, warm, metric, use_kernels,
+                   interpret, has_warm):
+    p = mesh.shape[axis]
+    s, n_pad, n_local, c_loc = _layout(n, p)
+    cfg = (axis, metric, n, n_local, c_loc, s, use_kernels, interpret)
+
+    def local_fn(xl, a_loc, warm_idx):
+        a_loc = a_loc.astype(jnp.int32)
+        sql = (sq_norms(xl) if metric in ("l2", "sqeuclidean")
+               else jnp.zeros(n_local, xl.dtype))
+        oob = jnp.logical_or(a_loc < 0, a_loc >= k)   # incl. pad columns
+        v_loc = jnp.zeros(k, jnp.int32).at[
+            jnp.where(oob, k, a_loc)].add(1, mode="drop")
+        v = jax.lax.psum(v_loc, axis)                 # exact int sizes
+
+        state = (
+            jnp.zeros(n_local, xl.dtype),             # l
+            ~oob,                                     # alive
+            jnp.full((k,), jnp.inf, xl.dtype),        # s_best
+            jnp.full((k,), -1, jnp.int32),            # m_best
+            jnp.zeros(0, xl.dtype),                   # prev sums
+            jnp.zeros(0, bool),                       # prev valid
+            jnp.zeros((0, d), xl.dtype),              # prev pivot vectors
+            jnp.zeros(0, xl.dtype),                   # prev pivot sq norms
+            jnp.zeros(0, jnp.int32),                  # prev pivot clusters
+            jnp.zeros((0, n_local), xl.dtype),        # prev rows (jnp carry)
+            jnp.asarray(0, jnp.int32),                # n_computed
+            jnp.asarray(0, jnp.int32),                # n_rounds
+            jnp.asarray(0, jnp.int32),                # owned rows
+        )
+        round_fn = functools.partial(_sh_bround, cfg, xl, sql, a_loc, v, k)
+        if has_warm:
+            bw = warm_idx.shape[0]
+            state = _sh_bwarm_round(cfg, xl, sql, a_loc, v, k, state,
+                                    warm_idx, bw)
+        for b in warm:                                # unrolled warm-up
+            state = round_fn(state, b)
+        state = _sh_bpad_prev(state, block, d, has_carry=not use_kernels)
+
+        def cond(state):
+            l, alive, s_best = state[0], state[1], state[2]
+            thresh = jnp.take(s_best, a_loc)
+            loc = jnp.logical_and(alive, l < thresh).sum()
+            return jax.lax.psum(loc, axis) > 0
+
+        state = jax.lax.while_loop(cond, lambda st: round_fn(st, block),
+                                   state)
+        (_l, _al, s_best, m_best, _ps, _pv, _pvec, _psq, _pa, _dp,
+         n_comp, n_rounds, own) = state
+        return own[None], (s_best, m_best, n_comp, n_rounds)
+
+    return jax.jit(jax.shard_map(
+        local_fn, mesh=mesh, in_specs=(P(axis), P(axis), P()),
+        out_specs=(P(axis), P()),
+        check_vma=False))
+
+
+def _batched_medoids_sharded(
+    X,
+    assignment,
+    k: int,
+    mesh=None,
+    axis: str = AXIS,
+    block: int = 128,
+    metric: str = "l2",
+    block_schedule=None,
+    use_kernels: bool = False,
+    interpret=None,
+    warm_idx=None,
+):
+    """Exact per-cluster medoids with X's columns sharded over
+    ``mesh[axis]`` (DESIGN.md §11) — the sharded variant of
+    ``batched_medoids_pipelined`` that lets ``kmedoids_jax`` scale K
+    concurrent cluster searches across devices. Final medoids and
+    in-cluster sums are bit-identical to the single-device pipelined
+    engine (jnp path); rounds keep full-domain folds (the per-shard
+    compaction ladder is single-medoid-only for now — each shard's fold
+    is already only ``N/P`` columns wide).
+
+    Returns ``(BatchedMedoidResult, per_shard_rows)``."""
+    require_metric(metric, need_triangle=True,
+                   caller="batched_medoids_sharded")
+    X = jnp.asarray(X)
+    n, d = X.shape
+    mesh, p = _resolve_mesh(mesh, axis)
+    s, n_pad, n_local, c_loc = _layout(n, p)
+    block = int(min(block, n, n_local))
+    has_warm = warm_idx is not None
+    warm = () if has_warm else resolve_schedule(block_schedule, block)
+    interpret = (bool(interpret) if interpret is not None
+                 else jax.default_backend() == "cpu")
+
+    Xp = jnp.pad(X, ((0, n_pad - n), (0, 0)))
+    ap = jnp.pad(jnp.asarray(assignment, jnp.int32), (0, n_pad - n),
+                 constant_values=-1)
+    Xg = jax.device_put(Xp, NamedSharding(mesh, P(axis)))
+    ag = jax.device_put(ap, NamedSharding(mesh, P(axis)))
+    if has_warm:
+        bw = min(k, block)
+        warm_arr = jnp.resize(jnp.asarray(warm_idx, jnp.int32), (bw,))
+    else:
+        warm_arr = jnp.zeros((1,), jnp.int32)
+
+    fn = _build_batched(mesh, axis, n, d, k, block, warm, metric,
+                        use_kernels, interpret, has_warm)
+    own, (s_best, m_best, n_comp, n_rounds) = fn(Xg, ag, warm_arr)
+    n_comp = int(n_comp)
+    n_rounds = int(n_rounds)
+    result = BatchedMedoidResult(
+        np.asarray(m_best), np.asarray(s_best), n_comp, n_rounds,
+        n_comp * n, n_stages=0, x_cols_streamed=n_rounds * n)
+    return result, np.asarray(own, np.int64)
+
+
+# ---------------------------------------------------------------------------
+# sharded quadratic scan (non-triangle / registered user metrics)
+# ---------------------------------------------------------------------------
+def _scan_rowsums_sharded(X, metric: str = "l2", mesh=None,
+                          axis: str = AXIS):
+    """Exact ``(N,)`` distance row sums with the *columns* sharded over
+    ``mesh[axis]`` — the sharded fallback the planner uses for exact
+    queries on non-triangle (or any registered user) metrics; the
+    metric's registered ``pairwise_fn`` runs unchanged inside the
+    shard_map. Walks the same fixed-height pivot row blocks as
+    :func:`repro.core.distances.scan_rowsums` (XLA matmul lowering is
+    shape-specialised, so equal pivot-block shapes are required for
+    reproducibility) and reduces on the fixed chunk grid — the result
+    is bit-identical to the single-device scan."""
+    from .distances import SCAN_ROW_BLOCK
+    require_metric(metric, caller="scan_sharded")
+    X = jnp.asarray(X)
+    n = X.shape[0]
+    mesh, p = _resolve_mesh(mesh, axis)
+    s, n_pad, n_local, c_loc = _layout(n, p)
+    blk = int(min(SCAN_ROW_BLOCK, n))
+    r_pad = (-n) % blk
+    Xg = jax.device_put(jnp.pad(X, ((0, n_pad - n), (0, 0))),
+                        NamedSharding(mesh, P(axis)))
+    Xr = jnp.pad(X, ((0, r_pad), (0, 0)))     # replicated pivot rows
+
+    def local_fn(xl, xrows):
+        base = _shard_base(axis, n_local)
+        colv = (jnp.arange(n_local, dtype=jnp.int32) + base) < n
+        out = []
+        for start in range(0, n + r_pad, blk):
+            d_loc = pairwise(xrows[start:start + blk], xl, metric)
+            out.append(_global_rowsums(d_loc, colv, axis, c_loc, s))
+        return jnp.concatenate(out)
+
+    fn = jax.jit(jax.shard_map(
+        local_fn, mesh=mesh, in_specs=(P(axis), P()), out_specs=P(),
+        check_vma=False))
+    sums = fn(Xg, Xr)[:n]
+    # per-shard cost in row units: N rows, each shard summing its own
+    # real-column slice -> exactly its real column count
+    per_shard = np.minimum(
+        np.maximum(n - n_local * np.arange(p), 0), n_local)
+    return sums, per_shard.astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# legacy entrypoint shim (deprecated — repro.api.solve is the front door)
+# ---------------------------------------------------------------------------
 def trimed_sharded(
     X,
-    mesh: Mesh,
+    mesh,
     axis: str = "data",
     block: int = 128,
     metric: str = "l2",
 ) -> MedoidResult:
-    """Exact medoid of ``X`` sharded over ``mesh[axis]``. ``X.shape[0]``
-    must divide evenly by the axis size (pad upstream with +inf-energy
-    sentinels if needed; `repro.data.coreset` does this)."""
-    n, d = X.shape
-    n_shards = mesh.shape[axis]
-    if n % n_shards:
-        raise ValueError(f"N={n} not divisible by axis size {n_shards}")
-    spec_in = P(axis)
-    fn = jax.shard_map(
-        functools.partial(_trimed_sharded_fn, axis=axis, metric=metric,
-                          block=int(min(block, n // n_shards))),
-        mesh=mesh,
-        in_specs=(spec_in,),
-        out_specs=(P(), P(), P(), P()),
-        check_vma=False,
-    )
-    X = jax.device_put(X, NamedSharding(mesh, spec_in))
-    m, e, n_comp, n_rounds = jax.jit(fn)(X)
-    e_paper = float(e) * n / max(n - 1, 1)
-    return MedoidResult(int(m), e_paper, int(n_comp), int(n_rounds), int(n_comp) * n)
+    """**Deprecated** shim over ``solve(MedoidQuery(...,
+    device_policy="sharded", mesh=...), plan="sharded")``. The pre-planner
+    engine this symbol used to name is gone; the modern sharded engine
+    accepts ragged ``N`` (no divisibility requirement) and returns the
+    single-device pipelined engine's exact answer bit-for-bit."""
+    from repro.api import MedoidQuery, solve, _warn_legacy
+    _warn_legacy("trimed_sharded",
+                 " (device_policy='sharded', plan='sharded')")
+    q = MedoidQuery(X, metric=metric, block=block, device_policy="sharded",
+                    mesh=mesh, engine_opts={"axis": axis})
+    return solve(q, plan="sharded").extras["raw"]

@@ -58,7 +58,8 @@ from repro.api.metrics import require_metric
 from repro.kernels import ops as _ops
 
 from .batched import BatchedMedoidResult
-from .distances import pairwise, pow2_at_least, sq_norms
+from .distances import (chunked_rowsum, pairwise, pow2_at_least,
+                        sq_norms)
 from .trimed import MedoidResult
 
 LADDER_MIN = 256     # survivor buffers never shrink below this size
@@ -156,7 +157,9 @@ def _pipe_round0(X, x_sq, n, metric, use_kernels, interpret, budget, state,
         dnew = dprev                                  # unused carry (0, N)
     else:
         dnew = pairwise(xb, X, metric, a_sq=jnp.take(x_sq, idx), b_sq=x_sq)
-        e_sums = dnew.sum(axis=1)
+        # fixed reduction geometry (distances.py): keeps energies
+        # bit-identical to the sharded engine's gathered chunk partials
+        e_sums = chunked_rowsum(dnew)
 
     e_blk = jnp.where(valid, e_sums / n, jnp.inf)
     e_cl, m_cl = _incumbent(e_blk, idx, e_cl, m_cl)
@@ -280,7 +283,7 @@ def _stage_round(X, Xs, surv_idx, x_sq, n, metric, use_kernels,
         dnew_s = dprev_s                              # unused carry (0, M)
     else:
         dnew = pairwise(xb, X, metric, a_sq=jnp.take(x_sq, idx), b_sq=x_sq)
-        e_sums = dnew.sum(axis=1)
+        e_sums = chunked_rowsum(dnew)                 # fixed grid (§11)
         dnew_s = jnp.take(dnew, surv_idx, axis=1)     # rows at survivors
     e_blk = jnp.where(valid, e_sums / n, jnp.inf)
 
@@ -495,7 +498,7 @@ def _bpipe_round0(X, x_sq, a, v, k, metric, use_kernels, interpret, state,
     else:
         dnew = pairwise(xb, X, metric, a_sq=jnp.take(x_sq, idx), b_sq=x_sq)
         same_new = a_piv[:, None] == a[None, :]
-        s_sums = jnp.where(same_new, dnew, 0.0).sum(axis=1)
+        s_sums = chunked_rowsum(jnp.where(same_new, dnew, 0.0))
 
     s_blk = jnp.where(valid, s_sums, jnp.inf)
     s_best, m_best = _bincumbent(s_blk, idx, a_piv, valid, k, s_best,
@@ -628,7 +631,7 @@ def _bstage_round(X, Xs, surv_idx, a, a_s, v, k, x_sq, metric,
     else:
         dnew = pairwise(xb, X, metric, a_sq=jnp.take(x_sq, idx), b_sq=x_sq)
         same = a_piv[:, None] == a[None, :]
-        s_sums = jnp.where(same, dnew, 0.0).sum(axis=1)
+        s_sums = chunked_rowsum(jnp.where(same, dnew, 0.0))
         dnew_s = jnp.take(dnew, surv_idx, axis=1)
     s_blk = jnp.where(valid, s_sums, jnp.inf)
 

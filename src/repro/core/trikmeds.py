@@ -295,11 +295,13 @@ def _resolve_medoid_update(medoid_update, metric: str):
     if not isinstance(medoid_update, str):
         from repro.api.planner import resolve_update_plan
         medoid_update, overrides = resolve_update_plan(medoid_update, metric)
-    if medoid_update not in ("trimed", "scan", "pipelined", "bandit"):
+    if medoid_update not in ("trimed", "scan", "pipelined", "sharded",
+                             "bandit"):
         raise ValueError(
-            "medoid_update must be 'trimed', 'pipelined', 'bandit', "
-            f"'scan' or a MedoidQuery template, got {medoid_update!r}")
-    if (medoid_update in ("trimed", "pipelined")
+            "medoid_update must be 'trimed', 'pipelined', 'sharded', "
+            "'bandit', 'scan' or a MedoidQuery template, got "
+            f"{medoid_update!r}")
+    if (medoid_update in ("trimed", "pipelined", "sharded")
             and not get_metric(metric).has_triangle):
         return "scan", overrides
     return medoid_update, overrides
@@ -314,16 +316,13 @@ def _assign_step(X, m_idx, x_sq, metric):
     return a, d_own
 
 
-def _kmedoids_pipelined_impl(X, k, seed, n_iter, metric, block,
-                             block_schedule, use_kernels):
-    """Voronoi iteration whose medoid-update step is the
-    survivor-compacted pipelined engine (DESIGN.md §4). The compaction
-    ladder needs host-side orchestration, so the iteration is a Python
-    loop over jitted stage programs rather than one ``lax.scan`` — a few
-    host syncs per iteration against an asymptotically smaller
-    medoid-update step."""
-    from .pipelined import _batched_medoids_pipelined
-
+def _kmedoids_update_loop(X, k, seed, n_iter, metric, update_fn):
+    """Shared Voronoi-iteration driver for the host-orchestrated
+    medoid-update engines (pipelined / sharded — both need a Python loop
+    over jitted stage programs rather than one ``lax.scan``: a few host
+    syncs per iteration against an asymptotically smaller update step).
+    ``update_fn(assignment, warm_idx)`` runs one medoid-update and
+    returns its ``BatchedMedoidResult``."""
     n = X.shape[0]
     x_sq = sq_norms(X)
     m_idx = _maximin_init(X, k, x_sq, seed, metric)
@@ -332,10 +331,7 @@ def _kmedoids_pipelined_impl(X, k, seed, n_iter, metric, block,
     for _ in range(n_iter):
         a, _ = _assign_step(X, m_idx, x_sq, metric)
         n_rows += k
-        res = _batched_medoids_pipelined(
-            X, a, k, block=block, metric=metric,
-            block_schedule=block_schedule, use_kernels=use_kernels,
-            warm_idx=np.asarray(m_idx))
+        res = update_fn(a, np.asarray(m_idx))
         m_new = jnp.asarray(res.medoids, jnp.int32)
         m_idx = jnp.where(m_new >= 0, m_new, m_idx)
         n_rows += res.n_computed
@@ -343,6 +339,42 @@ def _kmedoids_pipelined_impl(X, k, seed, n_iter, metric, block,
     n_rows += k
     energy = d_own.sum()
     return m_idx, a, energy, jnp.asarray(n_rows, jnp.int32)
+
+
+def _kmedoids_pipelined_impl(X, k, seed, n_iter, metric, block,
+                             block_schedule, use_kernels):
+    """Voronoi iteration whose medoid-update step is the
+    survivor-compacted pipelined engine (DESIGN.md §4)."""
+    from .pipelined import _batched_medoids_pipelined
+
+    def update(a, warm):
+        return _batched_medoids_pipelined(
+            X, a, k, block=block, metric=metric,
+            block_schedule=block_schedule, use_kernels=use_kernels,
+            warm_idx=warm)
+
+    return _kmedoids_update_loop(X, k, seed, n_iter, metric, update)
+
+
+def _kmedoids_sharded_impl(X, k, seed, n_iter, metric, block,
+                           block_schedule, use_kernels, mesh, mesh_axis):
+    """Voronoi iteration whose medoid-update step is the *sharded*
+    multi-cluster engine (DESIGN.md §11): the K concurrent per-cluster
+    searches shard X's columns across ``mesh`` (default: a 1-axis mesh
+    over all local devices), with medoids bit-identical to the
+    single-device pipelined update."""
+    from .distributed import _batched_medoids_sharded
+
+    kw = {} if mesh_axis is None else {"axis": mesh_axis}
+
+    def update(a, warm):
+        res, _per = _batched_medoids_sharded(
+            X, a, k, mesh=mesh, block=block, metric=metric,
+            block_schedule=block_schedule, use_kernels=use_kernels,
+            warm_idx=warm, **kw)
+        return res
+
+    return _kmedoids_update_loop(X, k, seed, n_iter, metric, update)
 
 
 def _kmedoids_bandit_impl(X, k, seed, n_iter, metric, bandit_budget,
@@ -415,6 +447,8 @@ def kmedoids_jax(
     use_kernels: bool = False,
     block_schedule=None,
     bandit_budget: float = 0.25,
+    mesh=None,
+    mesh_axis=None,
 ):
     """Batched Voronoi-iteration K-medoids on device. The medoid-update
     step runs the batched multi-cluster trimed engine (DESIGN.md §3): K
@@ -437,11 +471,16 @@ def kmedoids_jax(
     budget as a fraction of the cluster size (DESIGN.md §9); it is the
     only update that trades exactness of the step for cost, and the only
     one valid for non-triangle metrics without falling back to scan.
-    ``medoid_update`` may also be a nested :class:`repro.api.MedoidQuery`
-    template describing the per-iteration update search declaratively
-    (``mode="anytime"``/``budget`` selects the bandit update; its
-    ``block`` / ``block_schedule`` / ``use_kernels`` override this
-    call's). Returns (medoid_indices, assignment, energy).
+    ``medoid_update="sharded"`` runs the update step through the
+    column-sharded multi-cluster engine (DESIGN.md §11) on ``mesh`` (or
+    a default 1-axis mesh over all local devices) — K cluster searches
+    scaled across devices, medoids bit-identical to the pipelined
+    update. ``medoid_update`` may also be a nested
+    :class:`repro.api.MedoidQuery` template describing the
+    per-iteration update search declaratively (``mode="anytime"`` /
+    ``budget`` selects the bandit update; its ``block`` /
+    ``block_schedule`` / ``use_kernels`` override this call's).
+    Returns (medoid_indices, assignment, energy).
     """
     from .pipelined import resolve_schedule
 
@@ -451,6 +490,11 @@ def kmedoids_jax(
     use_kernels = ov.get("use_kernels", use_kernels)
     bandit_budget = ov.get("bandit_budget", bandit_budget)
     block = int(min(block, X.shape[0]))
+    if medoid_update == "sharded":
+        m_idx, a, energy, _ = _kmedoids_sharded_impl(
+            jnp.asarray(X), k, seed, n_iter, metric, block, block_schedule,
+            use_kernels, mesh, mesh_axis)
+        return m_idx, a, energy
     if medoid_update == "pipelined":
         m_idx, a, energy, _ = _kmedoids_pipelined_impl(
             jnp.asarray(X), k, seed, n_iter, metric, block, block_schedule,
@@ -479,6 +523,8 @@ def kmedoids_batched(
     use_kernels: bool = False,
     block_schedule=None,
     bandit_budget: float = 0.25,
+    mesh=None,
+    mesh_axis=None,
 ) -> KMedoidsJaxResult:
     """Instrumented wrapper around the device K-medoids: same iteration
     as :func:`kmedoids_jax` plus distance-computation accounting, for the
@@ -494,7 +540,11 @@ def kmedoids_batched(
     X = jnp.asarray(X)
     n = X.shape[0]
     block = int(min(block, n))
-    if medoid_update == "pipelined":
+    if medoid_update == "sharded":
+        m_idx, a, energy, n_rows = _kmedoids_sharded_impl(
+            X, k, seed, n_iter, metric, block, block_schedule, use_kernels,
+            mesh, mesh_axis)
+    elif medoid_update == "pipelined":
         m_idx, a, energy, n_rows = _kmedoids_pipelined_impl(
             X, k, seed, n_iter, metric, block, block_schedule, use_kernels)
     elif medoid_update == "bandit":

@@ -151,6 +151,24 @@ def masked_bound_update(xb, x, s, v_piv, valid, a_piv, a_x, l, metric="l2",
     return out[:n]
 
 
+@functools.partial(jax.jit, static_argnames=("metric", "tn", "interpret"))
+def partial_energies(xb, x, col_valid, metric="l2", tn=DEFAULT_TN,
+                     interpret=None):
+    """(B,) row sums over only the columns with ``col_valid`` True.
+
+    The sharded engine's per-shard energy pass (DESIGN.md §11): a shard
+    holds a contiguous column slice of the padded element set, and the
+    trailing layout-padding columns must contribute exactly zero. The
+    column mask is encoded as cluster membership (valid -> 0, invalid ->
+    -1) so the existing assignment-masked energy kernel serves as the
+    masked partial-sum kernel with a single cluster — no new Pallas
+    code, one stream of the local block."""
+    a_x = jnp.where(col_valid, 0, -1).astype(jnp.int32)
+    a_piv = jnp.zeros(xb.shape[0], jnp.int32)
+    return masked_energies(xb, x, a_piv, a_x, metric=metric, tn=tn,
+                           interpret=interpret)
+
+
 def fused_masked_round(xb, x, l, valid, a_piv, a_x, v_piv, metric="l2",
                        tn=DEFAULT_TN, interpret=None):
     """One batched multi-cluster round (DESIGN.md §3): exact in-cluster

@@ -59,11 +59,53 @@ GOLDEN = [
 
 
 @pytest.mark.parametrize("n,kw,engine", GOLDEN)
-def test_planner_golden(n, kw, engine):
+def test_planner_golden(n, kw, engine, monkeypatch):
+    from repro.api import planner
+    monkeypatch.setattr(planner, "_device_count", lambda: 1)
     X = np.empty((n, 3), np.float32)       # planning must not touch values
     plan = plan_query(MedoidQuery(X, **kw))
     assert plan.engine == engine, plan
     assert plan.reasons                     # every choice carries a why
+
+
+GOLDEN_MULTIDEVICE = [
+    # (n, query-kwargs, expected engine) with 8 devices visible
+    (4096, {}, "pipelined"),                       # threshold is strict >
+    (8192, {}, "sharded"),                         # auto-shard kicks in
+    (100_000, {}, "sharded"),
+    (8192, {"device_policy": "host"}, "sequential"),
+    (1024, {"device_policy": "sharded"}, "sharded"),   # forced at any N
+    (1024, {"device_policy": "sharded", "metric": "cosine"}, "scan"),
+    (8192, {"budget": 100.0}, "hybrid"),           # anytime never shards
+]
+
+
+@pytest.mark.parametrize("n,kw,engine", GOLDEN_MULTIDEVICE)
+def test_planner_golden_multidevice(n, kw, engine, monkeypatch):
+    """Auto-selection: jax.device_count() > 1 and N > SHARDED_N routes
+    exact single-medoid queries to the sharded engine (DESIGN.md §11)."""
+    from repro.api import planner
+    monkeypatch.setattr(planner, "_device_count", lambda: 8)
+    X = np.empty((n, 3), np.float32)
+    plan = plan_query(MedoidQuery(X, **kw))
+    assert plan.engine == engine, plan
+    if engine in ("sharded", "batched_sharded"):
+        assert plan.params["n_shards"] == 8
+
+
+def test_planner_sharded_rejections():
+    X = np.empty((1024, 3), np.float32)
+    with pytest.raises(ValueError, match="sharded"):
+        plan_query(MedoidQuery(X, device_policy="sharded", mode="anytime"))
+    with pytest.raises(ValueError, match="sharded"):
+        plan_query(MedoidQuery(X, device_policy="sharded", topk=3))
+    from repro.core import VectorOracle
+    with pytest.raises(ValueError, match="sharded"):
+        plan_query(MedoidQuery(VectorOracle(_X(64)),
+                               device_policy="sharded"))
+    with pytest.raises(ValueError, match="bandit"):
+        plan_query(MedoidQuery(X, k=4, device_policy="sharded",
+                               update=MedoidQuery(None, mode="anytime")))
 
 
 def test_planner_golden_assignments():
@@ -200,8 +242,11 @@ def test_solve_reaches_every_engine():
         (MedoidQuery(X[:64]), None),                      # sequential
         (MedoidQuery(X), None),                           # block
         (MedoidQuery(X), "pipelined"),
+        (MedoidQuery(X, device_policy="sharded"), None),  # sharded
         (MedoidQuery(X, k=3, assignments=a), None),       # batched
         (MedoidQuery(X, k=3, assignments=a), "batched_pipelined"),
+        (MedoidQuery(X, k=3, assignments=a,
+                     device_policy="sharded"), None),     # batched_sharded
         (MedoidQuery(X, budget=64.0), None),              # hybrid
         (MedoidQuery(X, budget=64.0, metric="cosine"), None),  # bandit
         (MedoidQuery(X, k=3, n_iter=2), None),            # kmedoids
@@ -493,7 +538,7 @@ EXPECTED_SIGNATURES = {
 
 EXPECTED_QUERY_FIELDS = [
     "X", "metric", "k", "assignments", "topk", "mode", "budget", "delta",
-    "warm_idx", "device_policy", "seed", "block", "block_schedule",
+    "warm_idx", "device_policy", "mesh", "seed", "block", "block_schedule",
     "use_kernels", "n_iter", "update", "engine_opts",
 ]
 
@@ -516,9 +561,9 @@ def test_public_api_snapshot():
         EXPECTED_QUERY_FIELDS
     assert list(inspect.signature(SolveReport).parameters) == \
         EXPECTED_REPORT_FIELDS
-    assert ENGINES == ("sequential", "block", "pipelined", "batched",
-                       "batched_pipelined", "bandit", "hybrid", "kmedoids",
-                       "topk", "scan")
+    assert ENGINES == ("sequential", "block", "pipelined", "sharded",
+                       "batched", "batched_pipelined", "batched_sharded",
+                       "bandit", "hybrid", "kmedoids", "topk", "scan")
 
 
 def test_query_is_a_pytree():

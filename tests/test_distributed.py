@@ -28,19 +28,25 @@ def _run(script: str, devices: int = 8, timeout: int = 480):
 
 
 def test_sharded_trimed_matches_single_device():
+    """The planner-reachable sharded engine (DESIGN.md §11) on 8
+    subprocess devices: bit-identical to the single-device pipelined
+    engine, with per-shard accounting summing to the total."""
     out = _run("""
         import numpy as np, jax
-        from jax.sharding import AxisType
-        from repro.core.distributed import trimed_sharded
-        from repro.core import trimed_block, exact_medoid
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        from repro.api import MedoidQuery, solve
+        from repro.core import exact_medoid
         X = np.random.default_rng(0).random((4096, 3)).astype(np.float32)
         ti, _ = exact_medoid(X)
-        r = trimed_sharded(X, mesh, axis="data", block=64)
-        rb = trimed_block(np.asarray(X), block=64)
-        assert r.index == ti == rb.index, (r.index, ti)
-        assert r.n_computed == rb.n_computed
-        print("OK", r.index, r.n_computed)
+        rep = solve(MedoidQuery(X, device_policy="sharded"))
+        ref = solve(MedoidQuery(X), plan="pipelined")
+        assert rep.plan.engine == "sharded"
+        assert rep.plan.params["n_shards"] == 8
+        assert rep.index == ref.index == ti, (rep.index, ref.index, ti)
+        assert rep.energy == ref.energy
+        assert rep.elements_computed == ref.elements_computed
+        per = rep.plan.params["per_shard_elements"]
+        assert len(per) == 8 and sum(per) == rep.elements_computed
+        print("OK", rep.index, int(rep.elements_computed))
     """)
     assert "OK" in out
 

@@ -1,0 +1,293 @@
+"""Sharded engine parity (DESIGN.md §11).
+
+The sharded pipelined engine must be *bit-identical* — medoid index,
+energy, computed-element count — to the single-device pipelined engine
+for any shard count dividing the fixed reduction grid, including ragged
+N (tail-shard padding). Shard counts above ``jax.device_count()`` skip;
+the CI multi-device job (``XLA_FLAGS=--xla_force_host_platform_device_
+count=8``) runs the full grid, the single-device tier-1 job still
+exercises the whole engine stack at P=1.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+
+from _hyp import given, settings, st
+
+from repro.api import MedoidQuery, plan_query, solve
+from repro.compat import make_1d_mesh
+
+DEVICES = jax.device_count()
+SHARD_COUNTS = [p for p in (1, 2, 8) if p <= DEVICES]
+
+need8 = pytest.mark.skipif(
+    DEVICES < 8,
+    reason="needs 8 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+need2 = pytest.mark.skipif(DEVICES < 2, reason="needs >= 2 devices")
+
+
+def _X(n, d=3, seed=0):
+    return np.random.default_rng(seed).random((n, d)).astype(np.float32)
+
+
+def _single_device_report(X, metric, block=128):
+    """The sharded engines' parity oracle: pipelined for triangle
+    metrics, the blockwise scan otherwise."""
+    from repro.api import get_metric
+    plan = "pipelined" if get_metric(metric).has_triangle else "scan"
+    return solve(MedoidQuery(X, metric=metric, block=block), plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# acceptance grid: 8 simulated devices, l2/l1/cosine, N in {1024, 4097}
+# ---------------------------------------------------------------------------
+@need8
+@pytest.mark.parametrize("metric", ["l2", "l1", "cosine"])
+@pytest.mark.parametrize("n", [1024, 4097])
+def test_acceptance_bit_identical_on_8_devices(n, metric):
+    X = _X(n, seed=n)
+    q = MedoidQuery(X, metric=metric, device_policy="sharded")
+    rep = solve(q)
+    ref = _single_device_report(X, metric)
+    assert rep.plan.params["n_shards"] == 8
+    assert rep.index == ref.index
+    assert rep.energy == ref.energy                 # bit-identical
+    per_shard = rep.plan.params["per_shard_elements"]
+    assert len(per_shard) == 8
+    assert sum(per_shard) == rep.elements_computed
+
+
+@pytest.mark.parametrize("p", SHARD_COUNTS)
+def test_sharded_explicit_mesh_bit_identical(p):
+    """Explicit mesh at every available shard count (P=1 runs in the
+    single-device tier-1 job, covering the whole engine stack)."""
+    X = _X(1024, seed=3)
+    q = MedoidQuery(X, device_policy="sharded", mesh=make_1d_mesh(p))
+    rep = solve(q)
+    ref = _single_device_report(X, "l2")
+    assert rep.plan.engine == "sharded"
+    assert rep.plan.params["n_shards"] == p
+    assert rep.index == ref.index
+    assert rep.energy == ref.energy
+    assert rep.elements_computed == ref.elements_computed
+    assert rep.certified and rep.ci == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(64, 220),
+    d=st.integers(1, 4),
+    block=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+    metric=st.sampled_from(["l2", "l1"]),
+    p=st.sampled_from(SHARD_COUNTS),
+    dup=st.booleans(),
+)
+def test_property_sharded_matches_single_device(n, d, block, seed, metric,
+                                                p, dup):
+    """Property: identical medoid index, energy and computed-element
+    count across metrics, shard counts and ragged N (the tail shard is
+    padded and masked — N is almost never divisible by P here)."""
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    if dup:                                    # force heavy duplication
+        X = X[rng.integers(0, max(2, n // 4), n)]
+    q = MedoidQuery(X, metric=metric, block=block,
+                    device_policy="sharded", mesh=make_1d_mesh(p))
+    rep = solve(q)
+    ref = solve(MedoidQuery(X, metric=metric, block=block),
+                plan="pipelined")
+    assert rep.index == ref.index
+    assert rep.energy == ref.energy
+    assert rep.elements_computed == ref.elements_computed
+    assert rep.extras["raw"].n_rounds == ref.extras["raw"].n_rounds
+
+
+def test_sharded_block_wider_than_shard_stays_exact():
+    """When block > ceil(N/P) the sharded engine caps its round width
+    (round structure diverges from single-device) but exactness must
+    hold: same medoid, same exact energy."""
+    p = max(SHARD_COUNTS)
+    X = _X(333, seed=11)
+    rep = solve(MedoidQuery(X, block=128, device_policy="sharded",
+                            mesh=make_1d_mesh(p)))
+    ref = _single_device_report(X, "l2")
+    assert rep.index == ref.index
+    assert rep.energy == ref.energy
+
+
+# ---------------------------------------------------------------------------
+# sharded scan fallback: non-triangle and registered user metrics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("metric", ["cosine", "sqeuclidean"])
+def test_sharded_scan_fallback_bit_identical(metric):
+    X = _X(777, d=4, seed=7)
+    q = MedoidQuery(X, metric=metric, device_policy="sharded")
+    plan = plan_query(q)
+    assert plan.engine == "scan" and plan.params["sharded"]
+    rep = solve(q)
+    ref = solve(MedoidQuery(X, metric=metric), plan="scan")
+    assert rep.index == ref.index
+    assert rep.energy == ref.energy
+    assert sum(rep.plan.params["per_shard_elements"]) == len(X)
+
+
+def test_sharded_scan_registered_user_metric():
+    """A register_metric-defined metric runs through the sharded scan
+    via its pairwise_fn inside shard_map — no repro internals touched."""
+    import jax.numpy as jnp
+    from repro.api import register_metric, unregister_metric
+
+    def chebyshev(a, b):
+        return jnp.max(jnp.abs(a[:, None, :] - b[None, :, :]), axis=-1)
+
+    register_metric("chebyshev_sharded", chebyshev, has_triangle=False)
+    try:
+        X = _X(300, d=4, seed=9)
+        D = np.abs(X[:, None, :] - X[None, :, :]).max(-1)
+        ti = int(D.sum(1).argmin())
+        rep = solve(MedoidQuery(X, metric="chebyshev_sharded",
+                                device_policy="sharded"))
+        assert rep.plan.engine == "scan" and rep.plan.params["sharded"]
+        assert rep.index == ti
+    finally:
+        unregister_metric("chebyshev_sharded")
+
+
+# ---------------------------------------------------------------------------
+# batched multi-cluster variant
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("p", SHARD_COUNTS)
+def test_batched_sharded_matches_batched_pipelined(p):
+    rng = np.random.default_rng(2)
+    n, k = 1500, 5
+    X = rng.standard_normal((n, 3)).astype(np.float32)
+    a = rng.integers(0, k, n)
+    q = MedoidQuery(X, k=k, assignments=a, block=24,
+                    device_policy="sharded", mesh=make_1d_mesh(p))
+    rep = solve(q)
+    ref = solve(MedoidQuery(X, k=k, assignments=a, block=24),
+                plan="batched_pipelined")
+    assert rep.plan.engine == "batched_sharded"
+    assert np.array_equal(rep.indices, ref.indices)
+    assert np.array_equal(rep.energies, ref.energies)   # bit-identical
+    assert rep.elements_computed == ref.elements_computed
+
+
+def test_batched_sharded_warm_empty_and_oob_clusters():
+    p = max(SHARD_COUNTS)
+    rng = np.random.default_rng(3)
+    n, k = 600, 6
+    X = rng.standard_normal((n, 2)).astype(np.float32)
+    a = rng.integers(0, 4, n)                  # clusters 4, 5 empty
+    a[:5] = -1                                 # out-of-range labels
+    ref = solve(MedoidQuery(X, k=k, assignments=a, block=32),
+                plan="batched_pipelined")
+    rep = solve(MedoidQuery(X, k=k, assignments=a, block=32,
+                            device_policy="sharded", mesh=make_1d_mesh(p)))
+    assert np.array_equal(rep.indices, ref.indices)
+    assert rep.indices[4] == -1 and rep.indices[5] == -1
+    # warm start from the known answer terminates and stays exact
+    warm = solve(MedoidQuery(X, k=k, assignments=a, block=32,
+                             warm_idx=ref.indices, device_policy="sharded",
+                             mesh=make_1d_mesh(p)))
+    assert np.array_equal(warm.indices, ref.indices)
+
+
+def test_kmedoids_sharded_update_matches_pipelined():
+    from repro.core import kmedoids_batched
+    rng = np.random.default_rng(5)
+    X = rng.standard_normal((900, 4)).astype(np.float32)
+    r_pip = kmedoids_batched(X, 5, n_iter=3, medoid_update="pipelined")
+    r_sh = kmedoids_batched(X, 5, n_iter=3, medoid_update="sharded",
+                            mesh=make_1d_mesh(max(SHARD_COUNTS)))
+    assert np.array_equal(r_pip.medoids, r_sh.medoids)
+    assert np.array_equal(r_pip.assignment, r_sh.assignment)
+    assert abs(r_pip.energy - r_sh.energy) < 1e-3
+
+
+def test_kmedoids_sharded_via_query():
+    X = _X(400, seed=13)
+    rep = solve(MedoidQuery(X, k=3, n_iter=2, device_policy="sharded"))
+    assert rep.plan.params["medoid_update"] == "sharded"
+    ref = solve(MedoidQuery(X, k=3, n_iter=2,
+                            update=MedoidQuery(
+                                None, engine_opts={"engine": "pipelined"})))
+    assert np.array_equal(rep.indices, ref.indices)
+
+
+# ---------------------------------------------------------------------------
+# kernel path (Pallas interpret on CPU) — exact, index-level parity
+# ---------------------------------------------------------------------------
+def test_sharded_kernel_path_matches_jnp():
+    p = max(SHARD_COUNTS)
+    X = _X(500, d=4, seed=17)
+    mesh = make_1d_mesh(p)
+    r_jnp = solve(MedoidQuery(X, block=32, device_policy="sharded",
+                              mesh=mesh))
+    r_ker = solve(MedoidQuery(X, block=32, device_policy="sharded",
+                              mesh=mesh, use_kernels=True))
+    assert r_jnp.index == r_ker.index
+    np.testing.assert_allclose(r_jnp.energy, r_ker.energy, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# plumbing: accounting, mesh validation, deprecation shim
+# ---------------------------------------------------------------------------
+def test_sharded_plan_records_shard_accounting():
+    rep = solve(MedoidQuery(_X(512, seed=1), device_policy="sharded"))
+    p = rep.plan
+    assert p.params["n_shards"] >= 1
+    per = p.params["per_shard_elements"]
+    assert len(per) == p.params["n_shards"]
+    assert sum(per) == rep.elements_computed
+    assert np.array_equal(rep.extras["per_shard_elements"], per)
+
+
+def test_sharded_rejects_non_dividing_mesh():
+    from repro.core.distributed import _resolve_mesh
+    if DEVICES < 5:
+        pytest.skip("needs >= 5 devices for a non-dividing axis size")
+    with pytest.raises(ValueError, match="does not divide"):
+        _resolve_mesh(make_1d_mesh(5), "shard")
+
+
+def test_shard_count_for_picks_largest_divisor():
+    from repro.core.distances import REDUCE_CHUNKS
+    from repro.core.distributed import shard_count_for
+    assert shard_count_for(1) == 1
+    assert shard_count_for(8) == 8
+    assert shard_count_for(5) == 4
+    assert shard_count_for(16) == 16
+    assert shard_count_for(10**6) == REDUCE_CHUNKS
+
+
+def test_trimed_sharded_shim_warns_and_matches_solve():
+    from repro.core.distributed import trimed_sharded
+    X = _X(400, seed=21)
+    mesh = make_1d_mesh(max(SHARD_COUNTS), "data")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r = trimed_sharded(X, mesh, axis="data", block=32)
+    msgs = [x for x in w if issubclass(x.category, DeprecationWarning)
+            and "repro legacy entrypoint" in str(x.message)]
+    assert len(msgs) == 1
+    rep = solve(MedoidQuery(X, block=32, device_policy="sharded",
+                            mesh=mesh, engine_opts={"axis": "data"}),
+                plan="sharded")
+    assert r == rep.extras["raw"]
+
+
+@need2
+def test_sharded_ragged_tail_multi_device():
+    """N chosen so the tail shard is mostly padding."""
+    for n in (1001, 4097):
+        X = _X(n, seed=n)
+        rep = solve(MedoidQuery(X, device_policy="sharded",
+                                mesh=make_1d_mesh(2)))
+        ref = _single_device_report(X, "l2")
+        assert rep.index == ref.index and rep.energy == ref.energy
