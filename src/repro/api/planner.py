@@ -101,26 +101,46 @@ def _device_count() -> int:
 def _shard_params(q: MedoidQuery):
     """Resolved (shard count, mesh axis) for a sharded plan: the query's
     mesh if given, else the default 1-axis mesh the executor will build
-    (largest REDUCE_CHUNKS divisor <= the local device count)."""
-    from repro.core.distributed import AXIS, shard_count_for
+    (largest REDUCE_CHUNKS divisor <= the local device count). An
+    explicit mesh goes through the engine's own ``_resolve_mesh`` so a
+    plan the engine would reject (missing axis, axis size not dividing
+    the reduction grid) fails here, at planning time, with the same
+    error — ``explain=True`` never reports layout params for a geometry
+    that cannot execute."""
+    from repro.core.distributed import AXIS, _resolve_mesh, shard_count_for
     axis = q.engine_opts.get("axis", AXIS)
     if q.mesh is not None:
-        if axis not in q.mesh.shape:
-            raise ValueError(
-                f"solve: mesh has no axis {axis!r} (axes: "
-                f"{list(q.mesh.shape)}); name the element axis via "
-                "engine_opts={'axis': ...}")
-        return int(q.mesh.shape[axis]), axis
+        return _resolve_mesh(q.mesh, axis)[1], axis
     return shard_count_for(_device_count()), axis
 
 
-def _kmedoids_update_params(q: MedoidQuery):
+def _record_block_clamp(q: MedoidQuery, params, reasons, n_shards,
+                        requested):
+    """Surface the sharded engines' round-width clamp (block > per-shard
+    column count) in the plan, so the deviation from the single-device
+    pivot sequence is visible before run time, not silent."""
+    from repro.core.distributed import effective_block
+    n = int(np.shape(q.X)[0])
+    eff = effective_block(n, n_shards, requested)
+    if eff < min(requested, n):
+        params["block_effective"] = eff
+        reasons.append(
+            f"block={requested} exceeds the per-shard column count: "
+            f"round width clamps to {eff} (exact, but pivot sequence "
+            "diverges from single-device)")
+
+
+def _kmedoids_update_params(q: MedoidQuery, reasons: list):
     """The K-medoids medoid-update derivation, shared by plan_query and
     the ``plan=`` override path. ``mode="anytime"`` with no nested
     update query means the paper's §5 relaxation (the budgeted bandit
     update); a top-level ``budget`` is rejected as ambiguous.
     ``device_policy="sharded"`` promotes the exact update engines to the
-    sharded multi-cluster engine (DESIGN.md §11)."""
+    sharded multi-cluster engine (DESIGN.md §11) — except on
+    non-triangle metrics, where the elimination update is inadmissible
+    and the driver's exact fallback is the host scan: the plan records
+    ``"scan"`` honestly (with a reason) instead of claiming a sharded
+    update the driver would silently downgrade."""
     if q.budget is not None:
         raise ValueError(
             "solve: a top-level budget on a K-medoids query is ambiguous "
@@ -140,6 +160,12 @@ def _kmedoids_update_params(q: MedoidQuery):
                 "device); drop the anytime update or the sharded policy")
         if mu in ("trimed", "pipelined"):
             mu = "sharded"
+    if mu == "sharded" and not get_metric(q.metric).has_triangle:
+        mu = "scan"
+        reasons.append(
+            f"medoid-update: non-triangle metric {q.metric!r} cannot "
+            "use the sharded elimination update; exact host-scan update "
+            "runs single-device")
     return mu, overrides
 
 
@@ -164,14 +190,21 @@ def _derive_params(query: MedoidQuery, engine: str, reasons: list,
         params["mesh_axis"] = axis
         if engine == "scan":
             params["sharded"] = True
+        elif not _is_oracle(query.X):
+            _record_block_clamp(query, params, reasons, n_shards,
+                                int(query.block))
     if engine == "kmedoids":
-        mu, overrides = _kmedoids_update_params(query)
+        mu, overrides = _kmedoids_update_params(query, reasons)
         params["medoid_update"] = mu
         params["update_overrides"] = overrides
         if mu == "sharded":
             n_shards, axis = _shard_params(query)
             params["n_shards"] = n_shards
             params["mesh_axis"] = axis
+            if not _is_oracle(query.X):
+                _record_block_clamp(query, params, reasons, n_shards,
+                                    int(overrides.get("block",
+                                                      query.block)))
     return params
 
 
@@ -216,7 +249,8 @@ def plan_query(query: MedoidQuery) -> Plan:
                 "multi-cluster exact, "
                 + ("device_policy='sharded'" if sharded_req else
                    f"N={n} > {SHARDED_N} with {_device_count()} devices")
-                + ": column-sharded batched engine (DESIGN.md §11)")
+                + f": column-sharded batched engine over "
+                  f"{_shard_params(q)[0]} shard(s) (DESIGN.md §11)")
             engine = "batched_sharded"
         elif n > BATCHED_PIPELINE_N:
             reasons.append(f"multi-cluster exact, N={n} > "
@@ -228,7 +262,9 @@ def plan_query(query: MedoidQuery) -> Plan:
             engine = "batched"
     elif q.k is not None:
         engine = "kmedoids"
-        mu, _ = _kmedoids_update_params(q)     # validates; params below
+        # validates + names the engine for the reason line; the params
+        # (and any downgrade reason) are derived once in _derive_params
+        mu, _ = _kmedoids_update_params(q, [])
         reasons.append(f"K-medoids clustering (k={q.k}); medoid-update "
                        f"engine {mu!r} from the nested update query"
                        if q.update is not None or q.mode == "anytime" else
@@ -292,6 +328,7 @@ def plan_query(query: MedoidQuery) -> Plan:
         engine = "sharded"
         reasons.append(f"N={n} > {SHARDED_N} with {_device_count()} "
                        "devices up: column-sharded pipelined engine "
+                       f"over {_shard_params(q)[0]} shard(s) "
                        "(DESIGN.md §11)")
     else:
         engine = "pipelined"
@@ -585,9 +622,13 @@ def _run_kmedoids(q: MedoidQuery, plan: Plan) -> SolveReport:
     mu = plan.params.get("medoid_update", "trimed")
     kw = dict(block=q.block, block_schedule=q.block_schedule,
               use_kernels=bool(plan.params.get("use_kernels")))
+    if mu == "sharded" or q.device_policy == "sharded":
+        # 'axis' names the mesh axis for the sharded update — consumed
+        # here, or moot after the non-triangle downgrade to 'scan';
+        # kmedoids_batched itself never takes it
+        opts.pop("axis", None)
     if mu == "sharded":
         kw["mesh"] = q.mesh
-        opts.pop("axis", None)
         if "axis" in q.engine_opts:
             kw["mesh_axis"] = q.engine_opts["axis"]
     kw.update(overrides)

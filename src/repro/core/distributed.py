@@ -20,8 +20,11 @@ exchanges only three tiny replicated quantities:
   sequence, medoid index, energy, computed-element count) to the
   single-device pipelined engine for any shard count dividing
   ``REDUCE_CHUNKS``;
-* **termination / ladder control**: ``psum`` of integer survivor
-  counts — exact.
+* **termination / ladder control**: ``psum`` (global live total) and
+  ``pmax`` (max per-shard live, the quantity the host sizes the ladder
+  rung from — gating recompaction on it guarantees every stage runs at
+  least one round even when survivors skew across shards) of integer
+  survivor counts — exact.
 
 Per-shard survivor compaction keeps the fold, selection and loop
 predicate ``O(M/P)`` per shard on the same power-of-two ladder as the
@@ -45,6 +48,7 @@ Entry points: the planner executes ``_trimed_sharded`` /
 from __future__ import annotations
 
 import functools
+import warnings
 
 import numpy as np
 
@@ -101,6 +105,32 @@ def _layout(n: int, p: int):
     s = chunk_size(n)
     n_pad = REDUCE_CHUNKS * s
     return s, n_pad, n_pad // p, REDUCE_CHUNKS // p
+
+
+def effective_block(n: int, p: int, block: int) -> int:
+    """Pivot-block width the sharded engines actually run: ``block``
+    clamped to the per-shard column count of the reduction-grid layout.
+    Candidates are elected from per-shard top-``B`` proposals, so one
+    round can never compute more pivots than one shard holds columns.
+    When the clamp bites (``block`` > per-shard width) results stay
+    exact but the pivot sequence and work counters diverge from the
+    single-device engine configured with the same ``block`` — the
+    planner records the clamped width and the engines warn."""
+    return int(min(block, n, _layout(n, p)[2]))
+
+
+def _clamped_block(block, n, p, caller):
+    requested = int(block)
+    eff = effective_block(n, p, requested)
+    if eff < min(requested, n):
+        warnings.warn(
+            f"{caller}: block={requested} exceeds the per-shard column "
+            f"count {_layout(n, p)[2]} of the {p}-shard layout; round "
+            f"width clamped to {eff}. Results stay exact but the pivot "
+            "sequence and work counters diverge from the single-device "
+            f"engine at block={requested}.",
+            UserWarning, stacklevel=3)
+    return eff
 
 
 def _shard_base(axis, n_local):
@@ -371,17 +401,26 @@ def _build_stage(mesh, axis, n, d, m_loc, block, metric, use_kernels,
         state = (l_s, alive_s, e_cl, m_cl, pe, pv, pvecs, psq, dprev_s,
                  n_comp, n_rounds, own_in[0], fold_cols)
 
-        def live_of(state):
+        def local_live(state):
             l_s, alive_s, e_cl = state[0], state[1], state[2]
-            loc = jnp.logical_and(alive_s, l_s < e_cl).sum()
-            return jax.lax.psum(loc, axis)
+            return jnp.logical_and(alive_s, l_s < e_cl).sum()
 
         def cond(state):
-            live = live_of(state)
-            go = jnp.logical_and(live > 0, state[9] < budget)
+            loc = local_live(state)
+            go = jnp.logical_and(jax.lax.psum(loc, axis) > 0,
+                                 state[9] < budget)
             if is_floor:
                 return go
-            return jnp.logical_and(go, 4 * live > m_loc * p)
+            # The ladder gate must compare against the quantity the host
+            # sized the rung from: the *max* per-shard live count. The
+            # host picks m_loc = pow2_at_least(max_loc) < 2*max_loc, so
+            # 4*pmax(loc) > 2*m_loc > m_loc holds at stage entry and
+            # every stage runs at least one round. Gating on the global
+            # total (4*live > m_loc*p) instead can already be false at
+            # entry when survivors skew across shards (max >> mean, e.g.
+            # sorted or clustered inputs) — a zero-round stage the host
+            # loop would rebuild forever.
+            return jnp.logical_and(go, 4 * jax.lax.pmax(loc, axis) > m_loc)
 
         body = functools.partial(_sh_stage_round, cfg, xl, sql, colv,
                                  base, Xs, xs_sq, lpos, new_g, budget,
@@ -419,8 +458,12 @@ def _trimed_sharded(
     Bit-identical — pivot sequence, medoid index, energy, computed
     elements — to :func:`repro.core.pipelined._trimed_pipelined` on the
     jnp path, for any ``mesh`` whose ``axis`` size divides
-    ``REDUCE_CHUNKS`` and any ``block <= ceil(N/P)`` (the planner's
-    thresholds guarantee both). ``N`` need not divide the shard count:
+    ``REDUCE_CHUNKS`` (``_resolve_mesh`` rejects others) and any
+    ``block`` no wider than the per-shard column count. A wider
+    ``block`` is clamped to :func:`effective_block` with a
+    ``UserWarning`` — the result stays exact but the pivot sequence and
+    work counters follow the clamped width, not the single-device
+    engine's. ``N`` need not divide the shard count:
     the fixed reduction grid pads the tail shard and masks the fake
     columns out of every sum and candidate election.
 
@@ -437,7 +480,7 @@ def _trimed_sharded(
         per_shard[0] = 1                      # shard 0 owns the only row
         return MedoidResult(0, 0.0, 1, 0, 1), per_shard
     s, n_pad, n_local, c_loc = _layout(n, p)
-    block = int(min(block, n, n_local))
+    block = _clamped_block(block, n, p, "trimed_sharded")
     warm = resolve_schedule(block_schedule, block)
     floor = max(int(ladder_min), block)
     can_compact = n_local > floor
@@ -711,7 +754,7 @@ def _batched_medoids_sharded(
     n, d = X.shape
     mesh, p = _resolve_mesh(mesh, axis)
     s, n_pad, n_local, c_loc = _layout(n, p)
-    block = int(min(block, n, n_local))
+    block = _clamped_block(block, n, p, "batched_medoids_sharded")
     has_warm = warm_idx is not None
     warm = () if has_warm else resolve_schedule(block_schedule, block)
     interpret = (bool(interpret) if interpret is not None
@@ -798,8 +841,12 @@ def trimed_sharded(
     """**Deprecated** shim over ``solve(MedoidQuery(...,
     device_policy="sharded", mesh=...), plan="sharded")``. The pre-planner
     engine this symbol used to name is gone; the modern sharded engine
-    accepts ragged ``N`` (no divisibility requirement) and returns the
-    single-device pipelined engine's exact answer bit-for-bit."""
+    accepts ragged ``N`` (``N`` need not divide the shard count) and
+    returns the single-device pipelined engine's exact answer
+    bit-for-bit. It does, however, require the mesh axis size to divide
+    ``REDUCE_CHUNKS`` (= 48; see :func:`shard_count_for`) — a constraint
+    the pre-planner engine did not have, the price of the bit-identity
+    guarantee's fixed reduction grid."""
     from repro.api import MedoidQuery, solve, _warn_legacy
     _warn_legacy("trimed_sharded",
                  " (device_policy='sharded', plan='sharded')")

@@ -108,16 +108,82 @@ def test_property_sharded_matches_single_device(n, d, block, seed, metric,
 
 
 def test_sharded_block_wider_than_shard_stays_exact():
-    """When block > ceil(N/P) the sharded engine caps its round width
-    (round structure diverges from single-device) but exactness must
-    hold: same medoid, same exact energy."""
+    """When block > per-shard column count the sharded engine clamps its
+    round width (round structure diverges from single-device) but the
+    deviation is loud — a UserWarning from the engine, the clamped width
+    in ``plan.params['block_effective']`` — and exactness must hold:
+    same medoid, same exact energy."""
+    from repro.core.distributed import effective_block
     p = max(SHARD_COUNTS)
     X = _X(333, seed=11)
-    rep = solve(MedoidQuery(X, block=128, device_policy="sharded",
-                            mesh=make_1d_mesh(p)))
+    q = MedoidQuery(X, block=128, device_policy="sharded",
+                    mesh=make_1d_mesh(p))
+    eff = effective_block(333, p, 128)
+    if p > 1:
+        assert eff < 128
+        assert plan_query(q).params["block_effective"] == eff
+        with pytest.warns(UserWarning, match="round width clamped"):
+            rep = solve(q)
+    else:                          # P=1: no clamp, no warning, no param
+        assert eff == 128
+        assert "block_effective" not in plan_query(q).params
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", UserWarning)
+            rep = solve(q)
     ref = _single_device_report(X, "l2")
     assert rep.index == ref.index
     assert rep.energy == ref.energy
+
+
+# ---------------------------------------------------------------------------
+# skewed survivor distributions (sorted / clustered inputs)
+# ---------------------------------------------------------------------------
+def _blob_X(n=4097, d=3, seed=7):
+    """Tight, well-separated Gaussian blobs laid out contiguously, so
+    survivors concentrate in the medoid blob's column shard(s)."""
+    rng = np.random.default_rng(seed)
+    centers = 50.0 * rng.standard_normal((8, d)).astype(np.float32)
+    sizes = np.full(8, n // 8)
+    sizes[: n - sizes.sum()] += 1
+    return np.concatenate(
+        [c + 0.01 * rng.standard_normal((s, d)).astype(np.float32)
+         for c, s in zip(centers, sizes)])
+
+
+@need2
+@pytest.mark.parametrize("kind", ["sorted", "blobs"])
+def test_sharded_skewed_survivors_terminate_and_match(kind):
+    """Contiguous column shards of sorted or clustered data put most
+    survivors in one or two shards (max per-shard live >> mean) — the
+    regime where a compaction-ladder gate comparing the *global* live
+    total against the max-sized rung goes false at stage entry and the
+    host rebuilds a zero-round stage forever. The watchdog turns a
+    regression into a failure instead of a hung CI job; parity with the
+    single-device engine must still be bit-exact."""
+    import signal
+    rng = np.random.default_rng(7)
+    if kind == "sorted":
+        X = rng.standard_normal((4097, 3)).astype(np.float32)
+        X = X[np.argsort(X[:, 0], kind="stable")]
+    else:
+        X = _blob_X()
+
+    def _stalled(signum, frame):
+        raise TimeoutError(
+            "sharded compaction ladder stalled (zero-round stage)")
+
+    old = signal.signal(signal.SIGALRM, _stalled)
+    signal.alarm(300)
+    try:
+        rep = solve(MedoidQuery(X, device_policy="sharded",
+                                mesh=make_1d_mesh(max(SHARD_COUNTS))))
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+    ref = _single_device_report(X, "l2")
+    assert rep.index == ref.index
+    assert rep.energy == ref.energy
+    assert rep.elements_computed == ref.elements_computed
 
 
 # ---------------------------------------------------------------------------
@@ -208,6 +274,23 @@ def test_kmedoids_sharded_update_matches_pipelined():
     assert np.array_equal(r_pip.medoids, r_sh.medoids)
     assert np.array_equal(r_pip.assignment, r_sh.assignment)
     assert abs(r_pip.energy - r_sh.energy) < 1e-3
+
+
+def test_kmedoids_sharded_non_triangle_reports_scan_update():
+    """device_policy='sharded' with a non-triangle metric cannot use the
+    sharded elimination update; the plan must record the driver's exact
+    host-scan fallback honestly — no 'sharded' label, no phantom
+    n_shards — instead of claiming a sharded update the driver silently
+    downgrades."""
+    q = MedoidQuery(_X(300, seed=23), k=3, n_iter=2, metric="cosine",
+                    device_policy="sharded")
+    plan = plan_query(q)
+    assert plan.engine == "kmedoids"
+    assert plan.params["medoid_update"] == "scan"
+    assert "n_shards" not in plan.params
+    assert any("non-triangle" in r for r in plan.reasons)
+    rep = solve(q)
+    assert rep.extras["medoid_update"] == "scan"
 
 
 def test_kmedoids_sharded_via_query():
