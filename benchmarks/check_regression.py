@@ -13,7 +13,16 @@ deterministic work counters the engines are built around:
   — the pipelined engine's 1-stream-per-round claim) and ``n_computed``
   (computed elements, the paper's cost axis);
 * ``bench_bandit``: ``elements`` (unified computed elements per engine
-  cell).
+  cell);
+* ``bench_serve``: ``elements_total`` (the packed path's summed
+  per-query accounting — deterministic for the seeded batch, so growth
+  means the packed engine started doing extra work) and, in the
+  *opposite direction*, ``speedup_vs_sequential`` (batch throughput
+  relative to a sequential ``solve()`` loop — a higher-is-better field
+  that fails when it *drops* more than ``TOLERANCE`` below the
+  committed baseline; wall-clock ratios wash out machine speed, and the
+  committed baseline is deliberately conservative to keep the gate
+  deflaked).
 
 Records are matched by their identity fields; a record present in the
 baseline but missing from the current run also fails (an engine cell
@@ -22,7 +31,10 @@ win). Regenerate the baselines deliberately with::
 
     PYTHONPATH=src python -m benchmarks.run --smoke
     cp results/BENCH_trimed_smoke.json results/BENCH_bandit_smoke.json \\
-        benchmarks/baselines/
+        results/BENCH_serve_smoke.json benchmarks/baselines/
+
+(then halve the serve baseline's speedup field by hand if the run was on
+an unusually fast machine — see ``serve_smoke.json`` provenance note).
 """
 from __future__ import annotations
 
@@ -36,12 +48,18 @@ RESULTS_DIR = ROOT / "results"
 
 TOLERANCE = 0.10          # >10% growth of a cost counter fails the gate
 
-# file -> (identity fields, gated cost fields)
+# file -> (identity fields, lower-is-better cost fields,
+#          higher-is-better throughput fields)
 GATES = {
     "BENCH_trimed_smoke.json": (("engine", "n", "d"),
-                                ("full_x_streams_per_round", "n_computed")),
+                                ("full_x_streams_per_round", "n_computed"),
+                                ()),
     "BENCH_bandit_smoke.json": (("engine", "n", "d", "budget_elements"),
-                                ("elements",)),
+                                ("elements",),
+                                ()),
+    "BENCH_serve_smoke.json": (("config", "batch", "d"),
+                               ("elements_total",),
+                               ("speedup_vs_sequential",)),
 }
 
 
@@ -49,7 +67,8 @@ def _index(records, id_fields):
     return {tuple(r.get(f) for f in id_fields): r for r in records}
 
 
-def check_file(name: str, id_fields, cost_fields) -> list[str]:
+def check_file(name: str, id_fields, cost_fields,
+               throughput_fields=()) -> list[str]:
     failures: list[str] = []
     base_path = BASELINE_DIR / name
     cur_path = RESULTS_DIR / name
@@ -71,24 +90,29 @@ def check_file(name: str, id_fields, cost_fields) -> list[str]:
             failures.append(f"{name}: baseline record {ident} missing "
                             "from the current run")
             continue
-        for f in cost_fields:
+        for f in cost_fields + tuple(throughput_fields):
             bv, cv = b.get(f), c.get(f)
             if bv is None or cv is None:
                 failures.append(f"{name}: {ident} field {f!r} absent "
                                 f"(baseline={bv}, current={cv})")
                 continue
-            if float(cv) > float(bv) * (1.0 + TOLERANCE) + 1e-12:
+            if f in cost_fields:
+                if float(cv) > float(bv) * (1.0 + TOLERANCE) + 1e-12:
+                    failures.append(
+                        f"{name}: {ident} {f} regressed "
+                        f"{bv} -> {cv} (>{TOLERANCE:.0%} over baseline)")
+            elif float(cv) < float(bv) * (1.0 - TOLERANCE) - 1e-12:
                 failures.append(
-                    f"{name}: {ident} {f} regressed "
-                    f"{bv} -> {cv} (>{TOLERANCE:.0%} over baseline)")
+                    f"{name}: {ident} {f} (higher is better) dropped "
+                    f"{bv} -> {cv} (>{TOLERANCE:.0%} below baseline)")
     return failures
 
 
 def main(argv=None) -> int:
     del argv
     failures: list[str] = []
-    for name, (id_fields, cost_fields) in GATES.items():
-        failures.extend(check_file(name, id_fields, cost_fields))
+    for name, (id_fields, cost_fields, tp_fields) in GATES.items():
+        failures.extend(check_file(name, id_fields, cost_fields, tp_fields))
     if failures:
         print("PERF REGRESSION GATE: FAIL")
         for f in failures:

@@ -18,18 +18,18 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke: tiny trimed + bandit sweeps (interpret "
-                         "path), validates BENCH_trimed.json and "
-                         "BENCH_bandit.json schemas + imports; the smoke "
-                         "JSONs land in results/ and feed the "
-                         "benchmarks.check_regression CI gate")
+                    help="CI smoke: tiny trimed + bandit + serve sweeps "
+                         "(interpret path), validates the BENCH_trimed, "
+                         "BENCH_bandit and BENCH_serve JSON schemas + "
+                         "imports; the smoke JSONs land in results/ and "
+                         "feed the benchmarks.check_regression CI gate")
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
     quick = not args.full
 
     from . import (bench_bandit, bench_batched, bench_fig3, bench_kernels,
-                   bench_sme_init, bench_table1, bench_table2, bench_trimed,
-                   roofline_report)
+                   bench_serve, bench_sme_init, bench_table1, bench_table2,
+                   bench_trimed, roofline_report)
 
     if args.smoke:
         # the benches now route every engine through repro.api.solve;
@@ -46,7 +46,8 @@ def main(argv=None):
               f"index={rep.index} elements={rep.elements_computed:.0f}")
 
         checks = [(bench_trimed, "bench_trimed/v1"),
-                  (bench_bandit, "bench_bandit/v1")]
+                  (bench_bandit, "bench_bandit/v1"),
+                  (bench_serve, "bench_serve/v1")]
         for bench, schema in checks:
             rows, path = bench.run(quick=True, mode="smoke")
             json_path = bench.json_path_for("smoke")
@@ -66,6 +67,7 @@ def main(argv=None):
         "trimed_engines": bench_trimed.run,
         "bandit_regret": bench_bandit.run,
         "batched_kmedoids": bench_batched.run,
+        "serve_throughput": bench_serve.run,
         "sme_init": bench_sme_init.run,
         "kernels": bench_kernels.run,
         "roofline": roofline_report.run,

@@ -21,6 +21,7 @@ from .api import (  # noqa: F401
     plan_query,
     register_metric,
     solve,
+    solve_many,
     unregister_metric,
 )
 
@@ -35,6 +36,7 @@ __all__ = [
     "plan_query",
     "register_metric",
     "solve",
+    "solve_many",
     "unregister_metric",
 ]
 

@@ -24,6 +24,7 @@ from .metrics import (Metric, available_metrics, get_metric,
                       register_metric, require_metric, unregister_metric)
 from .query import MedoidQuery, SolveReport
 from .planner import ENGINES, Plan, plan_query, resolve_update_plan, solve
+from .batch import solve_many
 
 __all__ = [
     "ENGINES",
@@ -38,6 +39,7 @@ __all__ = [
     "require_metric",
     "resolve_update_plan",
     "solve",
+    "solve_many",
     "unregister_metric",
 ]
 

@@ -1,0 +1,265 @@
+"""``solve_many`` — pack same-shape medoid queries into shared programs.
+
+The many-query serving front door (DESIGN.md §12). ``solve()`` amortises
+nothing across calls: every query pays its own dispatch, and a thousand
+small-N queries leave the device idle between tiny programs.
+``solve_many`` groups compatible queries into **shape buckets** — same
+``(N, d)``, dtype, metric, effective block width, kernel flag and
+warm-start presence — and runs each bucket as one jitted program with
+the query axis batched (``jax.vmap`` over the pipelined engine's
+full-domain stage; the query axis becomes a Pallas grid dimension on the
+kernel path). Per-query results are *bit-identical* to the single-query
+engine: the parity contract for every report is
+
+    solve(q, plan="pipelined",
+          q.with_(engine_opts={"ladder_min": N, ...}))
+
+i.e. the pipelined engine with the compaction ladder disabled (the
+ladder is a host-loop cost optimisation that a packed program forgoes;
+``report.plan.params["equivalent"]`` records the exact counterpart).
+
+Packing layout — why buckets, not column masks: the fixed reduction
+geometry (``distances.py``, DESIGN.md §11) ties energy bit-patterns to
+the *exact* column count, so padding a query's N to a bucket width would
+change the fp addition grouping and break bit-identity. Queries are
+therefore bucketed by exact N and padded along the **query axis** only:
+each bucket chunk is padded to the next power of two with zero-budget
+ghost lanes (frozen from the first predicate check, computing nothing),
+so the number of distinct compiled shapes per bucket stays O(log Q) and
+repeat calls — including 0- and 1-query batches — hit the jit cache.
+
+Budgets: each lane carries its own row budget through the traced budget
+argument, so one program serves mixed exact/anytime traffic. A capped
+lane keeps its exact-energy incumbent and reports the deterministic
+bound-gap interval (``ci`` = half of ``[min live lower bound, E_cl]``,
+scaled to the paper convention) with ``certified=False``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .metrics import require_metric
+from .planner import Plan, _estimate_cost, _is_oracle, _resolve_kernels
+from .query import MedoidQuery, SolveReport
+
+__all__ = ["solve_many"]
+
+_ALLOWED_OPTS = {"interpret"}
+_HUGE = 2**31 - 1
+# cap on the vmapped program's (Q, B, N) distance carries (two copies
+# live across a round). This bounds working-set size, not correctness:
+# keeping the carry near cache-resident beats maximal packing — on a
+# single-core CPU host, sweeping the cap showed ~20% per-query wins for
+# small chunks over 128-lane ones — while still amortising dispatch
+# across the chunk. Ghost-lane padding makes any cap bit-neutral.
+_MAX_CARRY_BYTES = 8 << 20
+
+
+def _pow2_at_least(x: int) -> int:
+    from repro.core.distances import pow2_at_least
+    return pow2_at_least(max(int(x), 1))
+
+
+def _validate(q: MedoidQuery, i: int) -> None:
+    if not isinstance(q, MedoidQuery):
+        raise TypeError(
+            f"solve_many: queries[{i}] is {type(q).__name__}, expected "
+            "MedoidQuery")
+    if _is_oracle(q.X):
+        raise ValueError(
+            f"solve_many: queries[{i}] wraps a host oracle; the packed "
+            "path needs (N, d) vector arrays (use solve() per query)")
+    if q.k is not None or q.assignments is not None or q.topk is not None:
+        raise ValueError(
+            f"solve_many: queries[{i}] is not a single-medoid query "
+            "(k/assignments/topk set); batch those via solve() per query")
+    if q.device_policy not in ("auto", "device"):
+        raise ValueError(
+            f"solve_many: queries[{i}] has device_policy="
+            f"{q.device_policy!r}; the packed path is single-device "
+            "(host and sharded queries go through solve())")
+    if q.mesh is not None:
+        raise ValueError(
+            f"solve_many: queries[{i}] carries a mesh; the packed path "
+            "is single-device")
+    if q.block_schedule is not None:
+        raise ValueError(
+            f"solve_many: queries[{i}] sets block_schedule; warm-up "
+            "schedules do not pack (per-query round widths would "
+            "diverge) — use warm_idx or solve() per query")
+    extra = set(q.engine_opts) - _ALLOWED_OPTS
+    if extra:
+        raise ValueError(
+            f"solve_many: queries[{i}] engine_opts {sorted(extra)} are "
+            f"not packable; supported: {sorted(_ALLOWED_OPTS)}")
+    require_metric(q.metric, need_triangle=True, caller="solve_many")
+    if np.ndim(q.X) != 2:
+        raise ValueError(
+            f"solve_many: queries[{i}].X must be (N, d), got shape "
+            f"{np.shape(q.X)}")
+
+
+def _prepare(q: MedoidQuery):
+    """Resolve one query to its packing record (host-side, cheap)."""
+    import jax.numpy as jnp
+    X = jnp.asarray(q.X)
+    n, d = X.shape
+    block = int(min(int(q.block), n))
+    reasons: list[str] = []
+    m = require_metric(q.metric, caller="solve_many")
+    use_kernels = _resolve_kernels(q, m, reasons, None)
+    interpret = q.engine_opts.get("interpret")
+    budget = _HUGE if q.budget is None else max(int(q.budget), 0)
+    if q.warm_idx is not None:
+        w = np.asarray(q.warm_idx, np.int64)
+        _, first = np.unique(w, return_index=True)
+        warm = w[np.sort(first)][:block].astype(np.int32)
+    else:
+        warm = None
+    key = (n, d, str(X.dtype), q.metric, block, use_kernels, interpret,
+           warm is not None)
+    return {"X": X, "n": n, "d": d, "block": block, "metric": q.metric,
+            "use_kernels": use_kernels, "interpret": interpret,
+            "budget": budget, "warm": warm, "key": key, "query": q}
+
+
+def _chunk_cap(n: int, block: int, override) -> int:
+    if override is not None:
+        return max(int(override), 1)
+    cap = _MAX_CARRY_BYTES // max(2 * block * n * 4, 1)
+    cap = 1 << max(int(cap).bit_length() - 1, 0)     # floor to a power of 2
+    return int(min(max(cap, 1), 1024))
+
+
+def _trivial_report(q: MedoidQuery, plan: Plan) -> SolveReport:
+    """N == 1 short-circuit, matching the pipelined engine's early
+    return (index 0, energy 0, one computed element)."""
+    return SolveReport(
+        indices=np.asarray([0], np.int64),
+        energies=np.asarray([0.0], np.float64),
+        certified=True, elements_computed=1.0, n_distances=1,
+        n_rounds=0, ci=0.0, plan=plan,
+        extras={"batch": {"n_queries": 1, "q_padded": 0,
+                          "elements_total": 1.0}})
+
+
+def _bucket_plan(rec, chunk_real, q_padded) -> Plan:
+    q = rec["query"]
+    n = rec["n"]
+    capped = rec["budget"] != _HUGE
+    eq_opts = {"ladder_min": n}
+    if capped:
+        eq_opts["max_computed"] = rec["budget"]
+    if rec["interpret"] is not None:
+        eq_opts["interpret"] = rec["interpret"]
+    params = {
+        "n": n,
+        "use_kernels": rec["use_kernels"],
+        "solve_many": {"bucket": rec["key"], "n_queries": chunk_real,
+                       "q_padded": q_padded},
+        # the bit-identical single-query counterpart (parity contract)
+        "equivalent": {"plan": "pipelined", "engine_opts": eq_opts},
+    }
+    reasons = (
+        f"solve_many: packed bucket of {chunk_real} same-shape "
+        f"quer{'y' if chunk_real == 1 else 'ies'} "
+        f"(N={n}, d={rec['d']}, metric={rec['metric']!r}, "
+        f"block={rec['block']}), query axis "
+        + ("as a Pallas grid dimension" if rec["use_kernels"]
+           else "vmapped over the pipelined engine"),)
+    return Plan("pipelined", reasons, params,
+                cost_estimate=_estimate_cost(q, "pipelined", params))
+
+
+def solve_many(queries, max_queries_per_program=None):
+    """Solve a batch of single-medoid queries through shared packed
+    programs; returns one :class:`SolveReport` per query, in order.
+
+    Same-shape queries (identical ``(N, d)``, dtype, metric, block,
+    kernel flag, warm presence) share one jitted program; per-query
+    ``indices`` / ``energies`` / ``elements_computed`` are bit-identical
+    to the single-query pipelined engine with the compaction ladder
+    disabled (see ``report.plan.params["equivalent"]``), and the
+    per-query ``elements_computed`` sum to the packed program totals
+    recorded in ``report.extras["batch"]``.
+
+    Per-query ``budget`` (in computed elements) caps that lane only;
+    over-budget lanes come back ``certified=False`` with a
+    deterministic bound-gap ``ci``. ``max_queries_per_program``
+    overrides the memory-derived microbatch cap.
+    """
+    queries = list(queries)
+    for i, q in enumerate(queries):
+        _validate(q, i)
+
+    reports: list[SolveReport | None] = [None] * len(queries)
+    buckets: dict[tuple, list[tuple[int, dict]]] = {}
+    for i, q in enumerate(queries):
+        rec = _prepare(q)
+        if rec["n"] == 1:
+            reports[i] = _trivial_report(q, _bucket_plan(rec, 1, 0))
+            continue
+        buckets.setdefault(rec["key"], []).append((i, rec))
+
+    for key, members in buckets.items():
+        n, _d, _dt, metric, block, use_kernels, interpret, has_warm = key
+        cap = _chunk_cap(n, block, max_queries_per_program)
+        for lo in range(0, len(members), cap):
+            chunk = members[lo:lo + cap]
+            _run_chunk(chunk, n, block, metric, use_kernels, interpret,
+                       has_warm, reports)
+    return reports
+
+
+def _run_chunk(chunk, n, block, metric, use_kernels, interpret, has_warm,
+               reports):
+    import jax.numpy as jnp
+    from repro.core.many import solve_many_bucket
+
+    q_real = len(chunk)
+    q_pad = _pow2_at_least(q_real)
+    Xq = jnp.stack([rec["X"] for _i, rec in chunk]
+                   + [chunk[0][1]["X"]] * (q_pad - q_real))
+    budgets = np.full(q_pad, 0, np.int32)        # ghost lanes: frozen
+    for j, (_i, rec) in enumerate(chunk):
+        budgets[j] = rec["budget"]
+    if has_warm:
+        bw = _pow2_at_least(max(rec["warm"].size for _i, rec in chunk))
+        bw = min(bw, block)
+        warm = np.zeros((q_pad, bw), np.int32)
+        warm_valid = np.zeros((q_pad, bw), bool)
+        for j, (_i, rec) in enumerate(chunk):
+            w = rec["warm"][:bw]
+            warm[j, :w.size] = w
+            warm_valid[j, :w.size] = True
+    else:
+        warm = np.zeros((q_pad, 1), np.int32)
+        warm_valid = np.zeros((q_pad, 1), bool)
+
+    m, e_int, n_comp, n_rounds, live, lo_b = solve_many_bucket(
+        Xq, warm, warm_valid, budgets, block=block, metric=metric,
+        use_kernels=use_kernels, interpret=interpret, has_warm=has_warm)
+
+    nm1 = max(n - 1, 1)
+    total = float(n_comp[:q_real].sum())
+    batch_info = {"n_queries": q_real, "q_padded": q_pad - q_real,
+                  "elements_total": total,
+                  "padding_elements": float(n_comp[q_real:].sum())}
+    for j, (i, rec) in enumerate(chunk):
+        certified = bool(live[j] == 0) and int(m[j]) >= 0
+        ci = (0.0 if certified
+              else float(e_int[j] - lo_b[j]) * n / nm1 / 2.0)
+        reports[i] = SolveReport(
+            indices=np.asarray([m[j]], np.int64),
+            # same association as the engine's e_paper = e_cl * n / (n-1)
+            # so the scaled energy is bit-identical, not just close
+            energies=np.asarray([float(e_int[j]) * n / nm1], np.float64),
+            certified=certified,
+            elements_computed=float(n_comp[j]),
+            n_distances=int(n_comp[j]) * n,
+            n_rounds=int(n_rounds[j]),
+            ci=ci,
+            plan=_bucket_plan(rec, q_real, q_pad - q_real),
+            extras={"batch": dict(batch_info),
+                    "lower_bound": float(lo_b[j]) * n / nm1},
+        )

@@ -48,10 +48,18 @@ ENGINES = ("sequential", "block", "pipelined", "sharded", "batched",
 
 @dataclass(frozen=True)
 class Plan:
-    """A chosen engine plus the planner's reasoning and derived params."""
+    """A chosen engine plus the planner's reasoning and derived params.
+
+    ``cost_estimate`` is the predicted element count (computed rows, the
+    unified cost axis every engine reports as ``elements_computed``) —
+    what an admission scheduler budgets against *before* running
+    anything. Calibrated against engine-reported accounting on uniform
+    data (see ``_estimate_cost``); pinned within 2x on the planner
+    golden grid by ``tests/test_api.py``."""
     engine: str
     reasons: tuple = ()
     params: dict = field(default_factory=dict)
+    cost_estimate: float | None = None
 
     def explain(self) -> str:
         return f"engine={self.engine}: " + "; ".join(self.reasons)
@@ -208,6 +216,65 @@ def _derive_params(query: MedoidQuery, engine: str, reasons: list,
     return params
 
 
+# ---------------------------------------------------------------------------
+# cost model: predicted computed-row count per engine (the admission
+# currency of serve.MedoidServer). The elimination engines follow the
+# paper's sub-quadratic regime — O(sqrt(N)) computed rows with a
+# dimension-dependent constant that saturates at N once the triangle
+# bound stops eliminating (high intrinsic dimension). Constants are
+# calibrated against engine-reported `elements_computed` on uniform
+# data; the calibration test in tests/test_api.py pins them within 2x
+# across the planner golden grid (exactly for the scan engine, whose
+# count is data-independent).
+# ---------------------------------------------------------------------------
+_COST_SEQ = 2.4       # sequential / topk / batched multiplier (x 2^(d/2) sqrt(N))
+_COST_BLOCK = 3.0     # block-round engines pay partial final blocks
+_COST_ANYTIME = 5.5   # uncapped bandit race + finisher
+_KMED_BANDIT_FRAC = 0.125   # bandit medoid-update: default sampled fraction
+
+
+def _estimate_cost(q: MedoidQuery, engine: str, params: dict) -> float:
+    n = params.get("n") or _query_n(q)
+    if _is_oracle(q.X) or np.ndim(q.X) < 2:
+        d = 3                        # oracle rows: assume low-dim regime
+    else:
+        d = int(np.shape(q.X)[1])
+    df = 2.0 ** (min(d, 64) / 2.0)
+    block = max(1, min(int(q.block), n))
+    sqn = float(np.sqrt(n))
+
+    def elim(c, m=n):
+        # c * 2^(d/2) * sqrt(m) computed rows, at least one block, at
+        # most the whole domain (elimination can only save, never cost)
+        return float(min(n, max(c * df * np.sqrt(m), min(block, n))))
+
+    if engine == "scan":
+        return float(n)              # exact: one row sum per element
+    if engine == "sequential":
+        return float(min(n, max(_COST_SEQ * df * sqn, 1.0)))
+    if engine in ("block", "pipelined", "sharded"):
+        return elim(_COST_BLOCK)
+    if engine == "topk":
+        k = int(q.topk)
+        return float(min(n, (1.0 + k / 10.0) * _COST_SEQ * df * sqn))
+    if engine in ("batched", "batched_pipelined", "batched_sharded"):
+        return elim(_COST_SEQ, n * int(q.k))
+    if engine == "kmedoids":
+        k = int(q.k)
+        n_iter = int(q.n_iter)
+        if params.get("medoid_update") == "bandit":
+            overrides = params.get("update_overrides") or {}
+            frac = float(overrides.get("bandit_budget",
+                                       _KMED_BANDIT_FRAC))
+            return float(n_iter * max(k, frac * n))
+        return float(n_iter * max(k, elim(_COST_SEQ, n * k)))
+    if engine in ("bandit", "hybrid"):
+        if q.budget is not None:
+            return float(min(n, max(float(q.budget), min(block, n))))
+        return elim(_COST_ANYTIME)
+    return float(n)
+
+
 def plan_query(query: MedoidQuery) -> Plan:
     """Choose an engine for ``query`` (pure decision — nothing executes).
     Raises the registry's canonical error for unknown metrics and for
@@ -336,7 +403,8 @@ def plan_query(query: MedoidQuery) -> Plan:
                        "engine (1 X-stream/round)")
 
     params.update(_derive_params(q, engine, reasons, m))
-    return Plan(engine, tuple(reasons), params)
+    return Plan(engine, tuple(reasons), params,
+                cost_estimate=_estimate_cost(q, engine, params))
 
 
 def resolve_update_plan(update, metric: str):
@@ -690,7 +758,8 @@ def solve(query, plan=None, explain=False):
                 f"solve: unknown plan {plan!r}; engines: {list(ENGINES)}")
         params = _derive_params(
             query, plan, [], require_metric(query.metric, caller="solve"))
-        p = Plan(plan, (f"user override: plan={plan!r}",), params)
+        p = Plan(plan, (f"user override: plan={plan!r}",), params,
+                 cost_estimate=_estimate_cost(query, plan, params))
     if explain:
         return p
     if p.engine not in _EXECUTORS:

@@ -1,0 +1,254 @@
+"""Many-query engine: Q same-shape medoid searches in one jitted program.
+
+The serving path (DESIGN.md §12). A bucket of same-shape queries —
+identical ``(N, d)``, dtype, metric and block width — runs as ONE jitted
+program with the query axis batched two ways:
+
+* **jnp path** (default): ``jax.vmap`` over the full-domain stage of the
+  pipelined engine (:func:`repro.core.pipelined._pipe_round0` reused
+  verbatim). ``lax.while_loop`` under vmap freezes each lane's state the
+  moment its own predicate goes false, so per-query ``n_computed`` /
+  ``n_rounds`` are *bit-identical* to the single-query engine run with
+  the compaction ladder disabled (``ladder_min >= N`` — compaction is a
+  host-loop cost optimisation; a serving bucket of small-N queries never
+  reaches the ladder regime, and disabling it keeps the whole search one
+  device program).
+
+* **kernel path** (``use_kernels=True``): the query axis becomes a
+  leading *grid dimension* of the pipelined Pallas kernel family
+  (``kernels.ops.many_pipelined_round``); the batched round is explicit
+  and every lane's state update is gated by its own live predicate
+  (select-based freeze), replicating the vmap semantics exactly.
+
+Per-query budgets ride the already-traced ``budget`` argument, so one
+program serves mixed exact/anytime lanes: a budget-capped lane stops
+eliminating, keeps its exact-energy incumbent, and reports the
+deterministic bound-gap interval ``[min live l, E_cl]`` (every live
+``l`` is a valid lower bound on the winner's energy — no probabilistic
+machinery needed, unlike the bandit CI).
+
+Warm starts ride a forced first pivot block with an explicit per-query
+validity mask (queries in one bucket may warm-seed different counts;
+invalid slots are bit-inert pads).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as _ops
+
+from .distances import sq_norms
+from .pipelined import NEG_INF, _budget_cap, _pad_prev, _pipe_round0
+
+HUGE_BUDGET = 2**31 - 1
+
+
+# ---------------------------------------------------------------------------
+# jnp path: vmap over the single-query full-domain stage
+# ---------------------------------------------------------------------------
+def _lane_stage(X, l0, warm_arr, warm_valid, budget, block, metric,
+                has_warm):
+    """One query's full-domain stage — line-for-line the body of
+    ``pipelined._stage0`` with ``can_compact=False``, plus an explicit
+    ``warm_valid`` mask (``_stage0`` hardcodes all-valid warm pivots; a
+    bucket packs warm arrays of different lengths, padded invalid)."""
+    n = X.shape[0]
+    x_sq = (sq_norms(X) if metric in ("l2", "sqeuclidean")
+            else jnp.zeros(n, X.dtype))
+    state = (
+        l0.astype(X.dtype),                       # l
+        jnp.ones(n, bool),                        # alive (= not computed)
+        jnp.asarray(jnp.inf, X.dtype),            # e_cl
+        jnp.asarray(-1, jnp.int32),               # m_cl
+        jnp.zeros(0, jnp.int32),                  # prev idx (empty: round 0)
+        jnp.zeros(0, X.dtype),                    # prev energies
+        jnp.zeros(0, bool),                       # prev valid
+        jnp.zeros((0, n), X.dtype),               # prev rows (jnp carry)
+        jnp.asarray(0, jnp.int32),                # n_computed
+        jnp.asarray(0, jnp.int32),                # n_rounds
+    )
+    round_fn = functools.partial(_pipe_round0, X, x_sq, n, metric,
+                                 False, None, budget)
+    if has_warm:
+        bw = warm_arr.shape[0]
+        state = round_fn(state, bw, forced_idx=warm_arr,
+                         forced_valid=warm_valid)
+    state = _pad_prev(state, block, has_carry=True)
+
+    def cond(state):
+        l, alive, e_cl = state[0], state[1], state[2]
+        live = jnp.logical_and(alive, l < e_cl).sum()
+        return jnp.logical_and(live > 0, state[8] < budget)
+
+    state = jax.lax.while_loop(cond, lambda s: round_fn(s, block), state)
+    return _summarise(state)
+
+
+def _summarise(state):
+    """(m_cl, e_cl, n_comp, n_rounds, live, lo) from a final lane state.
+    ``lo`` is the certificate floor: min live lower bound (or the
+    incumbent itself when none survive) — the true optimum lies in
+    ``[lo, e_cl]``, deterministically."""
+    (l, alive, e_cl, m_cl, _pi, _pe, _pv, _d, n_comp, n_rounds) = state
+    live_mask = jnp.logical_and(alive, l < e_cl)
+    live = live_mask.sum()
+    lo = jnp.where(live_mask, l, jnp.inf).min(axis=-1)
+    lo = jnp.minimum(lo, e_cl)
+    return m_cl, e_cl, n_comp, n_rounds, live, lo
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "metric", "has_warm"),
+)
+def _many_stage_jnp(Xq, l0q, warm_q, warm_valid_q, budget_q, block, metric,
+                    has_warm):
+    fn = functools.partial(_lane_stage, block=block, metric=metric,
+                           has_warm=has_warm)
+    return jax.vmap(fn)(Xq, l0q, warm_q, warm_valid_q, budget_q)
+
+
+# ---------------------------------------------------------------------------
+# kernel path: explicit batched rounds, query axis as a Pallas grid dim
+# ---------------------------------------------------------------------------
+def _kround(Xq, n, metric, interpret, budget_q, state, b, first,
+            forced_idx=None, forced_valid=None):
+    """One batched kernel round — ``_pipe_round0``'s kernel branch with a
+    leading query axis on every operand."""
+    (l, alive, e_cl, m_cl, pidx, pe, pv, n_comp, n_rounds) = state
+    qn = Xq.shape[0]
+
+    if forced_idx is None:
+        score = jnp.where(jnp.logical_and(alive, l < e_cl[:, None]),
+                          -l, NEG_INF)
+        top, idx = jax.lax.top_k(score, b)
+        valid = top > NEG_INF
+    else:
+        idx, valid = forced_idx, forced_valid
+    rank = jnp.cumsum(valid.astype(jnp.int32), axis=1)
+    valid = jnp.logical_and(valid,
+                            n_comp[:, None] + rank <= budget_q[:, None])
+    xb = jnp.take_along_axis(Xq, idx[..., None], axis=1)
+
+    if first:
+        e_sums = _ops.many_block_energies(xb, Xq, metric=metric,
+                                          interpret=interpret)
+    else:
+        xbp = jnp.take_along_axis(Xq, pidx[..., None], axis=1)
+        e_sums, l = _ops.many_pipelined_round(xb, xbp, Xq, pe, pv, l,
+                                              metric=metric,
+                                              interpret=interpret)
+
+    e_blk = jnp.where(valid, e_sums / n, jnp.inf)
+    b_best = jnp.argmin(e_blk, axis=1)
+    e_best = jnp.take_along_axis(e_blk, b_best[:, None], 1)[:, 0]
+    i_best = jnp.take_along_axis(idx, b_best[:, None], 1)[:, 0]
+    better = e_best < e_cl
+    e_cl = jnp.where(better, e_best, e_cl)
+    m_cl = jnp.where(better, i_best, m_cl)
+    qi = jnp.arange(qn)[:, None]
+    alive = alive.at[qi, idx].set(
+        jnp.where(valid, False, jnp.take_along_axis(alive, idx, axis=1)))
+    n_comp = n_comp + valid.sum(axis=1)
+    pe = jnp.where(valid, e_blk, 0.0)
+    return (l, alive, e_cl, m_cl, idx, pe, valid, n_comp, n_rounds + 1)
+
+
+def _lane_active(state, budget_q):
+    (l, alive, e_cl, _m, _pi, _pe, _pv, n_comp, _r) = state
+    live = jnp.logical_and(alive, l < e_cl[:, None]).sum(axis=1)
+    return jnp.logical_and(live > 0, n_comp < budget_q)
+
+
+def _select(active, new, old):
+    """Per-lane freeze: a lane whose predicate went false keeps its old
+    state — exactly what ``while_loop`` under vmap does."""
+    def pick(a, b):
+        mask = active.reshape(active.shape + (1,) * (a.ndim - 1))
+        return jnp.where(mask, a, b)
+    return jax.tree.map(pick, new, old)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "metric", "interpret", "has_warm"),
+)
+def _many_stage_kernels(Xq, l0q, warm_q, warm_valid_q, budget_q, block,
+                        metric, interpret, has_warm):
+    qn, n, _d = Xq.shape
+    state = (
+        l0q.astype(Xq.dtype),                     # l           (Q, N)
+        jnp.ones((qn, n), bool),                  # alive
+        jnp.full((qn,), jnp.inf, Xq.dtype),       # e_cl
+        jnp.full((qn,), -1, jnp.int32),           # m_cl
+        jnp.zeros((qn, block), jnp.int32),        # prev idx
+        jnp.zeros((qn, block), Xq.dtype),         # prev energies
+        jnp.zeros((qn, block), bool),             # prev valid
+        jnp.zeros((qn,), jnp.int32),              # n_computed
+        jnp.zeros((qn,), jnp.int32),              # n_rounds
+    )
+    round_fn = functools.partial(_kround, Xq, n, metric, interpret,
+                                 budget_q)
+    if has_warm:
+        # warm forced round: like _stage0's, it runs before the loop and
+        # every lane takes it (a bucket splits on warm presence)
+        bw = warm_q.shape[1]
+        new = round_fn(state, bw, first=True, forced_idx=warm_q,
+                       forced_valid=warm_valid_q)
+        pad = block - bw
+        if pad:
+            (l, alive, e_cl, m_cl, pidx, pe, pv, n_comp, n_rounds) = new
+            pidx = jnp.pad(pidx, ((0, 0), (0, pad)))
+            pe = jnp.pad(pe, ((0, 0), (0, pad)))
+            pv = jnp.pad(pv, ((0, 0), (0, pad)))
+            new = (l, alive, e_cl, m_cl, pidx, pe, pv, n_comp, n_rounds)
+        state = new
+
+    def cond(state):
+        return _lane_active(state, budget_q).any()
+
+    def body(state):
+        active = _lane_active(state, budget_q)
+        return _select(active, round_fn(state, block, first=False), state)
+
+    state = jax.lax.while_loop(cond, body, state)
+
+    (l, alive, e_cl, m_cl, _pi, _pe, _pv, n_comp, n_rounds) = state
+    live_mask = jnp.logical_and(alive, l < e_cl[:, None])
+    live = live_mask.sum(axis=1)
+    lo = jnp.minimum(jnp.where(live_mask, l, jnp.inf).min(axis=1), e_cl)
+    return m_cl, e_cl, n_comp, n_rounds, live, lo
+
+
+# ---------------------------------------------------------------------------
+# host-level bucket driver
+# ---------------------------------------------------------------------------
+def solve_many_bucket(Xq, warm_q, warm_valid_q, budget_q, *, block: int,
+                      metric: str, use_kernels: bool = False,
+                      interpret=None, has_warm: bool = False):
+    """Run one packed bucket of Q same-shape queries; returns numpy
+    arrays ``(m, e_internal, n_comp, n_rounds, live, lo)`` of length Q.
+
+    ``Xq`` is ``(Q, N, d)``; ``budget_q`` int32 ``(Q,)`` row budgets
+    (``HUGE_BUDGET`` for exact lanes); ``warm_q``/``warm_valid_q`` are
+    ``(Q, BW)`` forced first pivots + validity (ignored unless
+    ``has_warm``). Energies come back on the internal ``S/N`` scale
+    (distances.py note) — callers apply the paper's ``n/(n-1)``."""
+    Xq = jnp.asarray(Xq)
+    qn, n, _d = Xq.shape
+    block = int(min(block, n))
+    l0q = jnp.zeros((qn, n), Xq.dtype)
+    warm_q = jnp.asarray(warm_q, jnp.int32)
+    warm_valid_q = jnp.asarray(warm_valid_q, bool)
+    budget_q = jnp.asarray(budget_q, jnp.int32)
+    if use_kernels:
+        out = _many_stage_kernels(Xq, l0q, warm_q, warm_valid_q, budget_q,
+                                  block, metric, interpret, has_warm)
+    else:
+        out = _many_stage_jnp(Xq, l0q, warm_q, warm_valid_q, budget_q,
+                              block, metric, has_warm)
+    return tuple(np.asarray(o) for o in out)

@@ -241,6 +241,67 @@ def masked_pipelined_round(xb_new, xb_prev, x, a_new, a_prev, a_x, s_prev,
     return s_sums, l_new[:n]
 
 
+def _prep_many(xb, x, tn):
+    """Query-batched ``_prep``: pad d -> LANE multiple, N -> tn multiple
+    over the leading query axis; per-query fp32 norms."""
+    xb = xb.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    d = xb.shape[2]
+    n = x.shape[1]
+    d_pad = (-d) % LANE
+    n_pad = (-n) % tn
+    if d_pad:
+        xb = jnp.pad(xb, ((0, 0), (0, 0), (0, d_pad)))
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, d_pad)))
+    if n_pad:
+        x = jnp.pad(x, ((0, 0), (0, n_pad), (0, 0)))
+    bsq = jnp.sum(xb * xb, axis=2)[:, None, :]       # (Q, 1, B)
+    xsq = jnp.sum(x * x, axis=2)[:, None, :]         # (Q, 1, Npad)
+    return xb, x, bsq, xsq, n
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "tn", "interpret"))
+def many_block_energies(xb, x, metric="l2", tn=DEFAULT_TN, interpret=None):
+    """(Q, B) un-normalised per-query energies: ``block_energies`` with
+    the query axis as a leading grid dimension (DESIGN.md §12)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = x.shape[1]
+    tn = min(tn, max(LANE, n))
+    xb_p, x_p, bsq, xsq, n_real = _prep_many(xb, x, tn)
+    out = _pk.many_energy_kernel(
+        xb_p, x_p, bsq, xsq, n_real=n_real, tn=tn, metric=metric,
+        interpret=interpret,
+    )
+    return out[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "tn", "interpret"))
+def many_pipelined_round(xb_new, xb_prev, x, e_prev, valid_prev, l,
+                         metric="l2", tn=DEFAULT_TN, interpret=None):
+    """Query-batched ``pipelined_round``: Q same-shape pipelined rounds
+    in one kernel launch. ``xb_new``/``xb_prev`` are ``(Q, B, d)`` /
+    ``(Q, Bp, d)``, ``x`` is ``(Q, N, d)``; returns
+    ``(e_sums_new (Q, B), l_new (Q, N))``."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = x.shape[1]
+    tn = min(tn, max(LANE, n))
+    b_new = xb_new.shape[1]
+    xb2 = jnp.concatenate(
+        [xb_new.astype(jnp.float32), xb_prev.astype(jnp.float32)], axis=1)
+    xb2_p, x_p, bsq2, xsq, n_real = _prep_many(xb2, x, tn)
+    n_pad = x_p.shape[1] - n
+    l_p = jnp.pad(l.astype(jnp.float32), ((0, 0), (0, n_pad)))[:, None, :]
+    ep = e_prev.astype(jnp.float32)[:, None, :]
+    vp = valid_prev.astype(jnp.int32)[:, None, :]
+    e_sums, l_new = _pk.many_pipelined_kernel(
+        xb2_p, x_p, bsq2, xsq, ep, vp, l_p, n_real=n_real, b_new=b_new,
+        tn=tn, metric=metric, interpret=interpret,
+    )
+    return e_sums[:, 0], l_new[:, 0, :n]
+
+
 DEFAULT_TB = 256  # arm-axis tile for the sampled-column kernel
 
 

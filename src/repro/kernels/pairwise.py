@@ -25,6 +25,11 @@ grid over the *candidate* axis, sampled columns resident:
   cluster id matches the pivot's own, so K concurrent per-cluster
   searches share one ``(B, N)`` distance pass with the mask applied in
   VMEM (the masked block never reaches HBM either).
+* ``many_energy_kernel`` / ``many_pipelined_kernel`` — the many-query
+  variants (DESIGN.md §12): the same bodies with the query axis as a
+  *leading grid dimension*, so Q same-shape queries share one kernel
+  launch (``solve_many``'s packed path). Per-query tile order matches
+  the single-query kernels, so per-query results are bit-identical.
 * ``sample_stats_kernel`` — the sampled-column pass for the bandit
   engines (DESIGN.md §9): per candidate arm, the sum / sum-of-squares /
   max of distances to an ``S``-column sample of ``X``, with the
@@ -244,6 +249,113 @@ def pipelined_kernel(xb2, x, bsq2, xsq, e_prev, valid_prev, l, *, n_real,
         interpret=interpret,
     )(xb2, x, bsq2, xsq, e_prev, valid_prev, l)
     return e_out[0], l_out[0]
+
+
+# ---------------------------------------------------------------------------
+# many-query family: the same energy / pipelined bodies with the query
+# axis as a LEADING GRID DIMENSION (DESIGN.md §12). Each (q, i) grid step
+# works on query q's tile i; all per-query operands gain a leading
+# length-1 block axis indexed by q. No new kernel math — the masked
+# family already proved per-column validity composes with the tile
+# bodies, and a query axis is just one more level of the same grid.
+# The grid iterates i fastest (row-major), so each query's accumulator
+# runs its tiles in the same order as the single-query kernel —
+# per-query results are bit-identical to the single-query calls.
+# ---------------------------------------------------------------------------
+def _many_energy_body(n_real, tn, metric, xb_ref, x_ref, bsq_ref, xsq_ref,
+                      o_ref):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d = _dist_tile(xb_ref[0], x_ref[0], bsq_ref[0, 0], xsq_ref[0, 0], metric)
+    col = i * tn + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    d = jnp.where(col < n_real, d, 0.0)
+    o_ref[...] += d.sum(axis=1, keepdims=True).T[None]   # (1, 1, B)
+
+
+def many_energy_kernel(xb, x, bsq, xsq, *, n_real, tn=DEFAULT_TN,
+                       metric="l2", interpret=False):
+    """Query-batched ``energy_kernel``: ``xb`` is ``(Q, B, d)``, ``x`` is
+    ``(Q, Npad, d)``; returns per-query row sums ``(Q, 1, B)``."""
+    q, b, dpad = xb.shape
+    npad = x.shape[1]
+    grid = (q, npad // tn)
+    return pl.pallas_call(
+        functools.partial(_many_energy_body, n_real, tn, metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, b, dpad), lambda q, i: (q, 0, 0)),
+            pl.BlockSpec((1, tn, dpad), lambda q, i: (q, i, 0)),
+            pl.BlockSpec((1, 1, b), lambda q, i: (q, 0, 0)),
+            pl.BlockSpec((1, 1, tn), lambda q, i: (q, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, b), lambda q, i: (q, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, 1, b), jnp.float32),
+        interpret=interpret,
+    )(xb, x, bsq, xsq)
+
+
+def _many_pipelined_body(n_real, b_new, tn, metric, xb_ref, x_ref, bsq_ref,
+                         xsq_ref, ep_ref, vp_ref, l_ref, e_ref, o_ref):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        e_ref[...] = jnp.zeros_like(e_ref)
+
+    d = _dist_tile(xb_ref[0], x_ref[0], bsq_ref[0, 0], xsq_ref[0, 0], metric)
+    col = i * tn + jax.lax.broadcasted_iota(jnp.int32, (1, d.shape[1]), 1)
+
+    # top half: row-sum accumulation for the current block's energies
+    dn = jnp.where(col < n_real, d[:b_new], 0.0)
+    e_ref[...] += dn.sum(axis=1, keepdims=True).T[None]  # (1, 1, B)
+
+    # bottom half: fold the previous block's energies into this query's l
+    dp = d[b_new:]
+    e_prev = ep_ref[0, 0]                                # (Bp,)
+    valid_prev = vp_ref[0, 0] != 0                       # (Bp,)
+    gap = jnp.abs(e_prev[:, None] - dp)
+    neg_inf = jnp.asarray(-jnp.inf, jnp.float32)
+    gap = jnp.where(valid_prev[:, None], gap, neg_inf)
+    o_ref[...] = jnp.maximum(l_ref[...], gap.max(axis=0)[None, None, :])
+
+
+def many_pipelined_kernel(xb2, x, bsq2, xsq, e_prev, valid_prev, l, *,
+                          n_real, b_new, tn=DEFAULT_TN, metric="l2",
+                          interpret=False):
+    """Query-batched ``pipelined_kernel``: per-query stacked pivot
+    operand ``(Q, B + Bp, d)`` against per-query domains ``(Q, Npad, d)``.
+    Returns ``(e_sums_new (Q, 1, B), l_new (Q, 1, Npad))``."""
+    q, b2, dpad = xb2.shape
+    b_prev = b2 - b_new
+    npad = x.shape[1]
+    grid = (q, npad // tn)
+    e_out, l_out = pl.pallas_call(
+        functools.partial(_many_pipelined_body, n_real, b_new, tn, metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, b2, dpad), lambda q, i: (q, 0, 0)),
+            pl.BlockSpec((1, tn, dpad), lambda q, i: (q, i, 0)),
+            pl.BlockSpec((1, 1, b2), lambda q, i: (q, 0, 0)),
+            pl.BlockSpec((1, 1, tn), lambda q, i: (q, 0, i)),
+            pl.BlockSpec((1, 1, b_prev), lambda q, i: (q, 0, 0)),
+            pl.BlockSpec((1, 1, b_prev), lambda q, i: (q, 0, 0)),
+            pl.BlockSpec((1, 1, tn), lambda q, i: (q, 0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, b_new), lambda q, i: (q, 0, 0)),
+            pl.BlockSpec((1, 1, tn), lambda q, i: (q, 0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, 1, b_new), jnp.float32),
+            jax.ShapeDtypeStruct((q, 1, npad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb2, x, bsq2, xsq, e_prev, valid_prev, l)
+    return e_out, l_out
 
 
 # ---------------------------------------------------------------------------

@@ -1,13 +1,28 @@
-"""Batched serving engine: continuous-batching decode loop.
+"""Serving engines: the medoid admission scheduler and the LM decode loop.
 
-A slot-based engine in the vLLM style, adapted to JAX static shapes:
-``n_slots`` sequences decode in lockstep; finished slots are refilled
-from the request queue between steps (admission happens on host, the
-decode step itself is one jitted call). Per-slot write positions allow
-ragged sequence lengths inside one static cache.
+Two servers share this module:
 
-The medoid KV-compression hook (`repro.serve.kv_compress`) can be
-applied per-slot at admission time for long prompts.
+* :class:`MedoidServer` — the many-query medoid scheduler (DESIGN.md
+  §12). It replaces the idle slot-based pattern for medoid traffic:
+  instead of fixed slots refilled one query at a time, each scheduling
+  step drains the FIFO queue, packs compatible queries into shape
+  buckets, and admits them against a **global element budget** using
+  ``plan.cost_estimate`` (the planner's calibrated predicted row
+  count). The FIFO prefix whose cumulative estimate fits the budget
+  runs exact; the overflow is *never dropped* — it degrades to
+  ``mode="anytime"`` with the leftover budget split evenly (down to a
+  floor), coming back ``certified=False`` with a recorded deterministic
+  CI. Execution is one ``solve_many`` call per step, so every bucket is
+  a single jitted program.
+
+* :class:`ServeEngine` — the LM continuous-batching decode loop: a
+  slot-based engine in the vLLM style adapted to JAX static shapes
+  (``n_slots`` sequences decode in lockstep; finished slots are
+  refilled between steps; admission happens on host, the decode step is
+  one jitted call). The medoid KV-compression hook
+  (`repro.serve.kv_compress`) can be applied per-slot at admission time
+  for long prompts — the per-head queries it emits are exactly the
+  small same-shape traffic :class:`MedoidServer` packs.
 """
 from __future__ import annotations
 
@@ -18,6 +33,128 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+
+
+# ---------------------------------------------------------------------------
+# medoid serving: budget-aware admission over solve_many
+# ---------------------------------------------------------------------------
+@dataclass
+class MedoidRequest:
+    """One queued medoid query plus its serving outcome."""
+    uid: int
+    query: object                       # MedoidQuery
+    cost_estimate: float = 0.0          # plan.cost_estimate at admission
+    admitted_mode: str = ""             # "exact" | "anytime"
+    step: int = -1                      # scheduling step that served it
+    report: object = None               # SolveReport once served
+
+
+class MedoidServer:
+    """Budget-aware admission scheduler over :func:`repro.api.solve_many`.
+
+    ``budget`` is the global element budget per scheduling step (in the
+    unified computed-row currency every engine reports). Admission is
+    FIFO: walking the queue in submission order, a request is admitted
+    *exact* while the running sum of ``plan.cost_estimate`` stays within
+    the budget; every later request in the step is admitted *anytime*
+    with a per-query cap of the leftover budget split evenly (at least
+    ``anytime_floor`` elements, so every request returns an answer with
+    a recorded CI — over-budget traffic degrades, it is never dropped).
+    One ``solve_many`` call serves the whole step, so same-shape
+    requests share jitted programs regardless of admitted mode (budgets
+    are traced, not compiled).
+    """
+
+    def __init__(self, budget: float = 50_000.0, anytime_floor: int = 32,
+                 max_batch: int = 4096, max_queries_per_program=None):
+        if budget <= 0:
+            raise ValueError("MedoidServer: budget must be positive")
+        self.budget = float(budget)
+        self.anytime_floor = max(int(anytime_floor), 1)
+        self.max_batch = int(max_batch)
+        self.max_queries_per_program = max_queries_per_program
+        self.queue: list[MedoidRequest] = []
+        self.finished: list[MedoidRequest] = []
+        self.steps: list[dict] = []
+        self._uid = 0
+
+    # ------------------------------------------------------------ admin
+    def submit(self, query) -> int:
+        """Queue a single-medoid query; returns its uid. Eligibility is
+        checked here (fail fast) with ``solve_many``'s own validator."""
+        from repro.api.batch import _validate
+        _validate(query, len(self.queue))
+        req = MedoidRequest(self._uid, query)
+        self._uid += 1
+        self.queue.append(req)
+        return req.uid
+
+    # ------------------------------------------------------------- step
+    def step(self) -> list[MedoidRequest]:
+        """One scheduling step: admit, pack, solve, return the served
+        requests (FIFO order). Empty queue returns []."""
+        from repro.api import solve, solve_many
+
+        if not self.queue:
+            return []
+        batch = self.queue[:self.max_batch]
+        self.queue = self.queue[self.max_batch:]
+
+        # pass 1 — FIFO exact admission against the global budget
+        spent_est = 0.0
+        overflow: list[MedoidRequest] = []
+        for req in batch:
+            plan = solve(req.query, plan="pipelined", explain=True)
+            req.cost_estimate = float(plan.cost_estimate)
+            if not overflow and spent_est + req.cost_estimate <= self.budget:
+                req.admitted_mode = "exact"
+                spent_est += req.cost_estimate
+            else:
+                # keep FIFO: once one request overflows, later ones do
+                # not leapfrog it even if they would fit
+                req.admitted_mode = "anytime"
+                overflow.append(req)
+
+        # pass 2 — split the leftover across the overflow, floor-clamped
+        leftover = max(self.budget - spent_est, 0.0)
+        cap = max(self.anytime_floor,
+                  int(leftover // max(len(overflow), 1)))
+        effective = [
+            req.query if req.admitted_mode == "exact"
+            else req.query.with_(mode="anytime", budget=float(cap))
+            for req in batch]
+
+        reports = solve_many(effective,
+                             max_queries_per_program=self.max_queries_per_program)
+
+        step_no = len(self.steps)
+        spent = 0.0
+        for req, rep in zip(batch, reports):
+            req.report = rep
+            req.step = step_no
+            spent += rep.elements_computed
+        self.finished.extend(batch)
+        self.steps.append({
+            "step": step_no,
+            "n_requests": len(batch),
+            "n_exact": len(batch) - len(overflow),
+            "n_anytime": len(overflow),
+            "anytime_cap": cap if overflow else 0,
+            "estimated_elements": spent_est,
+            "spent_elements": spent,
+            "buckets": sorted({rep.plan.params["solve_many"]["bucket"]
+                               for rep in reports
+                               if "solve_many" in rep.plan.params}),
+        })
+        return batch
+
+    def run(self, max_steps: int = 10_000) -> list[MedoidRequest]:
+        """Drain the queue; returns all finished requests."""
+        steps = 0
+        while self.queue and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished
 
 
 @dataclass

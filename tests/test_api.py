@@ -93,6 +93,50 @@ def test_planner_golden_multidevice(n, kw, engine, monkeypatch):
         assert plan.params["n_shards"] == 8
 
 
+# ---------------------------------------------------------------------------
+# cost-model calibration — plan.cost_estimate vs engine-reported accounting
+# ---------------------------------------------------------------------------
+_CALIBRATION = [(n, kw) for n, kw, _e in GOLDEN if n <= 4096]
+
+
+@pytest.mark.parametrize("n,kw", _CALIBRATION,
+                         ids=[f"n{n}-{'-'.join(kw) or 'plain'}"
+                              for n, kw in _CALIBRATION])
+def test_cost_estimate_calibrated(n, kw, monkeypatch):
+    """Every plan's predicted element count lands within 2x of what the
+    engine actually reports, over the same golden grid the planner tests
+    pin. ``scan`` is deterministic-by-construction (always exactly N
+    rows) so its estimate must be *equal*, not just close; elimination
+    engines (sequential included) are data-dependent — how many rows the
+    triangle bound prunes varies with the draw — so exactness is
+    impossible there and the contract is the 2x band."""
+    from repro.api import planner
+    monkeypatch.setattr(planner, "_device_count", lambda: 1)
+    q = MedoidQuery(_X(n), **kw)
+    plan = plan_query(q)
+    assert plan.cost_estimate is not None and plan.cost_estimate > 0
+    report = solve(q)
+    assert report.plan.cost_estimate == plan.cost_estimate
+    actual = report.elements_computed
+    if plan.engine == "scan":
+        assert plan.cost_estimate == actual == float(n)
+    else:
+        assert actual / 2 <= plan.cost_estimate <= actual * 2, (
+            f"{plan.engine}: estimate {plan.cost_estimate} vs "
+            f"reported {actual}")
+
+
+def test_cost_estimate_budget_capped():
+    """A budgeted anytime query's estimate is the budget itself (floored
+    at one block) — and the engine never exceeds it by more than one
+    round of slack."""
+    q = MedoidQuery(_X(4096), budget=200.0)
+    plan = plan_query(q)
+    assert plan.cost_estimate >= 200.0
+    report = solve(q)
+    assert report.elements_computed <= plan.cost_estimate * 2
+
+
 def test_planner_sharded_rejections():
     X = np.empty((1024, 3), np.float32)
     with pytest.raises(ValueError, match="sharded"):
@@ -526,11 +570,12 @@ def test_kmedoids_legacy_string_update_still_works():
 EXPECTED_TOP_LEVEL = {
     "ENGINES", "MedoidQuery", "Metric", "Plan", "SolveReport",
     "available_metrics", "get_metric", "plan_query", "register_metric",
-    "solve", "unregister_metric",
+    "solve", "solve_many", "unregister_metric",
 }
 
 EXPECTED_SIGNATURES = {
     "solve": "(query, plan=None, explain=False)",
+    "solve_many": "(queries, max_queries_per_program=None)",
     "plan_query": "(query: 'MedoidQuery') -> 'Plan'",
     "require_metric": ("(name: 'str', need_triangle: 'bool' = False, "
                        "caller: 'str | None' = None) -> 'Metric'"),
@@ -553,6 +598,8 @@ def test_public_api_snapshot():
     for name in EXPECTED_TOP_LEVEL:
         assert getattr(repro, name) is not None
     assert str(inspect.signature(solve)) == EXPECTED_SIGNATURES["solve"]
+    assert str(inspect.signature(repro.solve_many)) == \
+        EXPECTED_SIGNATURES["solve_many"]
     assert str(inspect.signature(plan_query)) == \
         EXPECTED_SIGNATURES["plan_query"]
     assert str(inspect.signature(require_metric)) == \

@@ -1,0 +1,158 @@
+"""MedoidServer: budget-aware admission over solve_many (DESIGN.md §12).
+
+Pins the scheduler's contract: shape-bucketing is deterministic (same
+submissions → same buckets, same packed plans), admission against the
+global element budget is FIFO (the exact prefix is the longest prefix
+whose cumulative ``plan.cost_estimate`` fits — later requests never
+leapfrog an earlier overflow, even when they would fit), and over-budget
+traffic is *degraded, never dropped*: every request comes back with a
+report, the over-budget ones as ``mode="anytime"`` with
+``certified=False`` and a recorded deterministic CI. A SIGALRM watchdog
+(same pattern as ``test_sharded.py``) turns a scheduler stall into a
+test failure instead of a hung CI job.
+"""
+import signal
+
+import numpy as np
+import pytest
+
+from repro import MedoidQuery
+from repro.serve.engine import MedoidServer
+
+
+def _X(n, d=3, seed=0):
+    return np.random.default_rng(seed).standard_normal((n, d)).astype(
+        np.float32)
+
+
+def _mixed_queries():
+    return ([MedoidQuery(_X(256, seed=s)) for s in range(4)]
+            + [MedoidQuery(_X(512, seed=s)) for s in range(3)]
+            + [MedoidQuery(_X(256, seed=10 + s), metric="l1")
+               for s in range(2)])
+
+
+# ---------------------------------------------------------------------------
+# bucketing determinism
+# ---------------------------------------------------------------------------
+def test_bucketing_deterministic():
+    """Two servers fed identical submissions pack identical buckets and
+    produce bit-identical reports, uid for uid."""
+    outs = []
+    for _run in range(2):
+        srv = MedoidServer(budget=1e9)
+        for q in _mixed_queries():
+            srv.submit(q)
+        served = srv.step()
+        outs.append((srv.steps[0]["buckets"],
+                     [(r.uid, r.admitted_mode,
+                       int(r.report.indices[0]),
+                       float(r.report.energies[0]),
+                       r.report.elements_computed,
+                       r.report.plan.params["solve_many"]["bucket"])
+                      for r in served]))
+    assert outs[0] == outs[1]
+    buckets = outs[0][0]
+    assert len(buckets) == 3          # (256,l2), (512,l2), (256,l1)
+
+
+# ---------------------------------------------------------------------------
+# budget admission: degrade, never drop
+# ---------------------------------------------------------------------------
+def test_over_budget_degrades_to_anytime_with_ci():
+    srv = MedoidServer(budget=500.0, anytime_floor=16)
+    uids = [srv.submit(q) for q in _mixed_queries()]
+    served = srv.step()
+    assert [r.uid for r in served] == uids       # nothing dropped, FIFO
+    assert not srv.queue
+    modes = [r.admitted_mode for r in served]
+    assert "exact" in modes and "anytime" in modes
+    for r in served:
+        assert r.report is not None
+        assert r.cost_estimate > 0
+        if r.admitted_mode == "exact":
+            assert r.report.certified and r.report.ci == 0.0
+        else:
+            assert not r.report.certified
+            assert 0.0 < r.report.ci < np.inf
+    stats = srv.steps[0]
+    assert stats["n_exact"] + stats["n_anytime"] == len(uids)
+    assert stats["spent_elements"] == sum(
+        r.report.elements_computed for r in served)
+
+
+def test_everything_fits_stays_exact():
+    srv = MedoidServer(budget=1e9)
+    for q in _mixed_queries():
+        srv.submit(q)
+    served = srv.step()
+    assert all(r.admitted_mode == "exact" for r in served)
+    assert all(r.report.certified for r in served)
+    assert srv.steps[0]["n_anytime"] == 0
+
+
+# ---------------------------------------------------------------------------
+# FIFO fairness
+# ---------------------------------------------------------------------------
+def test_fifo_exact_prefix_no_leapfrog():
+    """Admission is the FIFO prefix by cumulative estimate: once one
+    request overflows, a later *smaller* request is not admitted exact
+    ahead of it, even though it would fit the leftover budget."""
+    big, small = MedoidQuery(_X(512, seed=1)), MedoidQuery(_X(64, seed=2))
+    probe = MedoidServer(budget=1e9)
+    probe.submit(big)
+    est_big = probe.step()[0].cost_estimate
+
+    srv = MedoidServer(budget=est_big * 0.5, anytime_floor=8)
+    srv.submit(big)
+    srv.submit(small)
+    served = srv.step()
+    assert [r.admitted_mode for r in served] == ["anytime", "anytime"]
+    # flipped order, the small one fits and runs exact
+    srv2 = MedoidServer(budget=est_big * 0.5, anytime_floor=8)
+    srv2.submit(small)
+    srv2.submit(big)
+    modes = [r.admitted_mode for r in srv2.step()]
+    assert modes == ["exact", "anytime"]
+
+
+def test_run_drains_queue_in_order():
+    srv = MedoidServer(budget=1e9, max_batch=3)
+    uids = [srv.submit(MedoidQuery(_X(128, seed=s))) for s in range(7)]
+    finished = srv.run()
+    assert [r.uid for r in finished] == uids
+    assert [s["n_requests"] for s in srv.steps] == [3, 3, 1]
+    assert all(r.step == i // 3 for i, r in enumerate(finished))
+
+
+# ---------------------------------------------------------------------------
+# validation + watchdog
+# ---------------------------------------------------------------------------
+def test_submit_rejects_unpackable_queries():
+    srv = MedoidServer()
+    with pytest.raises(ValueError, match="single-medoid"):
+        srv.submit(MedoidQuery(_X(64), k=4))
+    with pytest.raises(ValueError, match="triangle"):
+        srv.submit(MedoidQuery(_X(64), metric="cosine"))
+    assert not srv.queue                     # rejected at the door
+
+
+def test_server_under_watchdog():
+    """A full submit/step/drain cycle with mixed shapes and a tight
+    budget completes well under the alarm — a scheduler livelock (e.g.
+    an admission loop that re-queues overflow forever) fails loudly."""
+    def _stalled(signum, frame):
+        raise TimeoutError("MedoidServer stalled draining its queue")
+
+    old = signal.signal(signal.SIGALRM, _stalled)
+    signal.alarm(300)
+    try:
+        srv = MedoidServer(budget=300.0, anytime_floor=8, max_batch=4)
+        for q in _mixed_queries():
+            srv.submit(q)
+        finished = srv.run()
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+    assert len(finished) == len(_mixed_queries())
+    assert all(r.report is not None for r in finished)

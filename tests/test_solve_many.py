@@ -1,0 +1,221 @@
+"""solve_many: packed many-query path vs sequential solve() (DESIGN.md §12).
+
+The parity contract under test: every report from ``solve_many`` is
+**bit-identical** — index, scaled energy, elements_computed, n_rounds,
+certified — to its single-query counterpart
+
+    solve(q.with_(engine_opts=report.plan.params["equivalent"]["engine_opts"]),
+          plan="pipelined")
+
+(the pipelined engine with the compaction ladder disabled), across
+random batches mixing metrics, ragged N (multiple shape buckets),
+duplicate queries, warm starts and per-query budgets. On top of parity:
+per-query ``elements_computed`` sum exactly to the packed program totals
+in ``extras["batch"]``, ghost (padding) lanes compute nothing, and
+repeat calls — including the 0- and 1-query degenerate batches — hit
+the jit cache instead of recompiling.
+
+Property tests use the ``tests/_hyp`` shim: real hypothesis when
+installed, a deterministic seeded fallback driver otherwise.
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro import MedoidQuery, solve, solve_many
+
+from _hyp import given, settings, st
+
+METRICS = ["l2", "l1"]          # triangle-inequality metrics pack
+
+
+def _X(n, d=3, seed=0):
+    return np.random.default_rng(seed).standard_normal((n, d)).astype(
+        np.float32)
+
+
+def _counterpart(q, report):
+    """The recorded bit-identical single-query equivalent."""
+    eq = report.plan.params["equivalent"]
+    return solve(q.with_(engine_opts=eq["engine_opts"]), plan=eq["plan"])
+
+
+def _assert_bit_identical(q, report, i):
+    ref = _counterpart(q, report)
+    assert int(report.indices[0]) == int(ref.indices[0]), f"query {i}"
+    # == not allclose: the scaled energy must match to the last bit
+    assert float(report.energies[0]) == float(ref.energies[0]), f"query {i}"
+    assert report.elements_computed == ref.elements_computed, f"query {i}"
+    assert report.n_rounds == ref.n_rounds, f"query {i}"
+    assert report.certified == ref.certified, f"query {i}"
+
+
+def _assert_batch_accounting(reports):
+    """Per-query elements sum to each packed program's recorded total;
+    ghost lanes contribute nothing."""
+    by_bucket = {}
+    for r in reports:
+        sm = r.plan.params.get("solve_many")
+        if sm and "batch" in r.extras and sm["n_queries"] > 1:
+            by_bucket.setdefault(sm["bucket"], []).append(r)
+    for bucket, group in by_bucket.items():
+        info = group[0].extras["batch"]
+        if len(group) == info["n_queries"]:       # whole chunk visible
+            total = sum(r.elements_computed for r in group)
+            assert total == info["elements_total"], bucket
+        assert info.get("padding_elements", 0.0) == 0.0, bucket
+
+
+# ---------------------------------------------------------------------------
+# the property: random ragged batches are bit-identical to sequential
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), n1=st.integers(2, 300),
+       n2=st.integers(2, 300), metric1=st.sampled_from(METRICS),
+       metric2=st.sampled_from(METRICS), warm=st.booleans(),
+       budget=st.booleans())
+def test_parity_random_batches(seed, n1, n2, metric1, metric2, warm, budget):
+    rng = np.random.default_rng(seed)
+    X1, X2 = _X(n1, seed=seed), _X(n2, seed=seed + 1)
+    queries = [
+        MedoidQuery(X1, metric=metric1),
+        MedoidQuery(X2, metric=metric2),
+        MedoidQuery(X1, metric=metric1),          # exact duplicate
+        MedoidQuery(_X(n1, seed=seed + 2), metric=metric1),
+    ]
+    if warm:
+        # duplicates inside warm_idx must dedup to first occurrence
+        w = rng.integers(0, n1, size=3)
+        queries.append(MedoidQuery(X1, metric=metric1,
+                                   warm_idx=[w[0], w[0], w[1], w[2]]))
+    if budget:
+        cap = int(rng.integers(1, n2 + 1))
+        queries.append(MedoidQuery(X2, metric=metric2, mode="anytime",
+                                   budget=float(cap)))
+    reports = solve_many(queries)
+    assert len(reports) == len(queries)
+    for i, (q, r) in enumerate(zip(queries, reports)):
+        _assert_bit_identical(q, r, i)
+    # duplicate queries get duplicate answers
+    assert float(reports[0].energies[0]) == float(reports[2].energies[0])
+    assert int(reports[0].indices[0]) == int(reports[2].indices[0])
+    _assert_batch_accounting(reports)
+
+
+def test_parity_kernel_path():
+    """The query-as-grid-dimension Pallas path (interpret mode on CPU)
+    matches the kernel-path single-query engine bit for bit, including a
+    budget-capped lane."""
+    queries = [
+        MedoidQuery(_X(256, seed=s), use_kernels=True,
+                    engine_opts={"interpret": True})
+        for s in range(3)
+    ] + [
+        MedoidQuery(_X(256, seed=7), use_kernels=True, mode="anytime",
+                    budget=40.0, engine_opts={"interpret": True}),
+        MedoidQuery(_X(256, seed=8), use_kernels=True,
+                    warm_idx=[5, 5, 17], engine_opts={"interpret": True}),
+    ]
+    reports = solve_many(queries)
+    for i, (q, r) in enumerate(zip(queries, reports)):
+        assert r.plan.params["use_kernels"], i
+        _assert_bit_identical(q, r, i)
+    capped = reports[3]
+    assert not capped.certified and capped.ci > 0
+    _assert_batch_accounting(reports)
+
+
+def test_budget_lane_reports_ci():
+    """An over-budget lane keeps its incumbent, reports certified=False
+    and a positive deterministic bound-gap CI; uncapped lanes in the
+    same packed program stay certified with ci == 0."""
+    X = _X(512, seed=3)
+    reports = solve_many([
+        MedoidQuery(X),
+        MedoidQuery(X, mode="anytime", budget=30.0),
+    ])
+    exact, capped = reports
+    assert exact.certified and exact.ci == 0.0
+    assert not capped.certified
+    assert 0.0 < capped.ci < np.inf
+    assert capped.elements_computed <= 30 + 512 // 4  # one round of slack
+    # the true energy sits inside [E - 2ci, E] by construction
+    assert float(capped.energies[0]) - 2 * capped.ci <= \
+        float(exact.energies[0]) <= float(capped.energies[0]) + 1e-12
+
+
+def test_elements_sum_across_buckets():
+    """Three buckets (two shapes x two metrics); every chunk's recorded
+    elements_total equals the sum over its real lanes."""
+    qs = ([MedoidQuery(_X(128, seed=s)) for s in range(5)]
+          + [MedoidQuery(_X(200, seed=s)) for s in range(3)]
+          + [MedoidQuery(_X(128, seed=s), metric="l1") for s in range(2)])
+    reports = solve_many(qs)
+    _assert_batch_accounting(reports)
+    buckets = {r.plan.params["solve_many"]["bucket"] for r in reports}
+    assert len(buckets) == 3
+    for q, r in zip(qs, reports):
+        _assert_bit_identical(q, r, q)
+
+
+# ---------------------------------------------------------------------------
+# degenerate batches and compile-cache behaviour
+# ---------------------------------------------------------------------------
+def test_empty_batch():
+    assert solve_many([]) == []
+
+
+def test_single_query_batch():
+    q = MedoidQuery(_X(100, seed=4), metric="l1")
+    (r,) = solve_many([q])
+    _assert_bit_identical(q, r, 0)
+    assert r.extras["batch"]["n_queries"] == 1
+
+
+def test_n_equals_one_short_circuit():
+    (r,) = solve_many([MedoidQuery(_X(1, seed=0))])
+    assert int(r.indices[0]) == 0 and float(r.energies[0]) == 0.0
+    assert r.certified and r.elements_computed == 1.0
+
+
+def test_repeat_calls_hit_jit_cache():
+    """0-/1-query batches round-trip without recompiling per call: the
+    query axis is padded to powers of two, so any batch size whose pad
+    width was seen before reuses the compiled program. Regression-tested
+    via the jit cache size of the packed stage."""
+    from repro.core.many import _many_stage_jnp
+    stage = _many_stage_jnp
+    # warm the (n=96, q_pad in {1, 2, 4}) programs
+    for q_count in (1, 2, 3):
+        solve_many([MedoidQuery(_X(96, seed=s)) for s in range(q_count)])
+    size_after_warm = stage._cache_size()
+    # fresh data, same shapes — every pad width must be a cache hit
+    for q_count in (1, 1, 2, 3, 4, 3):
+        solve_many([MedoidQuery(_X(96, seed=10 + s + q_count))
+                    for s in range(q_count)])
+    assert stage._cache_size() == size_after_warm, (
+        "solve_many recompiled for a repeated batch shape")
+
+
+# ---------------------------------------------------------------------------
+# validation: what refuses to pack, refuses loudly
+# ---------------------------------------------------------------------------
+def test_validation_errors():
+    X = _X(64)
+    with pytest.raises(TypeError, match="queries\\[0\\]"):
+        solve_many([X])                                  # not a query
+    with pytest.raises(ValueError, match="single-medoid"):
+        solve_many([MedoidQuery(X, k=4)])
+    with pytest.raises(ValueError, match="single-medoid"):
+        solve_many([MedoidQuery(X, topk=3)])
+    with pytest.raises(ValueError, match="device_policy"):
+        solve_many([MedoidQuery(X, device_policy="host")])
+    with pytest.raises(ValueError, match="block_schedule"):
+        solve_many([MedoidQuery(X, block_schedule=(8, 64))])
+    with pytest.raises(ValueError, match="engine_opts"):
+        solve_many([MedoidQuery(X, engine_opts={"ladder_min": 4})])
+    with pytest.raises(ValueError, match="triangle"):
+        solve_many([MedoidQuery(X, metric="cosine")])
+    # a bad query anywhere in the batch fails the whole call up front
+    with pytest.raises(ValueError, match="queries\\[1\\]"):
+        solve_many([MedoidQuery(X), MedoidQuery(X, k=2)])
