@@ -1,0 +1,78 @@
+"""Fault-tolerance overhead: what does resumability cost? (DESIGN.md §13)
+
+Three numbers per size, all on the single-device pipelined engine:
+
+* ``wall_plain_s`` — the straight-through solve (one host loop, no
+  segmentation; ``seg_cap`` is traced so this shares its compiled
+  program with the segmented runs);
+* ``wall_segmented_s`` — segmented at round granularity with a
+  ``SolveState`` checkpoint written every segment (the fully paranoid
+  configuration; real deployments amortise with ``checkpoint_every``);
+* ``wall_resume_s`` — kill the solve mid-flight (injected
+  ``fail_round`` at roughly half the round count) and resume from the
+  checkpoint to completion: the *recovery* cost, which bounds how much
+  work a preemption can waste.
+
+``identical`` asserts the tentpole invariant along the way: plain,
+segmented, and killed-and-resumed runs report the same index, energy
+and element count. Not part of the CI smoke/regression set — the
+overhead ratio is host- and filesystem-dependent; run it where you
+deploy.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from .common import save_csv
+
+SIZES_QUICK = [(1025, 8), (4097, 8)]
+SIZES_FULL = [(4097, 16), (16385, 16), (65537, 16)]
+
+HEADER = ["n", "d", "rounds", "wall_plain_s", "wall_segmented_s",
+          "wall_resume_s", "segment_overhead_x", "identical"]
+
+
+def _sig(r):
+    return (r.index, r.energy, r.n_computed)
+
+
+def run(quick: bool = True, mode: str | None = None):
+    from repro.core.pipelined import _trimed_pipelined
+    from repro.runtime import faults
+
+    rows = []
+    for n, d in (SIZES_QUICK if quick else SIZES_FULL):
+        X = np.random.default_rng(0).normal(size=(n, d)).astype(np.float32)
+        _trimed_pipelined(X)                              # compile, warm
+        t0 = time.perf_counter()
+        ref = _trimed_pipelined(X)
+        wall_plain = time.perf_counter() - t0
+
+        with tempfile.TemporaryDirectory() as td:
+            t0 = time.perf_counter()
+            seg = _trimed_pipelined(X, checkpoint=td, checkpoint_every=1)
+            wall_seg = time.perf_counter() - t0
+
+        kill = max(int(ref.n_rounds) // 2, 1)
+        with tempfile.TemporaryDirectory() as td:
+            try:
+                with faults.inject(faults.FaultSpec(fail_round=kill)):
+                    _trimed_pipelined(X, checkpoint=td, checkpoint_every=1)
+            except faults.FaultError:
+                pass
+            t0 = time.perf_counter()
+            res = _trimed_pipelined(X, checkpoint=td, checkpoint_every=1,
+                                    resume="require")
+            wall_resume = time.perf_counter() - t0
+
+        identical = _sig(ref) == _sig(seg) == _sig(res)
+        rows.append([n, d, int(ref.n_rounds), f"{wall_plain:.4f}",
+                     f"{wall_seg:.4f}", f"{wall_resume:.4f}",
+                     f"{wall_seg / max(wall_plain, 1e-9):.2f}",
+                     identical])
+        assert identical, f"fault-tolerance parity broke at n={n}"
+    path = save_csv("bench_faults", HEADER, rows)
+    return rows, path

@@ -27,9 +27,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
     quick = not args.full
 
-    from . import (bench_bandit, bench_batched, bench_fig3, bench_kernels,
-                   bench_serve, bench_sme_init, bench_table1, bench_table2,
-                   bench_trimed, roofline_report)
+    from . import (bench_bandit, bench_batched, bench_faults, bench_fig3,
+                   bench_kernels, bench_serve, bench_sme_init,
+                   bench_table1, bench_table2, bench_trimed,
+                   roofline_report)
 
     if args.smoke:
         # the benches now route every engine through repro.api.solve;
@@ -68,6 +69,7 @@ def main(argv=None):
         "bandit_regret": bench_bandit.run,
         "batched_kmedoids": bench_batched.run,
         "serve_throughput": bench_serve.run,
+        "fault_overhead": bench_faults.run,
         "sme_init": bench_sme_init.run,
         "kernels": bench_kernels.run,
         "roofline": roofline_report.run,

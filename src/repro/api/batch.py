@@ -97,6 +97,16 @@ def _validate(q: MedoidQuery, i: int) -> None:
         raise ValueError(
             f"solve_many: queries[{i}].X must be (N, d), got shape "
             f"{np.shape(q.X)}")
+    if q.nonfinite == "raise":
+        import jax.numpy as jnp
+        row_ok = jnp.isfinite(jnp.asarray(q.X)).all(axis=1)
+        bad = int(np.asarray((~row_ok).sum()))
+        if bad:
+            raise ValueError(
+                f"solve_many: queries[{i}].X contains non-finite values "
+                f"(NaN/Inf) in {bad} of {int(row_ok.shape[0])} rows; a "
+                "single non-finite element poisons every triangle bound. "
+                "Clean the input or pass nonfinite='allow'.")
 
 
 def _prepare(q: MedoidQuery):
@@ -215,7 +225,10 @@ def _run_chunk(chunk, n, block, metric, use_kernels, interpret, has_warm,
                reports):
     import jax.numpy as jnp
     from repro.core.many import solve_many_bucket
+    from repro.runtime import faults
 
+    for _i, rec in chunk:
+        faults.check_poison(rec["query"].X, "solve_many packed chunk")
     q_real = len(chunk)
     q_pad = _pow2_at_least(q_real)
     Xq = jnp.stack([rec["X"] for _i, rec in chunk]

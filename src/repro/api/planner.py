@@ -402,9 +402,44 @@ def plan_query(query: MedoidQuery) -> Plan:
         reasons.append(f"N={n} > {BLOCK_N}: survivor-compacted pipelined "
                        "engine (1 X-stream/round)")
 
+    engine = _apply_deadline_policy(q, engine, reasons)
     params.update(_derive_params(q, engine, reasons, m))
     return Plan(engine, tuple(reasons), params,
                 cost_estimate=_estimate_cost(q, engine, params))
+
+
+# engines whose drivers check the deadline at host-visible boundaries
+# (sequential: per element; pipelined: per segment — DESIGN.md §13)
+_DEADLINE_ENGINES = ("sequential", "pipelined")
+# engines that reroute to a deadline-capable one with no semantic change
+# (exact single-medoid either way; only cost/pivot-sequence differ)
+_DEADLINE_REROUTE = {"block": "pipelined", "sharded": "pipelined"}
+
+
+def _apply_deadline_policy(q: MedoidQuery, engine: str,
+                           reasons: list) -> str:
+    """``deadline_s`` needs an engine with host-visible progress: a
+    single jitted while_loop (block) or a multi-device program (sharded)
+    cannot be interrupted mid-flight, so those reroute to the segmented
+    pipelined engine; task kinds with no incumbent-so-far semantics
+    (clustering, top-k, batched, anytime) are rejected at plan time —
+    a *blown* deadline, by contrast, never raises."""
+    if q.deadline_s is None:
+        return engine
+    if engine in _DEADLINE_REROUTE:
+        new = _DEADLINE_REROUTE[engine]
+        reasons.append(
+            f"deadline_s={q.deadline_s}: {engine} runs as one "
+            f"uninterruptible program; rerouted to {new} (segment-"
+            "granular deadline checks)")
+        return new
+    if engine not in _DEADLINE_ENGINES:
+        raise ValueError(
+            f"solve: deadline_s is not supported for engine {engine!r} "
+            "(no incumbent-so-far to return at the deadline); supported: "
+            f"{_DEADLINE_ENGINES} (+ {sorted(_DEADLINE_REROUTE)} via "
+            "rerouting)")
+    return engine
 
 
 def resolve_update_plan(update, metric: str):
@@ -485,6 +520,22 @@ def resolve_update_plan(update, metric: str):
 # engine stack in at import time (and stays cycle-free with repro.core)
 # ---------------------------------------------------------------------------
 def _report_from_medoid(r, extras=None) -> SolveReport:
+    # uncertified engines that tracked their live lower bounds report the
+    # deterministic bound-gap half-width (the anytime contract, matching
+    # solve_many's convention); NaN only when no bound was tracked
+    lo = getattr(r, "lo_bound", float("nan"))
+    if r.certified:
+        ci = 0.0
+    elif np.isfinite(lo) and np.isfinite(r.energy):
+        ci = max(float(r.energy) - float(lo), 0.0) / 2.0
+    else:
+        ci = float("nan")
+    ex = {"raw": r, **(extras or {})}
+    halt = getattr(r, "halt_reason", "")
+    if halt:
+        ex["halt_reason"] = halt
+    if not r.certified and np.isfinite(lo):
+        ex["lower_bound"] = float(lo)
     return SolveReport(
         indices=np.asarray([r.index], np.int64),
         energies=np.asarray([r.energy], np.float64),
@@ -492,20 +543,27 @@ def _report_from_medoid(r, extras=None) -> SolveReport:
         elements_computed=float(r.n_computed),
         n_distances=int(r.n_distances),
         n_rounds=int(r.n_rounds),
-        ci=0.0 if r.certified else float("nan"),
-        extras={"raw": r, **(extras or {})},
+        ci=ci,
+        extras=ex,
     )
 
 
 def _run_sequential(q: MedoidQuery, plan: Plan) -> SolveReport:
     from repro.core.trimed import _trimed_sequential
+    from repro.runtime import faults
+    faults.check_poison(q.X, "sequential engine")
+    kw = {}
+    if plan.params.get("deadline_ts") is not None:
+        kw["deadline_ts"] = plan.params["deadline_ts"]
     r = _trimed_sequential(q.X, seed=q.seed, metric=q.metric,
-                           **q.engine_opts)
+                           **kw, **q.engine_opts)
     return _report_from_medoid(r)
 
 
 def _run_block(q: MedoidQuery, plan: Plan) -> SolveReport:
     from repro.core.trimed import _trimed_block
+    from repro.runtime import faults
+    faults.check_poison(q.X, "block engine")
     opts = dict(q.engine_opts)
     if plan.params.get("use_kernels") and "fused_round_fn" not in opts:
         hook = get_metric(q.metric).fused_round_fn
@@ -524,11 +582,16 @@ def _run_block(q: MedoidQuery, plan: Plan) -> SolveReport:
 
 def _run_pipelined(q: MedoidQuery, plan: Plan) -> SolveReport:
     from repro.core.pipelined import _trimed_pipelined
+    from repro.runtime import faults
+    faults.check_poison(q.X, "pipelined engine")
+    kw = {}
+    if plan.params.get("deadline_ts") is not None:
+        kw["deadline_ts"] = plan.params["deadline_ts"]
     r = _trimed_pipelined(
         q.X, seed=q.seed, block=q.block, metric=q.metric,
         block_schedule=q.block_schedule,
         use_kernels=bool(plan.params.get("use_kernels")),
-        warm_idx=q.warm_idx, **q.engine_opts)
+        warm_idx=q.warm_idx, **kw, **q.engine_opts)
     return _report_from_medoid(r)
 
 
@@ -544,6 +607,8 @@ def _sharded_engine_kw(q: MedoidQuery):
 
 def _run_sharded(q: MedoidQuery, plan: Plan) -> SolveReport:
     from repro.core.distributed import _trimed_sharded
+    from repro.runtime import faults
+    faults.on_shard_entry(int(plan.params.get("n_shards", 1)))
     kw, opts = _sharded_engine_kw(q)
     r, per_shard = _trimed_sharded(
         q.X, mesh=q.mesh, block=q.block, metric=q.metric,
@@ -574,6 +639,8 @@ def _run_scan(q: MedoidQuery, plan: Plan) -> SolveReport:
     the rows shard across the mesh (DESIGN.md §11) with bit-identical
     results (both paths sum on the fixed reduction grid)."""
     from repro.core.trimed import MedoidResult, TopKResult
+    from repro.runtime import faults
+    faults.check_poison(q.X, "scan engine")
     if _is_oracle(q.X):
         n = int(q.X.n)
         e = np.array([q.X.row(i).sum() for i in range(n)]) / n
@@ -646,6 +713,8 @@ def _run_batched_pipelined(q: MedoidQuery, plan: Plan) -> SolveReport:
 
 def _run_batched_sharded(q: MedoidQuery, plan: Plan) -> SolveReport:
     from repro.core.distributed import _batched_medoids_sharded
+    from repro.runtime import faults
+    faults.on_shard_entry(int(plan.params.get("n_shards", 1)))
     kw, opts = _sharded_engine_kw(q)
     r, per_shard = _batched_medoids_sharded(
         q.X, q.assignments, q.k, mesh=q.mesh, block=q.block,
@@ -756,16 +825,118 @@ def solve(query, plan=None, explain=False):
         if plan not in _EXECUTORS:
             raise ValueError(
                 f"solve: unknown plan {plan!r}; engines: {list(ENGINES)}")
+        reasons = [f"user override: plan={plan!r}"]
+        engine = _apply_deadline_policy(query, plan, reasons)
         params = _derive_params(
-            query, plan, [], require_metric(query.metric, caller="solve"))
-        p = Plan(plan, (f"user override: plan={plan!r}",), params,
-                 cost_estimate=_estimate_cost(query, plan, params))
+            query, engine, [], require_metric(query.metric, caller="solve"))
+        p = Plan(engine, tuple(reasons), params,
+                 cost_estimate=_estimate_cost(query, engine, params))
     if explain:
         return p
     if p.engine not in _EXECUTORS:
         raise ValueError(
             f"solve: unknown plan engine {p.engine!r}; engines: "
             f"{list(ENGINES)}")
-    report = _EXECUTORS[p.engine](query, p)
-    report.plan = p
-    return report
+    _check_finite(query)
+    if query.deadline_s is not None:
+        from repro.runtime import faults
+        if p.engine not in _DEADLINE_ENGINES:
+            raise ValueError(
+                f"solve: deadline_s is not supported for engine "
+                f"{p.engine!r}; supported: {_DEADLINE_ENGINES}")
+        # stamp the absolute deadline at execution time (fault clock, so
+        # injected stalls blow it deterministically in tests)
+        p.params["deadline_ts"] = faults.clock() + float(query.deadline_s)
+    try:
+        report = _EXECUTORS[p.engine](query, p)
+        report.plan = p
+        return report
+    except Exception as err:
+        if query.on_error != "degrade":
+            raise
+        return _solve_degraded(query, p, err)
+
+
+def _check_finite(query: MedoidQuery) -> None:
+    """``nonfinite="raise"`` input gate: reject NaN/Inf rows in a
+    host-visible array ``X`` before any engine runs (one silent NaN
+    poisons every triangle bound — every ``|E - d|`` against it is NaN,
+    so elimination quietly stops firing). Host path only: oracles and
+    traced arrays pass through unchecked."""
+    X = query.X
+    if query.nonfinite != "raise" or X is None or _is_oracle(X):
+        return
+    try:
+        from jax.core import Tracer
+    except ImportError:                     # pragma: no cover
+        Tracer = ()
+    if isinstance(X, Tracer):
+        return
+    import jax.numpy as jnp
+    Xa = jnp.asarray(X)
+    axes = tuple(range(1, Xa.ndim))
+    row_ok = jnp.isfinite(Xa).all(axis=axes) if axes else jnp.isfinite(Xa)
+    bad = int(np.asarray((~row_ok).sum()))
+    if bad:
+        raise ValueError(
+            f"solve: X contains non-finite values (NaN/Inf) in {bad} of "
+            f"{int(row_ok.shape[0])} rows; a single non-finite element "
+            "poisons every triangle bound. Clean the input or pass "
+            "nonfinite='allow' to skip this check.")
+
+
+# on_error="degrade" ladder: kernels->jnp first (same engine), then
+# engine hops toward the simplest exact path for the task kind. Every
+# hop is recorded in the attempted plan's reasons; the last rung's
+# failure re-raises.
+_DEGRADE_CHAIN = {
+    "sharded": ("pipelined", "scan"),
+    "block": ("pipelined", "scan"),
+    "pipelined": ("scan",),
+    "sequential": ("scan",),
+    "batched_sharded": ("batched_pipelined", "batched"),
+    "batched_pipelined": ("batched",),
+    "hybrid": ("bandit",),
+}
+
+
+def _solve_degraded(query: MedoidQuery, p: Plan, err) -> SolveReport:
+    m = require_metric(query.metric, caller="solve")
+    attempts = [f"on_error=degrade: {p.engine} raised "
+                f"{type(err).__name__}: {err}"]
+    last = err
+    rungs = []
+    if p.params.get("use_kernels"):
+        rungs.append((p.engine, query,
+                      "retrying with use_kernels=False (kernels->jnp)"))
+    # cross-engine hops drop engine-specific opts (a sharded 'axis='
+    # means nothing to the pipelined engine) — only 'interpret' carries.
+    # The mesh goes too: hopping off a sharded engine IS the
+    # single-device retry.
+    safe_opts = {k: v for k, v in query.engine_opts.items()
+                 if k == "interpret"}
+    q2 = query.with_(engine_opts=safe_opts, use_kernels=False,
+                     device_policy="auto", mesh=None)
+    for eng in _DEGRADE_CHAIN.get(p.engine, ()):
+        rungs.append((eng, q2, f"downgrading to {eng!r}"))
+    for eng, qq, note in rungs:
+        reasons = p.reasons + tuple(attempts) + (f"on_error=degrade: "
+                                                 f"{note}",)
+        try:
+            params = _derive_params(qq, eng, [], m)
+            params["use_kernels"] = False
+            if "n" in p.params:
+                params["n"] = p.params["n"]
+            if (p.params.get("deadline_ts") is not None
+                    and eng in _DEADLINE_ENGINES):
+                params["deadline_ts"] = p.params["deadline_ts"]
+            plan2 = Plan(eng, reasons, params,
+                         cost_estimate=_estimate_cost(qq, eng, params))
+            report = _EXECUTORS[eng](qq, plan2)
+            report.plan = plan2
+            return report
+        except Exception as e2:
+            attempts.append(f"on_error=degrade: {eng} raised "
+                            f"{type(e2).__name__}: {e2}")
+            last = e2
+    raise last

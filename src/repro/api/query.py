@@ -58,6 +58,21 @@ class MedoidQuery:
     ``policy=``, ``distance_fn=``, ``eps=``, ``samples_per_round=``,
     ``axis=`` for sharded meshes). ``X`` may be a ``(N, d)`` array or
     a host oracle (``VectorOracle`` / ``GraphOracle``).
+
+    Robustness policies (DESIGN.md §13):
+
+    * ``deadline_s`` — wall-clock budget in seconds. Single-medoid
+      exact queries route to a deadline-capable engine; a blown
+      deadline returns the incumbent as an anytime result
+      (``certified=False`` with a deterministic bound-gap ``ci``),
+      never an exception.
+    * ``on_error`` — ``"raise"`` (default) propagates engine failures;
+      ``"degrade"`` walks the planner's downgrade ladder
+      (sharded→pipelined→scan, kernels→jnp), each hop recorded in
+      ``plan.reasons``, re-raising only when the last rung fails.
+    * ``nonfinite`` — ``"raise"`` (default) rejects NaN/Inf rows in a
+      host-array ``X`` at solve time (a single NaN silently poisons
+      every triangle bound); ``"allow"`` skips the check.
     """
     X: Any
     metric: str = "l2"
@@ -76,6 +91,9 @@ class MedoidQuery:
     use_kernels: bool | None = None
     n_iter: int = 10
     update: "MedoidQuery | None" = None
+    deadline_s: float | None = None
+    on_error: str = "raise"
+    nonfinite: str = "raise"
     engine_opts: dict = field(default_factory=dict)
 
     def __post_init__(self):
@@ -87,6 +105,20 @@ class MedoidQuery:
             raise ValueError(
                 "MedoidQuery: device_policy must be one of "
                 f"{_DEVICE_POLICIES}, got {self.device_policy!r}")
+        if self.on_error not in ("raise", "degrade"):
+            raise ValueError(
+                "MedoidQuery: on_error must be 'raise' or 'degrade', "
+                f"got {self.on_error!r}")
+        if self.nonfinite not in ("raise", "allow"):
+            raise ValueError(
+                "MedoidQuery: nonfinite must be 'raise' or 'allow', "
+                f"got {self.nonfinite!r}")
+        if self.deadline_s is not None and not (
+                isinstance(self.deadline_s, (int, float))
+                and float(self.deadline_s) > 0):
+            raise ValueError(
+                "MedoidQuery: deadline_s must be a positive number of "
+                f"seconds, got {self.deadline_s!r}")
         if self.assignments is not None and self.k is None:
             raise ValueError(
                 "MedoidQuery: assignments requires k (the cluster count)")
@@ -106,7 +138,7 @@ _QUERY_LEAVES = ("X", "assignments", "warm_idx", "update")
 _QUERY_AUX = tuple(f for f in (
     "metric", "k", "topk", "mode", "budget", "delta", "device_policy",
     "mesh", "seed", "block", "block_schedule", "use_kernels", "n_iter",
-    "engine_opts"))
+    "deadline_s", "on_error", "nonfinite", "engine_opts"))
 
 
 def _query_flatten(q: MedoidQuery):

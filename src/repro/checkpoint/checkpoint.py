@@ -33,35 +33,74 @@ class Checkpointer:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep_last = keep_last
         self._q: queue.Queue = queue.Queue()
-        self._worker = threading.Thread(target=self._drain, daemon=True)
-        self._worker.start()
+        # the writer thread starts lazily on the first async save: a
+        # blocking-only checkpointer (every per-solve instance the
+        # resumable engines create) must not pin a thread for its whole
+        # process lifetime — a long test run accumulates enough idle
+        # workers to destabilise the XLA runtime
+        self._worker: threading.Thread | None = None
         self._errors: list[Exception] = []
 
     # ------------------------------------------------------------- save
-    def save(self, step: int, tree, blocking: bool = True):
-        """Snapshot `tree` (pytree of jax/np arrays) at `step`."""
+    def save(self, step: int, tree, blocking: bool = True,
+             extra_meta: dict | None = None):
+        """Snapshot `tree` (pytree of jax/np arrays) at `step`.
+
+        ``extra_meta`` (JSON-serialisable dict) is stored alongside the
+        manifest and returned by :meth:`load` — engines use it for a
+        config fingerprint so a resume can refuse a mismatched state.
+        """
+        self._raise_pending()
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
         if blocking:
-            self._write(step, host_tree)
+            self._write(step, host_tree, extra_meta)
         else:
-            self._q.put((step, host_tree))
+            if self._worker is None or not self._worker.is_alive():
+                self._worker = threading.Thread(target=self._drain,
+                                                daemon=True)
+                self._worker.start()
+            self._q.put((step, host_tree, extra_meta))
 
     def wait(self):
         self._q.join()
+        self._raise_pending()
+
+    def close(self):
+        """Drain pending async saves and stop the writer thread (no-op
+        if no async save ever ran). The checkpointer stays usable — a
+        later async save starts a fresh worker."""
+        if self._worker is not None and self._worker.is_alive():
+            self._q.join()
+            self._q.put(None)
+            self._worker.join(timeout=30.0)
+        self._worker = None
+        self._raise_pending()
+
+    def _raise_pending(self):
+        """Surface background-thread write failures eagerly: a
+        fire-and-forget caller that never calls ``wait()`` must still
+        learn its checkpoints are being lost, on the next interaction
+        with the checkpointer rather than never."""
         if self._errors:
-            raise self._errors[0]
+            err = self._errors[0]
+            del self._errors[:]
+            raise err
 
     def _drain(self):
         while True:
-            step, tree = self._q.get()
+            item = self._q.get()
+            if item is None:           # close() sentinel
+                self._q.task_done()
+                return
+            step, tree, extra_meta = item
             try:
-                self._write(step, tree)
+                self._write(step, tree, extra_meta)
             except Exception as e:  # noqa: BLE001
                 self._errors.append(e)
             finally:
                 self._q.task_done()
 
-    def _write(self, step: int, host_tree):
+    def _write(self, step: int, host_tree, extra_meta=None):
         leaves, treedef = jax.tree.flatten(host_tree)
         tmp = self.dir / f"step_{step}.tmp"
         final = self.dir / f"step_{step}"
@@ -73,12 +112,15 @@ class Checkpointer:
             np.save(tmp / f"arr_{i}.npy", leaf)
             manifest.append({"shape": list(leaf.shape),
                              "dtype": str(leaf.dtype)})
-        (tmp / "meta.json").write_text(json.dumps({
+        meta = {
             "step": step,
             "treedef": str(treedef),
             "n_leaves": len(leaves),
             "manifest": manifest,
-        }))
+        }
+        if extra_meta is not None:
+            meta["extra"] = extra_meta
+        (tmp / "meta.json").write_text(json.dumps(meta))
         if final.exists():
             shutil.rmtree(final)
         os.replace(tmp, final)
@@ -99,6 +141,7 @@ class Checkpointer:
                 if not p.name.endswith(".tmp")]
 
     def latest_step(self):
+        self._raise_pending()
         ptr = self.dir / "LATEST"
         if ptr.exists():
             s = int(ptr.read_text())
@@ -106,6 +149,24 @@ class Checkpointer:
                 return s
         steps = self.all_steps()
         return max(steps) if steps else None
+
+    def load(self, step: int | None = None):
+        """Load a checkpoint *without* an example tree: returns
+        ``(step, leaves, meta)`` where ``leaves`` is the flat list of
+        numpy arrays in manifest order and ``meta`` is the stored
+        metadata dict (including any ``extra`` from
+        ``save(extra_meta=...)``). Callers that know their tree
+        structure statically (e.g. ``SolveState``) rebuild from the
+        flat leaves; ``restore()`` remains the shape-checked path."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = self.dir / f"step_{step}"
+        meta = json.loads((d / "meta.json").read_text())
+        leaves = [np.load(d / f"arr_{i}.npy")
+                  for i in range(meta["n_leaves"])]
+        return step, leaves, meta
 
     def restore(self, example_tree, step: int | None = None,
                 shardings=None):

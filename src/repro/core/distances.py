@@ -182,6 +182,8 @@ class VectorOracle:
 
     def row(self, i: int) -> np.ndarray:
         """All distances from element ``i`` (a 'computed element')."""
+        from repro.runtime import faults
+        faults.on_oracle_call()      # injection hook; no-op when disarmed
         self.rows_computed += 1
         self.scalar_distances += self.n
         if self.metric in ("l2", "sqeuclidean"):

@@ -184,19 +184,21 @@ def _pad_prev(state, block, has_carry):
     return (l, alive, e_cl, m_cl, pidx, pe, pv, dprev, n_comp, n_rounds)
 
 
+def _live_count(l, alive, e_cl):
+    return jnp.logical_and(alive, l < e_cl).sum()
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("block", "warm", "metric", "use_kernels", "interpret",
-                     "can_compact", "has_warm_idx"),
+                     "has_warm_idx"),
 )
-def _stage0(X, l0, warm_arr, budget, block, warm, metric, use_kernels,
-            interpret, can_compact, has_warm_idx):
-    """Full-domain stage: warm-up prologue + steady rounds until either
-    the live count drops below N/2 (compaction trigger), the computed-row
-    budget is spent, or no survivor remains. ``l0`` seeds the bound
-    vector (zeros for the certified path; the bandit hand-off may seed
-    probabilistic lower bounds); ``warm_arr`` forces the first pivot
-    block. Returns the final state plus the live count."""
+def _stage0_init(X, l0, warm_arr, budget, block, warm, metric, use_kernels,
+                 interpret, has_warm_idx):
+    """Full-domain stage prologue: initial state + warm-up rounds, padded
+    to the steady-state carry shape. ``l0`` seeds the bound vector (zeros
+    for the certified path; the bandit hand-off may seed probabilistic
+    lower bounds); ``warm_arr`` forces the first pivot block."""
     n = X.shape[0]
     x_sq = (sq_norms(X) if metric in ("l2", "sqeuclidean")
             else jnp.zeros(n, X.dtype))
@@ -220,21 +222,40 @@ def _stage0(X, l0, warm_arr, budget, block, warm, metric, use_kernels,
                          forced_valid=jnp.ones(bw, bool))
     for b in warm:                                # unrolled warm-up
         state = round_fn(state, b)
-    state = _pad_prev(state, block, has_carry=not use_kernels)
+    return _pad_prev(state, block, has_carry=not use_kernels)
 
-    def live_of(state):
-        l, alive, e_cl = state[0], state[1], state[2]
-        return jnp.logical_and(alive, l < e_cl).sum()
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "metric", "use_kernels", "interpret",
+                     "can_compact"),
+)
+def _stage0_loop(X, state, budget, seg_cap, block, metric, use_kernels,
+                 interpret, can_compact):
+    """One full-domain *segment*: steady rounds until the live count
+    drops below N/2 (compaction trigger), the computed-row budget is
+    spent, no survivor remains, or ``seg_cap`` rounds have run since
+    entry (the host-visibility boundary — ``seg_cap`` is traced, so the
+    segmented and straight-through paths share one compiled program and
+    the per-round math is identical either way). Returns the final
+    state plus the live count."""
+    n = X.shape[0]
+    x_sq = (sq_norms(X) if metric in ("l2", "sqeuclidean")
+            else jnp.zeros(n, X.dtype))
+    round_fn = functools.partial(_pipe_round0, X, x_sq, n, metric,
+                                 use_kernels, interpret, budget)
+    seg_start = state[9]
 
     def cond(state):
-        live = live_of(state)
+        live = _live_count(state[0], state[1], state[2])
         go = jnp.logical_and(live > 0, state[8] < budget)
+        go = jnp.logical_and(go, state[9] - seg_start < seg_cap)
         if can_compact:
             return jnp.logical_and(go, 2 * live > n)
         return go
 
     state = jax.lax.while_loop(cond, lambda s: round_fn(s, block), state)
-    return state, live_of(state)
+    return state, _live_count(state[0], state[1], state[2])
 
 
 def _compact(X, surv_idx, l_s, alive_s, e_cl, m_out):
@@ -297,38 +318,53 @@ def _stage_round(X, Xs, surv_idx, x_sq, n, metric, use_kernels,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("m_out", "block", "metric", "use_kernels", "interpret",
-                     "is_floor"),
+    static_argnames=("m_out", "metric", "use_kernels", "interpret"),
 )
-def _stage(X, surv_idx, l_s, alive_s, e_cl, m_cl, pidx, pe, pv,
-           n_comp, n_rounds, fold_cols, budget, m_out, block, metric,
-           use_kernels, interpret, is_floor):
-    """Compact the live survivors into an ``m_out``-sized buffer, then run
-    rounds until the next ladder trigger (or termination)."""
+def _stage_enter(X, surv_idx, l_s, alive_s, e_cl, pidx, m_out, metric,
+                 use_kernels, interpret):
+    """Ladder-rung entry: compact the live survivors into an
+    ``m_out``-sized buffer and re-seed the previous-block distance carry.
+    Split from the round loop so a resume never re-runs compaction
+    (``top_k`` tie-breaks by buffer position — re-compacting mid-rung
+    would change the pivot sequence and break bit-identity)."""
     n = X.shape[0]
     surv_idx, l_s, alive_s, Xs = _compact(X, surv_idx, l_s, alive_s, e_cl,
                                           m_out)
-    m = m_out
-    x_sq = (sq_norms(X) if metric in ("l2", "sqeuclidean")
-            else jnp.zeros(n, X.dtype))
-    xs_sq = (sq_norms(Xs) if metric in ("l2", "sqeuclidean")
-             else jnp.zeros(m, Xs.dtype))
     if use_kernels:
-        dprev_s = jnp.zeros((0, m), X.dtype)
+        dprev_s = jnp.zeros((0, m_out), X.dtype)
     else:
+        x_sq = (sq_norms(X) if metric in ("l2", "sqeuclidean")
+                else jnp.zeros(n, X.dtype))
+        xs_sq = (sq_norms(Xs) if metric in ("l2", "sqeuclidean")
+                 else jnp.zeros(m_out, Xs.dtype))
         # one (B, M) block at stage entry re-seeds the carried rows
         dprev_s = pairwise(jnp.take(X, pidx, axis=0), Xs, metric,
                            a_sq=jnp.take(x_sq, pidx), b_sq=xs_sq)
-    state = (l_s, alive_s, e_cl, m_cl, pidx, pe, pv, dprev_s, n_comp,
-             n_rounds, fold_cols)
+    return surv_idx, l_s, alive_s, dprev_s
 
-    def live_of(state):
-        l_s, alive_s, e_cl = state[0], state[1], state[2]
-        return jnp.logical_and(alive_s, l_s < e_cl).sum()
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "metric", "use_kernels", "interpret",
+                     "is_floor"),
+)
+def _stage_loop(X, surv_idx, state, budget, seg_cap, block, metric,
+                use_kernels, interpret, is_floor):
+    """One compacted-stage *segment*: rounds until the next ladder
+    trigger, termination, or ``seg_cap`` rounds since entry (the
+    host-visibility boundary). ``Xs`` is re-gathered from ``surv_idx``
+    — a deterministic gather, bit-identical to the compaction's."""
+    n = X.shape[0]
+    m = surv_idx.shape[0]
+    Xs = jnp.take(X, surv_idx, axis=0)
+    x_sq = (sq_norms(X) if metric in ("l2", "sqeuclidean")
+            else jnp.zeros(n, X.dtype))
+    seg_start = state[9]
 
     def cond(state):
-        live = live_of(state)
+        live = _live_count(state[0], state[1], state[2])
         go = jnp.logical_and(live > 0, state[8] < budget)
+        go = jnp.logical_and(go, state[9] - seg_start < seg_cap)
         if is_floor:
             return go
         return jnp.logical_and(go, 4 * live > m)
@@ -336,7 +372,19 @@ def _stage(X, surv_idx, l_s, alive_s, e_cl, m_cl, pidx, pe, pv,
     body = functools.partial(_stage_round, X, Xs, surv_idx, x_sq, n,
                              metric, use_kernels, interpret, budget, block)
     state = jax.lax.while_loop(cond, body, state)
-    return state, surv_idx, live_of(state)
+    return state, _live_count(state[0], state[1], state[2])
+
+
+def _as_checkpointer(checkpoint):
+    if checkpoint is None:
+        return None
+    from repro.checkpoint.checkpoint import Checkpointer
+    if isinstance(checkpoint, Checkpointer):
+        return checkpoint
+    return Checkpointer(str(checkpoint))
+
+
+_SEG_DEFAULT = 16    # rounds per segment when segmenting is on
 
 
 def _trimed_pipelined(
@@ -351,6 +399,11 @@ def _trimed_pipelined(
     warm_idx=None,
     l_init=None,
     max_computed: int | None = None,
+    checkpoint=None,
+    checkpoint_every: int | None = None,
+    resume: str = "auto",
+    deadline_ts: float | None = None,
+    heartbeat_timeout_s: float | None = None,
 ) -> MedoidResult:
     """Exact medoid via the survivor-compacted, software-pipelined engine
     (DESIGN.md §4). One X-stream per steady-state round; bound
@@ -376,10 +429,41 @@ def _trimed_pipelined(
       incumbent (whose energy is exact — its full row was computed) is
       returned as the best-so-far.
 
+    Fault-tolerant runtime hooks (DESIGN.md §13) — when any is active
+    the elimination loop runs in host-visible **segments** of
+    ``checkpoint_every`` rounds (default: one round when a deadline or
+    heartbeat asks for interruptibility, 16 for pure checkpointing);
+    segmentation never changes the round sequence (the per-round math
+    is an identical compiled program, only the host observes the state
+    more often):
+
+    * ``checkpoint`` — a directory path or
+      :class:`~repro.checkpoint.checkpoint.Checkpointer`; every segment
+      boundary snapshots the full :class:`~repro.core.solve_state
+      .SolveState`, and a killed solve restarted with the same
+      checkpoint resumes **bit-identically** (same pivot sequence, same
+      index/energy/element count as the uninterrupted run).
+    * ``resume`` — ``"auto"`` (resume if a state exists), ``"never"``
+      (start fresh, overwriting), ``"require"`` (error if nothing to
+      resume). A config-fingerprint mismatch always refuses.
+    * ``deadline_ts`` — absolute time (``faults.clock()`` scale) after
+      which the solve halts at the next segment boundary and returns
+      the incumbent as an anytime result (``certified=False``,
+      ``halt_reason="deadline"``, with the bound gap in ``lo_bound``).
+      Never raises; at least one segment always runs.
+    * ``heartbeat_timeout_s`` — arm a :class:`~repro.runtime.faults
+      .RoundWatchdog`; if segments stop beating for this long (by the
+      fault clock) the solve halts as ``halt_reason="stalled"``.
+
     Only triangle-inequality metrics are admissible (the elimination
     bound is the triangle bound)."""
     del seed  # selection is deterministic (lowest-bound); kept for API parity
     require_metric(metric, need_triangle=True, caller="trimed_pipelined")
+    from repro.core.solve_state import (PHASE_FULL, PHASE_LADDER,
+                                        SolveState, load_state, save_state,
+                                        state_fingerprint)
+    from repro.runtime import faults
+
     X = jnp.asarray(X)
     n = X.shape[0]
     if n == 1:
@@ -390,6 +474,7 @@ def _trimed_pipelined(
     can_compact = n > floor
     budget_host = (2**31 - 1 if max_computed is None
                    else max(int(max_computed), 0))
+    budget_host = faults.effective_budget(budget_host)
     budget = jnp.asarray(budget_host, jnp.int32)
     l0 = (jnp.zeros(n, X.dtype) if l_init is None
           else jnp.maximum(jnp.asarray(l_init, X.dtype), 0.0))
@@ -403,34 +488,163 @@ def _trimed_pipelined(
     else:
         warm_arr = jnp.zeros((1,), jnp.int32)
 
-    state, live = _stage0(X, l0, warm_arr, budget, block, warm, metric,
-                          use_kernels, interpret, can_compact, has_warm_idx)
-    (l, alive, e_cl, m_cl, pidx, pe, pv, _d, n_comp, n_rounds) = state
-    live = int(live)
+    # ---- fault-tolerant runtime plumbing (all inert by default) ----
+    ck = _as_checkpointer(checkpoint)
+    if resume not in ("auto", "never", "require"):
+        raise ValueError(f"resume must be 'auto', 'never' or 'require', "
+                         f"got {resume!r}")
+    segmented = (ck is not None or deadline_ts is not None
+                 or heartbeat_timeout_s is not None or faults.active())
+    if checkpoint_every is None:
+        # deadline/heartbeat callers asked for interruptibility: check
+        # every round. Pure checkpointing amortises the host sync.
+        checkpoint_every = (1 if (deadline_ts is not None
+                                  or heartbeat_timeout_s is not None)
+                            else _SEG_DEFAULT)
+    seg_cap = jnp.asarray(
+        max(int(checkpoint_every), 1) if segmented else 2**31 - 1,
+        jnp.int32)
+    fp = state_fingerprint(
+        n=n, d=int(X.shape[1]), dtype=str(X.dtype), metric=metric,
+        block=block, use_kernels=bool(use_kernels),
+        ladder_min=int(ladder_min), budget=budget_host, warm=warm,
+        has_warm_idx=has_warm_idx)
+    st = None
+    if ck is not None and resume in ("auto", "require"):
+        st = load_state(ck, fp)
+        if st is None and resume == "require":
+            raise FileNotFoundError(
+                f"resume='require' but no SolveState checkpoint in "
+                f"{ck.dir}")
+    wd = (faults.RoundWatchdog(heartbeat_timeout_s)
+          if heartbeat_timeout_s is not None else None)
+
+    def _save(phase, surv_idx_d, state11):
+        if ck is None:
+            return
+        (l_c, alive_c, e_cl, m_cl, pidx, pe, pv, dprev, n_comp, n_rounds,
+         fold_cols) = state11
+        save_state(ck, SolveState(
+            phase=phase, n_stages=n_stages, m_out=m_out, is_floor=is_floor,
+            surv_idx=np.asarray(surv_idx_d) if phase == PHASE_LADDER
+            else np.zeros(0, np.int32),
+            l=np.asarray(l_c), alive=np.asarray(alive_c),
+            e_cl=np.asarray(e_cl), m_cl=np.asarray(m_cl),
+            pidx=np.asarray(pidx), pe=np.asarray(pe), pv=np.asarray(pv),
+            dprev=np.asarray(dprev), n_comp=np.asarray(n_comp),
+            n_rounds=np.asarray(n_rounds),
+            fold_cols=np.asarray(fold_cols)), fp)
+
+    def _halted_after(n_rounds_d):
+        """Post-segment host checks, in order: checkpoint already saved,
+        watchdog beat, injected faults (may raise — the simulated kill),
+        then deadline/stall. Returns the halt reason or ''."""
+        if wd is not None:
+            wd.beat(int(n_rounds_d))
+        faults.on_segment(int(n_rounds_d))
+        if deadline_ts is not None and faults.clock() >= deadline_ts:
+            return "deadline"
+        if wd is not None and wd.stalled():
+            return "stalled"
+        return ""
+
+    # ---- the segment state machine ----
+    halt = ""
     n_stages = 0
+    m_out, is_floor = 0, False
     fold_cols = jnp.asarray(0, jnp.int32)
-    surv_idx, l_s, alive_s = jnp.arange(n, dtype=jnp.int32), l, alive
+    need_enter = True
 
-    while live > 0 and int(n_comp) < budget_host:
-        m_out = max(pow2_at_least(live), floor)
-        is_floor = m_out <= floor
-        out, surv_idx, live_d = _stage(
-            X, surv_idx, l_s, alive_s, e_cl, m_cl, pidx, pe, pv, n_comp,
-            n_rounds, fold_cols, budget, m_out, block, metric, use_kernels,
-            interpret, is_floor)
-        (l_s, alive_s, e_cl, m_cl, pidx, pe, pv, _d, n_comp, n_rounds,
-         fold_cols) = out
-        live = int(live_d)
-        n_stages += 1
+    if st is not None and st.phase == PHASE_LADDER:
+        # resumed mid-rung: re-enter the round loop directly — never
+        # re-compact (top_k ties depend on buffer layout)
+        n_stages, m_out, is_floor = st.n_stages, st.m_out, st.is_floor
+        surv_idx = jnp.asarray(st.surv_idx)
+        (l_c, alive_c, e_cl, m_cl, pidx, pe, pv, dprev, n_comp,
+         n_rounds) = (jnp.asarray(st.l), jnp.asarray(st.alive),
+                      jnp.asarray(st.e_cl), jnp.asarray(st.m_cl),
+                      jnp.asarray(st.pidx), jnp.asarray(st.pe),
+                      jnp.asarray(st.pv), jnp.asarray(st.dprev),
+                      jnp.asarray(st.n_comp), jnp.asarray(st.n_rounds))
+        fold_cols = jnp.asarray(st.fold_cols)
+        live = int(np.logical_and(st.alive,
+                                  st.l < float(st.e_cl)).sum())
+        need_enter = False
+    else:
+        if st is not None:      # resumed in the full-domain phase
+            n_stages = st.n_stages
+            state10 = (jnp.asarray(st.l), jnp.asarray(st.alive),
+                       jnp.asarray(st.e_cl), jnp.asarray(st.m_cl),
+                       jnp.asarray(st.pidx), jnp.asarray(st.pe),
+                       jnp.asarray(st.pv), jnp.asarray(st.dprev),
+                       jnp.asarray(st.n_comp), jnp.asarray(st.n_rounds))
+            fold_cols = jnp.asarray(st.fold_cols)
+        else:
+            state10 = _stage0_init(X, l0, warm_arr, budget, block, warm,
+                                   metric, use_kernels, interpret,
+                                   has_warm_idx)
+        while True:
+            state10, live_d = _stage0_loop(X, state10, budget, seg_cap,
+                                           block, metric, use_kernels,
+                                           interpret, can_compact)
+            live = int(live_d)
+            _save(PHASE_FULL, None, state10 + (fold_cols,))
+            halt = _halted_after(state10[9])
+            if (halt or live == 0 or int(state10[8]) >= budget_host
+                    or (can_compact and 2 * live <= n)):
+                break
+            # segment cap hit mid-phase: keep streaming full-domain rounds
+        (l_c, alive_c, e_cl, m_cl, pidx, pe, pv, dprev, n_comp,
+         n_rounds) = state10
+        surv_idx = jnp.arange(n, dtype=jnp.int32)
 
-    n_rounds = int(n_rounds)
-    n_comp = int(n_comp)
-    e_paper = float(e_cl) * n / max(n - 1, 1)
+    # ---- compaction-ladder phase ----
+    while not halt and live > 0 and int(n_comp) < budget_host:
+        if need_enter:
+            m_out = max(pow2_at_least(live), floor)
+            is_floor = m_out <= floor
+            surv_idx, l_c, alive_c, dprev = _stage_enter(
+                X, surv_idx, l_c, alive_c, e_cl, pidx, m_out, metric,
+                use_kernels, interpret)
+            n_stages += 1
+        need_enter = True
+        while True:
+            state11 = (l_c, alive_c, e_cl, m_cl, pidx, pe, pv, dprev,
+                       n_comp, n_rounds, fold_cols)
+            state11, live_d = _stage_loop(X, surv_idx, state11, budget,
+                                          seg_cap, block, metric,
+                                          use_kernels, interpret, is_floor)
+            (l_c, alive_c, e_cl, m_cl, pidx, pe, pv, dprev, n_comp,
+             n_rounds, fold_cols) = state11
+            live = int(live_d)
+            _save(PHASE_LADDER, surv_idx, state11)
+            halt = _halted_after(n_rounds)
+            if halt or live == 0 or int(n_comp) >= budget_host:
+                break
+            if not is_floor and 4 * live <= m_out:
+                break               # ladder trigger: next rung compacts
+            # segment cap hit mid-rung: keep rolling this rung
+
+    # ---- finalize ----
+    n_rounds_h = int(n_rounds)
+    n_comp_h = int(n_comp)
+    e_h = float(e_cl)
+    l_h, alive_h = np.asarray(l_c), np.asarray(alive_c)
+    live_mask = np.logical_and(alive_h, l_h < e_h)
+    certified = not live_mask.any()
+    # e * n / (n-1) evaluated left-to-right: the packed-many and sharded
+    # engines reproduce this exact association, so any re-grouping here
+    # breaks their bit-identity contracts by one ulp
+    d1 = max(n - 1, 1)
+    lo_int = float(l_h[live_mask].min()) if live_mask.any() else e_h
+    halt_reason = "" if certified else (halt or "budget")
     return MedoidResult(
-        int(m_cl), e_paper, n_comp, n_rounds, n_comp * n,
+        int(m_cl), e_h * n / d1, n_comp_h, n_rounds_h, n_comp_h * n,
         n_stages=n_stages,
-        x_cols_streamed=n_rounds * n + int(fold_cols),
-        certified=(live == 0),
+        x_cols_streamed=n_rounds_h * n + int(fold_cols),
+        certified=certified,
+        lo_bound=min(lo_int, e_h) * n / d1,
+        halt_reason=halt_reason,
     )
 
 

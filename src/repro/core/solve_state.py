@@ -1,0 +1,154 @@
+"""SolveState — the pipelined engine's persisted elimination state.
+
+The segmented pipelined engine (DESIGN.md §13) runs its elimination
+loop in host-visible segments; between segments the entire loop state
+can be snapshotted through :class:`repro.checkpoint.checkpoint
+.Checkpointer` and later restored for a **bit-identical** resume: the
+restored solve replays the exact same pivot sequence (the state round-
+trips through ``.npy`` files losslessly, every round is a pure function
+of the state, and compaction is *never* re-run on resume — ``top_k``
+tie-breaking depends on the survivor-buffer layout, so re-compacting
+would change the pivot order).
+
+The state is a flat, fixed-order list of arrays (:data:`ARRAY_FIELDS`)
+plus a few host scalars (:data:`AUX_FIELDS`) stored in the checkpoint's
+``extra`` metadata next to a **config fingerprint**. A resume under a
+different configuration (block width, metric, kernel flag, ladder
+geometry, budget...) would silently diverge from bit-identity, so a
+fingerprint mismatch refuses to resume (:class:`SolveStateMismatch`)
+instead of guessing.
+
+This is also the foundation the ROADMAP's streaming-maintenance item
+builds on: a finished solve's ``SolveState`` (bounds + survivor buffer
++ incumbent) is exactly the index that insert/delete repair starts
+from.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax
+
+PHASE_FULL = 0      # full-domain rounds (no survivor buffer yet)
+PHASE_LADDER = 1    # compacted-buffer rounds on the pow2 ladder
+
+ARRAY_FIELDS = ("surv_idx", "l", "alive", "e_cl", "m_cl", "pidx", "pe",
+                "pv", "dprev", "n_comp", "n_rounds", "fold_cols")
+AUX_FIELDS = ("phase", "n_stages", "m_out", "is_floor")
+
+_FORMAT = 1          # bump on any layout change
+
+
+class SolveStateMismatch(ValueError):
+    """A checkpoint exists but was written under a different solve
+    configuration (or state-format version); resuming it would not be
+    bit-identical."""
+
+
+@dataclass
+class SolveState:
+    """One segment boundary of the pipelined engine, in host memory.
+
+    ``phase`` is :data:`PHASE_FULL` or :data:`PHASE_LADDER`; in the full
+    phase ``surv_idx`` is empty (the domain is implicit ``arange(N)``)
+    and ``m_out``/``is_floor`` are unused. Array fields mirror the
+    engine's while-loop carry; see ``core/pipelined.py``.
+    """
+    phase: int = PHASE_FULL
+    n_stages: int = 0
+    m_out: int = 0
+    is_floor: bool = False
+    surv_idx: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
+    l: np.ndarray | None = None
+    alive: np.ndarray | None = None
+    e_cl: np.ndarray | None = None
+    m_cl: np.ndarray | None = None
+    pidx: np.ndarray | None = None
+    pe: np.ndarray | None = None
+    pv: np.ndarray | None = None
+    dprev: np.ndarray | None = None
+    n_comp: np.ndarray | None = None
+    n_rounds: np.ndarray | None = None
+    fold_cols: np.ndarray | None = None
+
+    # ------------------------------------------------------- conversions
+    def leaves(self) -> list:
+        return [np.asarray(getattr(self, f)) for f in ARRAY_FIELDS]
+
+    def aux(self) -> dict:
+        return {"phase": int(self.phase), "n_stages": int(self.n_stages),
+                "m_out": int(self.m_out), "is_floor": bool(self.is_floor)}
+
+    @classmethod
+    def from_leaves(cls, leaves, aux: dict) -> "SolveState":
+        kw = dict(zip(ARRAY_FIELDS, leaves))
+        kw.update({k: aux[k] for k in AUX_FIELDS})
+        return cls(**kw)
+
+
+def _flatten(s: SolveState):
+    return tuple(getattr(s, f) for f in ARRAY_FIELDS), \
+        tuple(getattr(s, f) for f in AUX_FIELDS)
+
+
+def _unflatten(aux, children) -> SolveState:
+    return SolveState(**dict(zip(AUX_FIELDS, aux)),
+                      **dict(zip(ARRAY_FIELDS, children)))
+
+
+jax.tree_util.register_pytree_node(SolveState, _flatten, _unflatten)
+
+
+def state_fingerprint(**cfg) -> dict:
+    """Canonical (JSON-round-trippable) solve-config fingerprint."""
+    fp = {"format": _FORMAT}
+    for k, v in sorted(cfg.items()):
+        if isinstance(v, (tuple, list)):
+            v = [int(x) for x in v]
+        elif isinstance(v, (np.integer,)):
+            v = int(v)
+        elif isinstance(v, (np.floating,)):
+            v = float(v)
+        fp[k] = v
+    return fp
+
+
+def save_state(ck, state: SolveState, fingerprint: dict,
+               blocking: bool = True) -> int:
+    """Snapshot ``state`` at step ``n_rounds`` (monotone across a solve,
+    so the LATEST pointer always names the furthest segment)."""
+    step = int(np.asarray(state.n_rounds))
+    ck.save(step, state.leaves(), blocking=blocking,
+            extra_meta={"solve_state": state.aux(),
+                        "fingerprint": fingerprint})
+    return step
+
+
+def load_state(ck, fingerprint: dict, step: int | None = None):
+    """Load the latest (or ``step``-th) ``SolveState`` from ``ck``.
+    Returns ``None`` when the directory holds no checkpoint at all;
+    raises :class:`SolveStateMismatch` when one exists but is not a
+    solve state or was written under a different configuration."""
+    try:
+        step, leaves, meta = ck.load(step)
+    except FileNotFoundError:
+        return None
+    extra = meta.get("extra") or {}
+    if "solve_state" not in extra:
+        raise SolveStateMismatch(
+            f"checkpoint step_{step} in {ck.dir} is not a SolveState "
+            "snapshot")
+    saved_fp = extra.get("fingerprint") or {}
+    want = state_fingerprint(**{k: v for k, v in fingerprint.items()
+                                if k != "format"})
+    if saved_fp != want:
+        diff = sorted(k for k in set(saved_fp) | set(want)
+                      if saved_fp.get(k) != want.get(k))
+        raise SolveStateMismatch(
+            "checkpoint was written under a different solve configuration "
+            f"(differing keys: {diff}); resuming it would not be "
+            "bit-identical — delete the checkpoint directory or rerun "
+            "with the original configuration")
+    return SolveState.from_leaves(leaves, extra["solve_state"])

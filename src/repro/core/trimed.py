@@ -44,6 +44,9 @@ class MedoidResult:
     n_stages: int = 0          # compaction ladder stages (pipelined only)
     x_cols_streamed: int = 0   # X columns streamed from HBM (pipelined only)
     certified: bool = True     # elimination ran to completion (vs. budget-cut)
+    lo_bound: float = float("nan")   # min live lower bound (uncertified only,
+    #                                  paper scale) — the deterministic CI gap
+    halt_reason: str = ""      # "" | "budget" | "deadline" | "stalled"
 
 
 # ---------------------------------------------------------------------------
@@ -55,10 +58,15 @@ def _trimed_sequential(
     metric: str = "l2",
     eps: float = 0.0,
     order: np.ndarray | None = None,
+    deadline_ts: float | None = None,
 ) -> MedoidResult:
     """Alg. 1 of the paper. ``eps > 0`` gives the §4 relaxation: element
     ``i`` is computed only if ``l(i) * (1 + eps) < E_cl``, guaranteeing a
-    ``(1+eps)``-approximate medoid."""
+    ``(1+eps)``-approximate medoid. ``deadline_ts`` (absolute, on the
+    fault clock — DESIGN.md §13) halts the scan between elements and
+    returns the incumbent as an anytime result (``certified=False``,
+    ``halt_reason="deadline"``); at least one element is always
+    computed, and a blown deadline never raises."""
     if isinstance(oracle_or_X, (np.ndarray, jnp.ndarray)):
         oracle = VectorOracle(np.asarray(oracle_or_X), metric)
     else:
@@ -67,13 +75,20 @@ def _trimed_sequential(
     if n == 1:
         return MedoidResult(0, 0.0, 1, 0, oracle.scalar_distances)
 
+    if deadline_ts is not None:
+        from repro.runtime import faults as _faults
     rng = np.random.default_rng(seed)
     if order is None:
         order = rng.permutation(n)          # line 3: shuffle
     l = np.zeros(n)                          # line 1: lower bounds
     m_cl, e_cl = -1, np.inf                  # line 2
     n_computed = 0
+    halt = ""
     for i in order:
+        if (deadline_ts is not None and n_computed > 0
+                and _faults.clock() >= deadline_ts):
+            halt = "deadline"
+            break
         if l[i] * (1.0 + eps) < e_cl:        # line 4 (+ §4 relaxation)
             d = oracle.row(i)                # lines 5-7
             n_computed += 1
@@ -88,8 +103,23 @@ def _trimed_sequential(
                 gap = np.where(np.isnan(gap), 0.0, gap)
             np.maximum(l, gap, out=l)
             l[i] = e_i                       # keep own bound tight
+    # left-to-right e*n/(n-1): other engines match this exact association
     energy = e_cl * n / (n - 1)              # report paper normalisation
-    return MedoidResult(m_cl, energy, n_computed, 0, oracle.scalar_distances)
+    if not halt:
+        return MedoidResult(m_cl, energy, n_computed, 0,
+                            oracle.scalar_distances)
+    # anytime exit: incumbent + the deterministic bound gap. An element
+    # is still live if its bound leaves room below the incumbent (the
+    # eps relaxation already certifies anything within (1+eps)).
+    # (computed elements carry their exact energy as their bound, so the
+    # incumbent itself is never live)
+    live = l * (1.0 + eps) < e_cl
+    lo = float(l[live].min()) if live.any() else e_cl
+    return MedoidResult(m_cl, energy, n_computed, 0,
+                        oracle.scalar_distances,
+                        certified=not live.any(),
+                        lo_bound=min(lo, e_cl) * n / (n - 1),
+                        halt_reason=halt if live.any() else "")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,279 @@
+"""Deterministic fault-injection harness for the solve runtime (DESIGN.md §13).
+
+Every failure mode the fault-tolerant runtime claims to survive is
+injectable here, deterministically, with no real sleeping, no real
+process kills and no real device loss — so the whole recovery story
+(checkpoint/resume, deadline degradation, the planner downgrade ladder,
+``MedoidServer`` bisection/quarantine) is driven by ordinary unit tests:
+
+* **Data corruption** — :func:`corrupt` plants seeded NaN/Inf rows in a
+  copy of ``X`` (the ``nonfinite="raise"`` validation and the server's
+  isolation path must both catch it).
+* **Poison queries** — :func:`mark_poison` registers an array so any
+  engine or packed ``solve_many`` chunk touching it raises
+  :class:`FaultError` at run time (not at validation time). This is the
+  stand-in for "query that crashes the compiled program": deterministic,
+  repeatable, and invisible to input validation — exactly the shape of
+  failure the server's bisection has to isolate.
+* **Oracle faults** — :func:`on_oracle_call` (hooked into
+  ``VectorOracle.row``) raises at the k-th distance call.
+* **Engine faults / process kills** — :func:`on_segment` (hooked into
+  the pipelined engine's segment loop) raises at segment entry once the
+  round counter passes ``fail_round``: combined with checkpointing this
+  *is* a kill-and-resume test, without killing anything.
+* **Stalls** — ``stall_round``/``stall_s`` advance the module's fault
+  clock (:func:`clock`) instead of sleeping; deadline checks and the
+  :class:`RoundWatchdog` heartbeat monitor read this clock, so a
+  simulated stall blows deadlines and trips watchdogs in microseconds of
+  real time.
+* **Budget exhaustion** — ``force_budget`` clamps the engine's computed
+  -row budget mid-flight (the anytime/incumbent path must fire).
+* **Shard loss** — :func:`on_shard_entry` (hooked into the sharded
+  executors) raises :class:`ShardLostError`, which the planner's
+  downgrade ladder turns into a single-device retry.
+
+Arm a spec with the :func:`inject` context manager; everything is a
+no-op (one ``is None`` check) when nothing is armed. ``REPRO_FAULTS``
+(CI's fault lane) widens the seed grid the fault tests sweep —
+:func:`fault_seeds`.
+
+The :class:`RoundWatchdog` repurposes the launcher-level
+:class:`~repro.runtime.fault_tolerance.Supervisor` heartbeat pattern for
+*solve rounds*: the engine beats once per segment, and a beat gap longer
+than ``timeout_s`` (by the fault clock) marks the solve stalled.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Any
+
+__all__ = [
+    "FaultError", "ShardLostError", "FaultSpec", "inject", "active",
+    "clock", "corrupt", "mark_poison", "check_poison", "on_segment",
+    "on_oracle_call", "on_shard_entry", "effective_budget",
+    "RoundWatchdog", "fault_seeds",
+]
+
+
+class FaultError(RuntimeError):
+    """An injected fault fired (the harness's stand-in for a crash)."""
+
+
+class ShardLostError(FaultError):
+    """An injected loss of a device shard (multi-device engines)."""
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One deterministic fault scenario. All fields optional; a default
+    spec injects nothing (useful as a base for ``dataclasses.replace``).
+
+    ``fail_round`` / ``stall_round`` count *pipelined segments* (the
+    host-visible boundaries the engine checkpoints at); ``fail_call``
+    counts ``VectorOracle`` row calls, 1-based."""
+    seed: int = 0
+    nan_rows: int = 0            # corrupt(): rows set to NaN
+    inf_rows: int = 0            # corrupt(): rows set to +Inf
+    fail_call: int | None = None     # k-th oracle row call raises
+    fail_round: int | None = None    # segment >= this raises (the "kill")
+    fail_once: bool = True           # fire the round/shard fault only once
+    stall_round: int | None = None   # segment at which the stall happens
+    stall_s: float = 0.0             # simulated stall length (fault clock)
+    force_budget: int | None = None  # clamp engine budget (exhaustion)
+    lose_shard: bool = False         # sharded engines raise ShardLostError
+
+
+class _FaultState:
+    def __init__(self, spec: FaultSpec):
+        self.spec = spec
+        self.clock_offset = 0.0
+        self.oracle_calls = 0
+        self.round_fired = False
+        self.stall_fired = False
+        self.shard_fired = False
+        self.events: list[tuple[str, Any]] = []
+
+
+_ACTIVE: _FaultState | None = None
+_POISON: list[int] = []      # id()s of arrays marked poisonous
+
+
+def active() -> bool:
+    """True when a fault spec is armed (inside :func:`inject`)."""
+    return _ACTIVE is not None
+
+
+class inject:
+    """Context manager arming ``spec`` module-wide (not thread-safe —
+    the harness is a test tool, armed around single solves)."""
+
+    def __init__(self, spec: FaultSpec):
+        self.spec = spec
+        self.state: _FaultState | None = None
+
+    def __enter__(self) -> _FaultState:
+        global _ACTIVE
+        if _ACTIVE is not None:
+            raise RuntimeError("faults.inject does not nest")
+        self.state = _FaultState(self.spec)
+        _ACTIVE = self.state
+        return self.state
+
+    def __exit__(self, *exc):
+        global _ACTIVE
+        _ACTIVE = None
+        _POISON.clear()
+        return False
+
+
+def clock() -> float:
+    """Monotonic host clock plus any simulated-stall offset. Deadline
+    checks and watchdog heartbeats go through here, so injected stalls
+    blow deadlines without real sleeping."""
+    base = time.monotonic()
+    return base + _ACTIVE.clock_offset if _ACTIVE is not None else base
+
+
+# ---------------------------------------------------------------------------
+# data faults
+# ---------------------------------------------------------------------------
+def corrupt(X, spec: FaultSpec):
+    """A copy of ``X`` with ``spec.nan_rows`` rows of NaN and
+    ``spec.inf_rows`` rows of +Inf, at seeded row positions."""
+    import numpy as np
+    X = np.array(X, copy=True)
+    rng = np.random.default_rng(spec.seed)
+    k = spec.nan_rows + spec.inf_rows
+    if k == 0:
+        return X
+    rows = rng.choice(X.shape[0], size=min(k, X.shape[0]), replace=False)
+    X[rows[:spec.nan_rows]] = np.nan
+    X[rows[spec.nan_rows:]] = np.inf
+    return X
+
+
+def mark_poison(X) -> None:
+    """Register ``X`` (by identity) as a poison input: any armed engine
+    or packed chunk that touches it raises :class:`FaultError` at run
+    time. Cleared when the :func:`inject` context exits."""
+    if _ACTIVE is None:
+        raise RuntimeError("mark_poison: arm a FaultSpec with inject() first")
+    _POISON.append(id(X))
+
+
+def check_poison(X, where: str) -> None:
+    """Hook: raise if ``X`` was marked poisonous. No-op when disarmed."""
+    if _ACTIVE is None or id(X) not in _POISON:
+        return
+    _ACTIVE.events.append(("poison", where))
+    raise FaultError(f"injected poison input reached {where}")
+
+
+# ---------------------------------------------------------------------------
+# engine hooks
+# ---------------------------------------------------------------------------
+def on_segment(n_rounds: int) -> None:
+    """Hook: called by the pipelined engine at each segment boundary
+    (after any checkpoint of the previous segment). Fires the armed
+    stall and/or kill for this round range. No-op when disarmed."""
+    st = _ACTIVE
+    if st is None:
+        return
+    sp = st.spec
+    if (sp.stall_round is not None and not st.stall_fired
+            and n_rounds >= sp.stall_round):
+        st.stall_fired = True
+        st.clock_offset += float(sp.stall_s)
+        st.events.append(("stall", n_rounds))
+    if (sp.fail_round is not None and n_rounds >= sp.fail_round
+            and not (sp.fail_once and st.round_fired)):
+        st.round_fired = True
+        st.events.append(("fail_round", n_rounds))
+        raise FaultError(
+            f"injected engine failure at segment round {n_rounds} "
+            f"(fail_round={sp.fail_round})")
+
+
+def on_oracle_call() -> None:
+    """Hook: called by ``VectorOracle.row``. Raises at the armed k-th
+    distance call (1-based). No-op when disarmed."""
+    st = _ACTIVE
+    if st is None:
+        return
+    st.oracle_calls += 1
+    if st.spec.fail_call is not None and st.oracle_calls == st.spec.fail_call:
+        st.events.append(("fail_call", st.oracle_calls))
+        raise FaultError(
+            f"injected oracle failure at distance call "
+            f"{st.oracle_calls}")
+
+
+def on_shard_entry(n_shards: int) -> None:
+    """Hook: called by the sharded executors before launching the
+    multi-device program. Simulates losing a shard. No-op when
+    disarmed."""
+    st = _ACTIVE
+    if st is None:
+        return
+    if st.spec.lose_shard and not (st.spec.fail_once and st.shard_fired):
+        st.shard_fired = True
+        st.events.append(("lose_shard", n_shards))
+        raise ShardLostError(
+            f"injected shard loss (1 of {n_shards} shards unreachable)")
+
+
+def effective_budget(budget: int) -> int:
+    """Hook: clamp an engine's computed-row budget to the armed
+    ``force_budget`` (simulated surprise budget exhaustion)."""
+    st = _ACTIVE
+    if st is None or st.spec.force_budget is None:
+        return budget
+    st.events.append(("force_budget", st.spec.force_budget))
+    return min(budget, int(st.spec.force_budget))
+
+
+# ---------------------------------------------------------------------------
+# solve-round heartbeats (the Supervisor pattern at round granularity)
+# ---------------------------------------------------------------------------
+class RoundWatchdog:
+    """Single-worker heartbeat monitor for one solve, repurposing the
+    launcher-level :class:`~repro.runtime.fault_tolerance.Supervisor`:
+    the engine beats once per segment; :meth:`stalled` reports whether
+    the gap since the last beat exceeds ``timeout_s`` on the fault
+    clock (so injected stalls trip it deterministically)."""
+
+    def __init__(self, timeout_s: float):
+        from repro.runtime.fault_tolerance import (Supervisor,
+                                                   SupervisorConfig)
+        self.timeout_s = float(timeout_s)
+        self._sup = Supervisor(
+            1, SupervisorConfig(heartbeat_timeout_s=float(timeout_s)),
+            clock=clock)
+
+    def beat(self, n_rounds: int, dt_s: float = 0.0) -> None:
+        self._sup.heartbeat(0, int(n_rounds), float(dt_s))
+
+    def stalled(self) -> bool:
+        evicted = self._sup.check()
+        return bool(evicted) or not self._sup.workers[0].alive
+
+    @property
+    def events(self):
+        return self._sup.events
+
+
+# ---------------------------------------------------------------------------
+# CI seed plumbing
+# ---------------------------------------------------------------------------
+def fault_seeds(default=(0,)) -> tuple:
+    """Seeds the fault-injection tests sweep. ``REPRO_FAULTS`` (the CI
+    fault lane) widens the grid: unset/empty -> ``default``; ``"1"`` ->
+    a canned 4-seed grid; a comma list (``"3,7,11"``) -> those seeds."""
+    raw = os.environ.get("REPRO_FAULTS", "").strip()
+    if not raw:
+        return tuple(default)
+    if raw == "1":
+        return (0, 1, 2, 3)
+    return tuple(int(s) for s in raw.split(",") if s.strip())

@@ -47,6 +47,11 @@ class MedoidRequest:
     admitted_mode: str = ""             # "exact" | "anytime"
     step: int = -1                      # scheduling step that served it
     report: object = None               # SolveReport once served
+    retries: int = 0                    # failed attempts so far
+    quarantined: bool = False           # tombstoned after max_retries
+    error: str = ""                     # last failure (empty if none)
+    not_before_step: int = 0            # backoff: earliest eligible step
+    decisions: list = field(default_factory=list)   # isolation audit trail
 
 
 class MedoidServer:
@@ -63,16 +68,34 @@ class MedoidServer:
     One ``solve_many`` call serves the whole step, so same-shape
     requests share jitted programs regardless of admitted mode (budgets
     are traced, not compiled).
+
+    Fault isolation (DESIGN.md §13): a failing query inside a packed
+    step is bisected out — the step's ``solve_many`` call is split in
+    halves until the failure is pinned to a single request, which is
+    re-solved solo with ``on_error="degrade"``. A request that still
+    fails is requeued with exponential backoff (``backoff_base * 2**k``
+    steps) and quarantined after ``max_retries`` with a tombstone
+    report (``indices=[-1]``, ``ci=inf``, the error and every isolation
+    decision in ``extras``). Healthy requests in the same step are
+    never blocked and nothing is ever dropped. ``step_deadline_s``
+    bounds one step's wall clock: once blown, *remaining* bisection
+    work is deferred to the next step (the initial packed attempt
+    always runs, so a step always makes progress).
     """
 
     def __init__(self, budget: float = 50_000.0, anytime_floor: int = 32,
-                 max_batch: int = 4096, max_queries_per_program=None):
+                 max_batch: int = 4096, max_queries_per_program=None,
+                 max_retries: int = 2, backoff_base: int = 1,
+                 step_deadline_s: float | None = None):
         if budget <= 0:
             raise ValueError("MedoidServer: budget must be positive")
         self.budget = float(budget)
         self.anytime_floor = max(int(anytime_floor), 1)
         self.max_batch = int(max_batch)
         self.max_queries_per_program = max_queries_per_program
+        self.max_retries = max(int(max_retries), 0)
+        self.backoff_base = max(int(backoff_base), 1)
+        self.step_deadline_s = step_deadline_s
         self.queue: list[MedoidRequest] = []
         self.finished: list[MedoidRequest] = []
         self.steps: list[dict] = []
@@ -91,14 +114,28 @@ class MedoidServer:
 
     # ------------------------------------------------------------- step
     def step(self) -> list[MedoidRequest]:
-        """One scheduling step: admit, pack, solve, return the served
-        requests (FIFO order). Empty queue returns []."""
-        from repro.api import solve, solve_many
+        """One scheduling step: admit, pack, solve, return the requests
+        that got a report this step (FIFO order — served or
+        quarantined). Failing requests are isolated, retried with
+        backoff, and requeued; an empty/ineligible queue returns []."""
+        from repro.api import solve
+        from repro.runtime import faults
 
-        if not self.queue:
+        step_no = len(self.steps)
+        eligible = [r for r in self.queue if r.not_before_step <= step_no]
+        if not eligible:
+            if self.queue:
+                # advance the step clock so backoff holds expire even
+                # when a step finds nothing eligible
+                self.steps.append({"step": step_no, "n_requests": 0,
+                                   "idle": True})
             return []
-        batch = self.queue[:self.max_batch]
-        self.queue = self.queue[self.max_batch:]
+        held = [r for r in self.queue if r.not_before_step > step_no]
+        batch = eligible[:self.max_batch]
+        self.queue = sorted(eligible[self.max_batch:] + held,
+                            key=lambda r: r.uid)
+        deadline_ts = (faults.clock() + float(self.step_deadline_s)
+                       if self.step_deadline_s is not None else None)
 
         # pass 1 — FIFO exact admission against the global budget
         spent_est = 0.0
@@ -124,21 +161,69 @@ class MedoidServer:
             else req.query.with_(mode="anytime", budget=float(cap))
             for req in batch]
 
-        reports = solve_many(effective,
-                             max_queries_per_program=self.max_queries_per_program)
+        # pass 3 — solve with per-request isolation
+        outcomes = self._solve_isolated(effective, deadline_ts)
 
-        step_no = len(self.steps)
+        served: list[MedoidRequest] = []
+        requeue: list[MedoidRequest] = []
         spent = 0.0
-        for req, rep in zip(batch, reports):
-            req.report = rep
-            req.step = step_no
-            spent += rep.elements_computed
-        self.finished.extend(batch)
+        n_failed = n_quarantined = n_deferred = 0
+        for req, (kind, payload) in zip(batch, outcomes):
+            if kind == "ok":
+                rep = payload
+                if req.retries or req.decisions:
+                    rep.extras.setdefault("serve", {}).update(
+                        retries=req.retries,
+                        decisions=list(req.decisions))
+                req.report = rep
+                req.step = step_no
+                spent += rep.elements_computed
+                served.append(req)
+                self.finished.append(req)
+            elif kind == "deferred":
+                n_deferred += 1
+                req.decisions.append(
+                    f"step {step_no}: step deadline blown before this "
+                    "request's bisection half ran; deferred to next step")
+                req.not_before_step = step_no + 1
+                requeue.append(req)
+            else:                                   # kind == "err"
+                n_failed += 1
+                req.retries += 1
+                req.error = payload
+                req.decisions.append(
+                    f"step {step_no}: attempt {req.retries} failed: "
+                    f"{payload}")
+                if req.retries > self.max_retries:
+                    n_quarantined += 1
+                    req.quarantined = True
+                    req.decisions.append(
+                        f"step {step_no}: quarantined after "
+                        f"{req.retries} failed attempts "
+                        f"(max_retries={self.max_retries})")
+                    req.report = self._tombstone(req)
+                    req.step = step_no
+                    served.append(req)
+                    self.finished.append(req)
+                else:
+                    backoff = self.backoff_base * (2 ** (req.retries - 1))
+                    req.decisions.append(
+                        f"step {step_no}: requeued with backoff "
+                        f"{backoff} step(s)")
+                    req.not_before_step = step_no + backoff
+                    requeue.append(req)
+        if requeue:
+            self.queue = sorted(self.queue + requeue, key=lambda r: r.uid)
+
+        reports = [r.report for r in served]
         self.steps.append({
             "step": step_no,
             "n_requests": len(batch),
             "n_exact": len(batch) - len(overflow),
             "n_anytime": len(overflow),
+            "n_failed": n_failed,
+            "n_quarantined": n_quarantined,
+            "n_deferred": n_deferred,
             "anytime_cap": cap if overflow else 0,
             "estimated_elements": spent_est,
             "spent_elements": spent,
@@ -146,7 +231,82 @@ class MedoidServer:
                                for rep in reports
                                if "solve_many" in rep.plan.params}),
         })
-        return batch
+        return served
+
+    # ----------------------------------------------------- fault paths
+    def _solve_isolated(self, queries, deadline_ts):
+        """Run the step's queries through ``solve_many``, bisecting out
+        failures. Returns one ``(kind, payload)`` per query in order:
+        ``("ok", report)``, ``("err", message)``, or
+        ``("deferred", None)`` when the step deadline cut bisection
+        short."""
+        from repro.api import solve_many
+        from repro.runtime import faults
+
+        out: dict[int, tuple] = {}
+
+        def run(idx):
+            qs = [queries[i] for i in idx]
+            try:
+                reps = solve_many(
+                    qs,
+                    max_queries_per_program=self.max_queries_per_program)
+                for i, rep in zip(idx, reps):
+                    out[i] = ("ok", rep)
+            except Exception as err:
+                if len(idx) == 1:
+                    out[idx[0]] = self._solo(queries[idx[0]], err,
+                                             deadline_ts)
+                    return
+                mid = len(idx) // 2
+                for half in (idx[:mid], idx[mid:]):
+                    if (deadline_ts is not None
+                            and faults.clock() >= deadline_ts):
+                        for i in half:
+                            out[i] = ("deferred", None)
+                    else:
+                        run(half)
+
+        run(list(range(len(queries))))
+        return [out[i] for i in range(len(queries))]
+
+    def _solo(self, q, err, deadline_ts):
+        """Size-1 fallback for a bisected-out query: re-solve it alone
+        through the planner with the full downgrade ladder."""
+        from repro.api import solve
+        from repro.runtime import faults
+
+        changes = {"on_error": "degrade"}
+        if deadline_ts is not None and q.mode == "exact":
+            changes["deadline_s"] = max(deadline_ts - faults.clock(), 0.05)
+        try:
+            rep = solve(q.with_(**changes))
+            rep.extras.setdefault("serve", {})["isolated"] = (
+                f"packed batch failed ({type(err).__name__}: {err}); "
+                "re-solved solo with on_error='degrade'")
+            return ("ok", rep)
+        except Exception as e2:
+            return ("err", f"{type(e2).__name__}: {e2}")
+
+    def _tombstone(self, req):
+        """The quarantine report: a well-formed SolveReport that cannot
+        be mistaken for an answer (``indices=[-1]``, ``ci=inf``)."""
+        from repro.api.planner import Plan
+        from repro.api.query import SolveReport
+
+        return SolveReport(
+            indices=np.asarray([-1], np.int64),
+            energies=np.asarray([float("nan")], np.float64),
+            certified=False,
+            elements_computed=0.0,
+            n_distances=0,
+            n_rounds=0,
+            ci=float("inf"),
+            plan=Plan("quarantined", tuple(req.decisions)),
+            extras={"error": req.error, "retries": req.retries,
+                    "quarantined": True,
+                    "decisions": list(req.decisions)},
+        )
 
     def run(self, max_steps: int = 10_000) -> list[MedoidRequest]:
         """Drain the queue; returns all finished requests."""

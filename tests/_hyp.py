@@ -11,6 +11,28 @@ example-based tests in the same file keep collecting everywhere.
 """
 from __future__ import annotations
 
+import contextlib
+import signal
+
+
+@contextlib.contextmanager
+def watchdog(timeout_s: int = 300,
+             message: str = "test stalled under the watchdog"):
+    """SIGALRM watchdog: turn a livelock into a loud ``TimeoutError``
+    instead of a hung CI job. Main-thread only (SIGALRM semantics);
+    restores the previous handler and pending alarm on exit."""
+    def _stalled(signum, frame):
+        raise TimeoutError(message)
+
+    old = signal.signal(signal.SIGALRM, _stalled)
+    signal.alarm(int(timeout_s))
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
 try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
 

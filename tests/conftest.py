@@ -15,6 +15,17 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _release_compiled_programs():
+    """Drop jax's executable caches at module boundaries. The full
+    suite compiles hundreds of distinct programs; on the CPU backend
+    the accumulated JIT code eventually destabilises the process
+    (native segfaults late in the run). Clearing per module bounds
+    code memory by the largest module instead of the whole suite."""
+    yield
+    jax.clear_caches()
+
+
 def make_batch(cfg, key, batch=2, seq=64):
     """Family-appropriate random batch for smoke tests."""
     import jax.numpy as jnp

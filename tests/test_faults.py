@@ -1,0 +1,303 @@
+"""Fault injection: the harness itself, the solve policies it drives,
+and the server's per-request isolation (DESIGN.md §13).
+
+Everything here is deterministic: stalls advance a fault clock instead
+of sleeping, kills are raised at named segment rounds, poison inputs
+fire by object identity, and the CI fault lane widens the seed sweep
+via ``REPRO_FAULTS`` (:func:`repro.runtime.faults.fault_seeds`).
+
+The server invariants pinned at the bottom are the PR's acceptance
+story: a fault-injected ``MedoidServer.step`` never raises, never drops
+a request, and every quarantine/degrade decision is visible in the
+request's report.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hyp import watchdog
+
+from repro.api import MedoidQuery, solve, solve_many
+from repro.runtime import faults
+from repro.serve.engine import MedoidServer
+
+
+def _X(n, d=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, d)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# the harness itself
+# ---------------------------------------------------------------------------
+def test_inject_does_not_nest():
+    with faults.inject(faults.FaultSpec()):
+        with pytest.raises(RuntimeError, match="nest"):
+            with faults.inject(faults.FaultSpec()):
+                pass
+
+
+def test_clock_stall_is_simulated():
+    t0 = faults.clock()
+    with faults.inject(faults.FaultSpec(stall_round=0, stall_s=1e6)) as st:
+        faults.on_segment(0)
+        assert faults.clock() >= t0 + 1e6
+        assert ("stall", 0) in st.events
+    # disarmed: back to the real monotonic clock
+    assert faults.clock() < t0 + 1e5
+
+
+@pytest.mark.parametrize("seed", faults.fault_seeds())
+def test_corrupt_plants_seeded_rows(seed):
+    X = _X(64, seed=1)
+    spec = faults.FaultSpec(seed=seed, nan_rows=3, inf_rows=2)
+    Xc = faults.corrupt(X, spec)
+    bad = ~np.isfinite(Xc).all(axis=1)
+    assert bad.sum() == 5
+    assert np.isnan(Xc[bad]).any() and np.isinf(Xc[bad]).any()
+    # deterministic: same spec, same rows
+    np.testing.assert_array_equal(bad, ~np.isfinite(
+        faults.corrupt(X, spec)).all(axis=1))
+    # original untouched
+    assert np.isfinite(X).all()
+
+
+def test_poison_requires_arming_and_clears_on_exit():
+    X = _X(32)
+    with pytest.raises(RuntimeError, match="inject"):
+        faults.mark_poison(X)
+    with faults.inject(faults.FaultSpec()):
+        faults.mark_poison(X)
+        with pytest.raises(faults.FaultError, match="poison"):
+            faults.check_poison(X, "test site")
+    faults.check_poison(X, "test site")       # disarmed: no-op
+
+
+def test_fault_seeds_env(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)
+    assert faults.fault_seeds() == (0,)
+    monkeypatch.setenv("REPRO_FAULTS", "1")
+    assert faults.fault_seeds() == (0, 1, 2, 3)
+    monkeypatch.setenv("REPRO_FAULTS", "3, 7,11")
+    assert faults.fault_seeds() == (3, 7, 11)
+
+
+# ---------------------------------------------------------------------------
+# solve-level policies driven by injected faults
+# ---------------------------------------------------------------------------
+def test_nonfinite_raise_names_rows():
+    X = faults.corrupt(_X(600, seed=2),
+                       faults.FaultSpec(nan_rows=1, inf_rows=1))
+    with pytest.raises(ValueError, match="2 of 600"):
+        solve(MedoidQuery(X))
+    with pytest.raises(ValueError, match="nonfinite"):
+        solve(MedoidQuery(X))
+    # allow: the check is skipped and an engine runs
+    rep = solve(MedoidQuery(X, nonfinite="allow"), plan="scan")
+    assert rep.indices.shape == (1,)
+
+
+def test_nonfinite_checked_in_solve_many():
+    good = MedoidQuery(_X(257, seed=1))
+    bad = MedoidQuery(faults.corrupt(
+        _X(257, seed=2), faults.FaultSpec(nan_rows=2)))
+    with pytest.raises(ValueError, match=r"queries\[1\]"):
+        solve_many([good, bad])
+    reps = solve_many([good, bad.with_(nonfinite="allow")])
+    assert len(reps) == 2
+
+
+def test_fault_error_propagates_by_default():
+    X = _X(300, seed=3)
+    with faults.inject(faults.FaultSpec(fail_round=1)):
+        with pytest.raises(faults.FaultError, match="fail_round"):
+            solve(MedoidQuery(X), plan="pipelined")
+
+
+def test_degrade_ladder_rescues_engine_fault():
+    """A pipelined kill with on_error='degrade' lands on the scan rung;
+    every hop is in plan.reasons and the answer is still exact."""
+    X = _X(300, seed=3)
+    ref = solve(MedoidQuery(X), plan="scan")
+    with faults.inject(faults.FaultSpec(fail_round=1, fail_once=False)):
+        rep = solve(MedoidQuery(X, on_error="degrade"), plan="pipelined")
+    assert rep.plan.engine == "scan"
+    assert rep.index == ref.index and rep.energy == ref.energy
+    hops = [r for r in rep.plan.reasons if "on_error=degrade" in r]
+    assert any("pipelined raised FaultError" in r for r in hops)
+    assert any("downgrading to 'scan'" in r for r in hops)
+
+
+def test_degrade_ladder_rescues_oracle_fault():
+    """The k-th oracle call dies mid-sequential-solve; the ladder falls
+    back to the scan sweep, which completes."""
+    from repro.core.distances import VectorOracle
+    X = _X(200, seed=4)
+    ref = solve(MedoidQuery(X), plan="scan")
+    with faults.inject(faults.FaultSpec(fail_call=50)):
+        rep = solve(MedoidQuery(VectorOracle(X), on_error="degrade"),
+                    plan="sequential")
+    assert rep.plan.engine == "scan"
+    assert rep.index == ref.index
+
+
+def test_degrade_reraises_when_every_rung_fails():
+    X = _X(300, seed=5)
+    with faults.inject(faults.FaultSpec()):
+        faults.mark_poison(X)          # poison fires on *every* engine
+        with pytest.raises(faults.FaultError, match="poison"):
+            solve(MedoidQuery(X, on_error="degrade"), plan="pipelined")
+
+
+def test_forced_budget_exhaustion_returns_anytime():
+    X = _X(1025, seed=6)
+    with faults.inject(faults.FaultSpec(force_budget=64)):
+        rep = solve(MedoidQuery(X), plan="pipelined")
+    assert not rep.certified
+    assert rep.extras["halt_reason"] == "budget"
+    assert np.isfinite(rep.ci) and rep.ci > 0.0
+    assert np.isfinite(rep.extras["lower_bound"])
+
+
+def test_round_watchdog_flags_stall():
+    """An injected stall longer than the heartbeat timeout marks the
+    solve stalled: anytime result, halt_reason='stalled'."""
+    from repro.core.pipelined import _trimed_pipelined
+    X = _X(1025, seed=7)
+    with faults.inject(faults.FaultSpec(stall_round=1, stall_s=500.0)):
+        r = _trimed_pipelined(X, heartbeat_timeout_s=100.0)
+    assert not r.certified
+    assert r.halt_reason == "stalled"
+    assert 0 <= r.index < 1025
+
+
+def test_shard_loss_degrades_to_single_device():
+    from repro.compat import make_1d_mesh
+    X = _X(1025, seed=8)
+    ref = solve(MedoidQuery(X), plan="pipelined")
+    q = MedoidQuery(X, device_policy="sharded", mesh=make_1d_mesh(1),
+                    on_error="degrade")
+    with faults.inject(faults.FaultSpec(lose_shard=True)):
+        rep = solve(q)
+    assert rep.plan.engine in ("pipelined", "scan")
+    assert rep.index == ref.index and rep.energy == ref.energy
+    assert any("ShardLostError" in r for r in rep.plan.reasons)
+
+
+# ---------------------------------------------------------------------------
+# MedoidServer isolation: bisect, retry, quarantine — never raise,
+# never drop, every decision on record
+# ---------------------------------------------------------------------------
+def _submit_all(srv, Xs):
+    return [srv.submit(MedoidQuery(X)) for X in Xs]
+
+
+def test_server_bisects_and_quarantines_poison():
+    Xs = [_X(257, seed=s) for s in range(6)]
+    srv = MedoidServer(budget=1e9, max_retries=1, backoff_base=1)
+    _submit_all(srv, Xs)
+    with watchdog(300, "server stalled isolating a poison request"):
+        with faults.inject(faults.FaultSpec()):
+            faults.mark_poison(Xs[2])
+            done = srv.run(max_steps=20)
+    # never dropped: every uid accounted for
+    assert sorted(r.uid for r in done) == list(range(6))
+    bad = [r for r in done if r.quarantined]
+    good = [r for r in done if not r.quarantined]
+    assert [r.uid for r in bad] == [2]
+    # healthy requests unaffected, exact, served in step 0
+    assert all(r.report.certified for r in good)
+    assert all(r.step == 0 for r in good)
+    # tombstone: unmistakably not an answer
+    tomb = bad[0].report
+    assert tomb.index == -1
+    assert np.isnan(tomb.energy)
+    assert tomb.ci == float("inf")
+    assert not tomb.certified
+    assert tomb.plan.engine == "quarantined"
+    assert tomb.extras["quarantined"]
+    assert "poison" in tomb.extras["error"]
+    # the audit trail: attempts, backoff, quarantine all on record
+    decisions = tomb.extras["decisions"]
+    assert any("attempt 1 failed" in d for d in decisions)
+    assert any("backoff" in d for d in decisions)
+    assert any("quarantined after 2 failed attempts" in d
+               for d in decisions)
+    # step ledger saw the failure and the quarantine
+    assert srv.steps[0]["n_failed"] == 1
+    assert any(s.get("n_quarantined") == 1 for s in srv.steps)
+
+
+def test_server_retry_recovers_after_transient_fault():
+    """A fault cleared between steps: the request is retried with
+    backoff and served; the report records the retry."""
+    Xs = [_X(257, seed=s) for s in range(3)]
+    srv = MedoidServer(budget=1e9, max_retries=2)
+    _submit_all(srv, Xs)
+    with faults.inject(faults.FaultSpec()):
+        faults.mark_poison(Xs[1])
+        served = srv.step()
+    assert sorted(r.uid for r in served) == [0, 2]      # FIFO not blocked
+    srv.run(max_steps=10)
+    rec = [r for r in srv.finished if r.uid == 1][0]
+    assert not rec.quarantined
+    assert rec.report.certified
+    assert rec.report.extras["serve"]["retries"] == 1
+    assert any("requeued with backoff" in d
+               for d in rec.report.extras["serve"]["decisions"])
+
+
+def test_server_step_deadline_defers_bisection():
+    """With the step deadline already blown, the initial packed attempt
+    still runs (a step always makes progress); once it fails, the
+    remaining bisection halves are deferred to the next step — not
+    retried, not dropped."""
+    Xs = [_X(257, seed=s) for s in range(4)]
+    srv = MedoidServer(budget=1e9, max_retries=2, step_deadline_s=1e-9)
+    _submit_all(srv, Xs)
+    with faults.inject(faults.FaultSpec()):
+        faults.mark_poison(Xs[3])
+        served = srv.step()
+    assert served == []                     # everything deferred
+    assert srv.steps[0]["n_deferred"] == 4
+    assert len(srv.queue) == 4
+    assert all(r.retries == 0 for r in srv.queue)       # deferral != failure
+    assert all(any("deferred" in d for d in r.decisions)
+               for r in srv.queue)
+    # fault cleared: the deferred batch drains normally
+    done = srv.run(max_steps=10)
+    assert sorted(r.uid for r in done) == [0, 1, 2, 3]
+    assert all(r.report.certified for r in done)
+
+
+def test_server_submit_rejects_corrupt_input():
+    srv = MedoidServer()
+    X = faults.corrupt(_X(257), faults.FaultSpec(nan_rows=1))
+    with pytest.raises(ValueError, match="non-finite"):
+        srv.submit(MedoidQuery(X))
+    assert not srv.queue
+
+
+@pytest.mark.parametrize("seed", faults.fault_seeds())
+def test_server_never_raises_never_drops(seed):
+    """The acceptance sweep: random poison subset, random retry limit —
+    the server always drains, every request gets a report, healthy
+    answers stay exact."""
+    rng = np.random.default_rng(seed)
+    Xs = [_X(257, seed=100 + seed * 10 + i) for i in range(5)]
+    poison = set(rng.choice(5, size=2, replace=False).tolist())
+    srv = MedoidServer(budget=1e9, max_retries=int(rng.integers(0, 3)))
+    _submit_all(srv, Xs)
+    with watchdog(300, "server stalled draining the fault sweep"):
+        with faults.inject(faults.FaultSpec(seed=seed)):
+            for i in poison:
+                faults.mark_poison(Xs[i])
+            done = srv.run(max_steps=50)
+    assert sorted(r.uid for r in done) == list(range(5))
+    for r in done:
+        assert r.report is not None
+        if r.uid in poison:
+            assert r.quarantined and r.report.extras["decisions"]
+        else:
+            assert r.report.certified

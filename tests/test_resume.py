@@ -1,0 +1,247 @@
+"""Resumable solves and deadlines (DESIGN.md §13).
+
+The contract under test: a pipelined solve that is killed at *any*
+segment boundary and resumed from its checkpoint must be **bit
+identical** — medoid index, energy, computed-element count, round
+count, certificate — to the same solve run uninterrupted. That holds
+because segmentation only splits the host loop around the same jitted
+round program (``seg_cap`` is traced, so segmented and straight-through
+runs share one compiled program), sums ride the fixed
+``chunked_rowsum`` reduction grid, and resume never re-runs compaction
+(re-compacting would re-order the pivot sequence).
+
+Deadlines are the other half: a blown ``deadline_s`` returns the
+incumbent as an anytime result — ``certified=False`` with a
+deterministic bound-gap CI — never an exception. Kills are injected
+with :mod:`repro.runtime.faults` (``fail_round``), the clock is blown
+with injected stalls, so everything here is deterministic.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st, watchdog
+
+from repro.api import MedoidQuery, plan_query, solve
+from repro.core.pipelined import _trimed_pipelined
+from repro.runtime import faults
+
+METRICS = ("l2", "l1")
+
+
+def _X(n, d=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, d)).astype(np.float32)
+
+
+def _sig(r):
+    """The bit-identity signature of a MedoidResult."""
+    return (r.index, r.energy, r.n_computed, r.n_rounds, r.certified)
+
+
+def _ref(X, metric, **kw):
+    return _trimed_pipelined(X, metric=metric, **kw)
+
+
+# ---------------------------------------------------------------------------
+# segmentation alone must not change anything
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("n", [257, 4097])
+def test_segmented_matches_straight_through(tmp_path, metric, n):
+    X = _X(n, seed=1)
+    ref = _ref(X, metric)
+    seg = _trimed_pipelined(X, metric=metric, checkpoint=tmp_path,
+                            checkpoint_every=1)
+    assert _sig(seg) == _sig(ref)
+
+
+# ---------------------------------------------------------------------------
+# kill at any round, resume, bit-identical
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(n=st.sampled_from([257, 513, 4097]),
+       metric=st.sampled_from(METRICS),
+       kill=st.integers(min_value=1, max_value=10),
+       every=st.sampled_from([1, 2, 3]),
+       seed=st.integers(min_value=0, max_value=3))
+def test_kill_and_resume_bit_identical(n, metric, kill, every, seed):
+    import tempfile
+    X = _X(n, seed=seed)
+    ref = _ref(X, metric)
+    with tempfile.TemporaryDirectory() as td, watchdog(
+            300, "kill/resume parity run stalled"):
+        try:
+            with faults.inject(faults.FaultSpec(fail_round=kill)):
+                _trimed_pipelined(X, metric=metric, checkpoint=td,
+                                  checkpoint_every=every)
+            killed = False          # solve finished before round `kill`
+        except faults.FaultError:
+            killed = True
+        res = _trimed_pipelined(X, metric=metric, checkpoint=td,
+                                checkpoint_every=every, resume="require")
+        assert _sig(res) == _sig(ref), (
+            f"resume after kill@{kill} (killed={killed}) diverged")
+
+
+def test_kill_deep_in_ladder_resumes(tmp_path):
+    """A kill well past the first compaction resumes mid-rung: the
+    restored state re-enters `_stage_loop` without re-compacting."""
+    X = _X(4097, seed=7)
+    ref = _ref(X, "l2")
+    assert ref.n_rounds > 6          # the grid actually reaches a ladder
+    kill = int(ref.n_rounds) - 1
+    with pytest.raises(faults.FaultError):
+        with faults.inject(faults.FaultSpec(fail_round=kill)):
+            _trimed_pipelined(X, checkpoint=tmp_path, checkpoint_every=1)
+    res = _trimed_pipelined(X, checkpoint=tmp_path, checkpoint_every=1,
+                            resume="require")
+    assert _sig(res) == _sig(ref)
+
+
+def test_double_kill_then_resume(tmp_path):
+    """Two successive kills (crash during the resumed run) still land
+    on the bit-identical answer."""
+    X = _X(513, seed=3)
+    ref = _ref(X, "l2")
+    assert ref.n_rounds >= 3             # both kills actually land
+    for kill in (1, 2):
+        with pytest.raises(faults.FaultError):
+            with faults.inject(faults.FaultSpec(fail_round=kill)):
+                _trimed_pipelined(X, checkpoint=tmp_path,
+                                  checkpoint_every=1, resume="auto")
+    res = _trimed_pipelined(X, checkpoint=tmp_path, checkpoint_every=1,
+                            resume="require")
+    assert _sig(res) == _sig(ref)
+
+
+def test_resume_idempotent_after_success(tmp_path):
+    """Resuming from the checkpoint of a *finished* solve returns the
+    same answer again (the restored state has no live candidates)."""
+    X = _X(257, seed=2)
+    a = _trimed_pipelined(X, checkpoint=tmp_path, checkpoint_every=1)
+    b = _trimed_pipelined(X, checkpoint=tmp_path, checkpoint_every=1,
+                          resume="require")
+    assert _sig(a) == _sig(b)
+
+
+# ---------------------------------------------------------------------------
+# resume guards
+# ---------------------------------------------------------------------------
+def test_resume_refuses_mismatched_config(tmp_path):
+    from repro.core.solve_state import SolveStateMismatch
+    X = _X(257)
+    with pytest.raises(faults.FaultError):
+        with faults.inject(faults.FaultSpec(fail_round=1)):
+            _trimed_pipelined(X, checkpoint=tmp_path, checkpoint_every=1)
+    with pytest.raises(SolveStateMismatch):
+        _trimed_pipelined(X, block=64, checkpoint=tmp_path,
+                          resume="require")
+
+
+def test_resume_require_without_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        _trimed_pipelined(_X(257), checkpoint=tmp_path / "empty",
+                          resume="require")
+
+
+def test_resume_never_ignores_checkpoint(tmp_path):
+    X = _X(257, seed=5)
+    ref = _ref(X, "l2")
+    with pytest.raises(faults.FaultError):
+        with faults.inject(faults.FaultSpec(fail_round=1)):
+            _trimed_pipelined(X, checkpoint=tmp_path, checkpoint_every=1)
+    res = _trimed_pipelined(X, checkpoint=tmp_path, checkpoint_every=1,
+                            resume="never")
+    assert _sig(res) == _sig(ref)        # fresh run, same answer
+
+
+# ---------------------------------------------------------------------------
+# checkpointing through the public API
+# ---------------------------------------------------------------------------
+def test_api_checkpoint_engine_opts(tmp_path):
+    X = _X(300, seed=4)
+    ref = solve(MedoidQuery(X), plan="pipelined")
+    with pytest.raises(faults.FaultError):
+        with faults.inject(faults.FaultSpec(fail_round=1)):
+            solve(MedoidQuery(X, engine_opts={
+                "checkpoint": str(tmp_path), "checkpoint_every": 1}),
+                plan="pipelined")
+    rep = solve(MedoidQuery(X, engine_opts={
+        "checkpoint": str(tmp_path), "checkpoint_every": 1,
+        "resume": "require"}), plan="pipelined")
+    assert rep.index == ref.index
+    assert rep.energy == ref.energy
+    assert rep.elements_computed == ref.elements_computed
+    assert rep.certified
+
+
+# ---------------------------------------------------------------------------
+# deadlines: anytime incumbent, never an exception
+# ---------------------------------------------------------------------------
+def test_generous_deadline_still_certifies():
+    X = _X(257, seed=6)
+    rep = solve(MedoidQuery(X, deadline_s=600.0))
+    assert rep.certified
+    # the planner routed to a deadline-capable engine; the answer is
+    # bit-identical to the same engine run without a deadline (the
+    # deadline machinery must not perturb the arithmetic)
+    ref = solve(MedoidQuery(X), plan=rep.plan.engine)
+    assert rep.index == ref.index and rep.energy == ref.energy
+
+
+@pytest.mark.parametrize("n", [257, 4097])
+def test_blown_deadline_returns_incumbent(n):
+    """An injected stall blows the deadline: the solve returns the
+    incumbent with ``certified=False``, a finite positive CI derived
+    from the surviving lower bound, and the halt reason on record."""
+    X = _X(n, seed=8)
+    with faults.inject(faults.FaultSpec(stall_round=1, stall_s=1e6)):
+        rep = solve(MedoidQuery(X, deadline_s=100.0), plan="pipelined")
+    assert not rep.certified
+    assert rep.extras["halt_reason"] == "deadline"
+    assert np.isfinite(rep.ci) and rep.ci >= 0.0
+    assert np.isfinite(rep.extras["lower_bound"])
+    assert rep.extras["lower_bound"] <= rep.energy
+    assert 0 <= rep.index < n
+    # the incumbent is a real element energy, not garbage
+    d = np.linalg.norm(X - X[rep.index], axis=1)
+    assert rep.energy == pytest.approx(d.sum() / (n - 1), rel=1e-5)
+
+
+def test_blown_deadline_sequential_oracle():
+    """The host sequential engine checks the deadline between elements:
+    a deadline shorter than one element's work returns the incumbent
+    found so far (at least one element always completes)."""
+    from repro.core.distances import VectorOracle
+    X = _X(300, seed=9)
+    rep = solve(MedoidQuery(VectorOracle(X), deadline_s=1e-6),
+                plan="sequential")
+    assert not rep.certified
+    assert rep.extras["halt_reason"] == "deadline"
+    assert np.isfinite(rep.energies[0])
+    assert 0 <= rep.index < 300
+
+
+def test_deadline_reroutes_unsupported_engines():
+    """The planner reroutes block/sharded overrides to the
+    deadline-capable pipelined engine and says so in the reasons; a
+    planner-chosen engine is always deadline-capable."""
+    X = _X(300, seed=1)
+    p = plan_query(MedoidQuery(X, deadline_s=5.0))
+    assert p.engine in ("sequential", "pipelined")
+    p2 = solve(MedoidQuery(X, deadline_s=5.0), plan="block", explain=True)
+    assert p2.engine == "pipelined"
+    assert any("deadline" in r for r in p2.reasons)
+
+
+def test_deadline_rejected_for_kmedoids():
+    X = _X(120, seed=2)
+    with pytest.raises(ValueError, match="deadline"):
+        solve(MedoidQuery(X, k=3, deadline_s=5.0))
+
+
+def test_deadline_validation():
+    with pytest.raises(ValueError, match="deadline_s"):
+        MedoidQuery(_X(64), deadline_s=-1.0)
+    with pytest.raises(ValueError, match="deadline_s"):
+        MedoidQuery(_X(64), deadline_s=0)

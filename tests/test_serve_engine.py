@@ -7,14 +7,14 @@ whose cumulative ``plan.cost_estimate`` fits — later requests never
 leapfrog an earlier overflow, even when they would fit), and over-budget
 traffic is *degraded, never dropped*: every request comes back with a
 report, the over-budget ones as ``mode="anytime"`` with
-``certified=False`` and a recorded deterministic CI. A SIGALRM watchdog
-(same pattern as ``test_sharded.py``) turns a scheduler stall into a
-test failure instead of a hung CI job.
+``certified=False`` and a recorded deterministic CI. The shared
+``watchdog`` (``tests/_hyp.py``, same pattern as ``test_sharded.py``)
+turns a scheduler stall into a test failure instead of a hung CI job.
 """
-import signal
-
 import numpy as np
 import pytest
+
+from _hyp import watchdog
 
 from repro import MedoidQuery
 from repro.serve.engine import MedoidServer
@@ -141,18 +141,10 @@ def test_server_under_watchdog():
     """A full submit/step/drain cycle with mixed shapes and a tight
     budget completes well under the alarm — a scheduler livelock (e.g.
     an admission loop that re-queues overflow forever) fails loudly."""
-    def _stalled(signum, frame):
-        raise TimeoutError("MedoidServer stalled draining its queue")
-
-    old = signal.signal(signal.SIGALRM, _stalled)
-    signal.alarm(300)
-    try:
+    with watchdog(300, "MedoidServer stalled draining its queue"):
         srv = MedoidServer(budget=300.0, anytime_floor=8, max_batch=4)
         for q in _mixed_queries():
             srv.submit(q)
         finished = srv.run()
-    finally:
-        signal.alarm(0)
-        signal.signal(signal.SIGALRM, old)
     assert len(finished) == len(_mixed_queries())
     assert all(r.report is not None for r in finished)

@@ -15,7 +15,7 @@ import pytest
 
 import jax
 
-from _hyp import given, settings, st
+from _hyp import given, settings, st, watchdog
 
 from repro.api import MedoidQuery, plan_query, solve
 from repro.compat import make_1d_mesh
@@ -160,7 +160,6 @@ def test_sharded_skewed_survivors_terminate_and_match(kind):
     host rebuilds a zero-round stage forever. The watchdog turns a
     regression into a failure instead of a hung CI job; parity with the
     single-device engine must still be bit-exact."""
-    import signal
     rng = np.random.default_rng(7)
     if kind == "sorted":
         X = rng.standard_normal((4097, 3)).astype(np.float32)
@@ -168,18 +167,10 @@ def test_sharded_skewed_survivors_terminate_and_match(kind):
     else:
         X = _blob_X()
 
-    def _stalled(signum, frame):
-        raise TimeoutError(
-            "sharded compaction ladder stalled (zero-round stage)")
-
-    old = signal.signal(signal.SIGALRM, _stalled)
-    signal.alarm(300)
-    try:
+    with watchdog(
+            300, "sharded compaction ladder stalled (zero-round stage)"):
         rep = solve(MedoidQuery(X, device_policy="sharded",
                                 mesh=make_1d_mesh(max(SHARD_COUNTS))))
-    finally:
-        signal.alarm(0)
-        signal.signal(signal.SIGALRM, old)
     ref = _single_device_report(X, "l2")
     assert rep.index == ref.index
     assert rep.energy == ref.energy

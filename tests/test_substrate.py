@@ -146,6 +146,48 @@ def test_checkpoint_atomic_no_partial(tmp_path):
     assert 9 not in ck.all_steps()
 
 
+def test_checkpoint_background_write_failure_surfaces(tmp_path):
+    """A failed async write must surface on the *next* interaction with
+    the checkpointer — ``save``, ``wait`` or ``latest_step`` — never be
+    swallowed: a fire-and-forget caller has to learn its checkpoints
+    are being lost. The pending error is consumed once raised, so the
+    checkpointer stays usable afterwards."""
+    tree = {"a": jnp.zeros(2)}
+
+    def _boom(step, host_tree, extra_meta=None):
+        raise OSError("injected: disk gone")
+
+    ck = Checkpointer(tmp_path / "a")
+    ck._write = _boom
+    ck.save(1, tree, blocking=False)
+    ck._q.join()
+    with pytest.raises(OSError, match="disk gone"):
+        ck.save(2, tree)                    # surfaces on the next save
+    del ck.__dict__["_write"]               # error consumed; disk "back"
+    ck.save(3, tree)
+    assert ck.latest_step() == 3
+
+    ck2 = Checkpointer(tmp_path / "b")
+    ck2._write = _boom
+    ck2.save(1, tree, blocking=False)
+    ck2._q.join()
+    with pytest.raises(OSError, match="disk gone"):
+        ck2.latest_step()                   # ...or on the next read
+    del ck2.__dict__["_write"]
+    assert ck2.latest_step() is None
+
+
+def test_checkpoint_load_with_extra_meta(tmp_path):
+    """``load`` returns the flat leaves and the stored ``extra_meta`` —
+    the treeless path SolveState resume uses."""
+    ck = Checkpointer(tmp_path)
+    ck.save(4, {"a": jnp.arange(3.0)}, extra_meta={"fingerprint": "xyz"})
+    step, leaves, meta = ck.load()
+    assert step == 4
+    np.testing.assert_array_equal(leaves[0], np.arange(3.0))
+    assert meta["extra"] == {"fingerprint": "xyz"}
+
+
 # ------------------------------------------------------------------ runtime
 def test_supervisor_detects_dead_worker():
     clock = [0.0]
