@@ -22,7 +22,13 @@ deterministic work counters the engines are built around:
   that fails when it *drops* more than ``TOLERANCE`` below the
   committed baseline; wall-clock ratios wash out machine speed, and the
   committed baseline is deliberately conservative to keep the gate
-  deflaked).
+  deflaked);
+* ``bench_obs``: ``elements`` (the traced solve must do identical
+  work) and the **absolute** ceiling ``trace_overhead_ratio <=
+  OBS_OVERHEAD_MAX`` — tracing on may cost at most 5% of solve
+  wall-clock over tracing off. This one is a ratio of two walls on the
+  *same* machine in the *same* process, so it is gated absolutely, not
+  against a committed baseline.
 
 Records are matched by their identity fields; a record present in the
 baseline but missing from the current run also fails (an engine cell
@@ -31,7 +37,9 @@ win). Regenerate the baselines deliberately with::
 
     PYTHONPATH=src python -m benchmarks.run --smoke
     cp results/BENCH_trimed_smoke.json results/BENCH_bandit_smoke.json \\
-        results/BENCH_serve_smoke.json benchmarks/baselines/
+        results/BENCH_serve_smoke.json results/BENCH_obs_smoke.json \\
+        benchmarks/baselines/
+    cp results/TRACE_smoke.jsonl benchmarks/baselines/TRACE_golden.jsonl
 
 (then halve the serve baseline's speedup field by hand if the run was on
 an unusually fast machine — see ``serve_smoke.json`` provenance note).
@@ -47,6 +55,7 @@ BASELINE_DIR = Path(__file__).resolve().parent / "baselines"
 RESULTS_DIR = ROOT / "results"
 
 TOLERANCE = 0.10          # >10% growth of a cost counter fails the gate
+OBS_OVERHEAD_MAX = 1.05   # tracing on must stay within 5% of tracing off
 
 # file -> (identity fields, lower-is-better cost fields,
 #          higher-is-better throughput fields)
@@ -60,7 +69,31 @@ GATES = {
     "BENCH_serve_smoke.json": (("config", "batch", "d"),
                                ("elements_total",),
                                ("speedup_vs_sequential",)),
+    "BENCH_obs_smoke.json": (("config", "n", "d"),
+                             ("elements",),
+                             ()),
 }
+
+
+def check_obs_overhead() -> list[str]:
+    """Absolute gate: smoke ``trace_overhead_ratio <= OBS_OVERHEAD_MAX``
+    for every record (no baseline involved — same-machine ratio)."""
+    cur_path = RESULTS_DIR / "BENCH_obs_smoke.json"
+    if not cur_path.exists():
+        return [f"BENCH_obs_smoke.json: missing {cur_path} "
+                "(run `python -m benchmarks.run --smoke` first)"]
+    failures = []
+    for r in json.loads(cur_path.read_text()).get("records", []):
+        ratio = r.get("trace_overhead_ratio")
+        if ratio is None:
+            failures.append(f"BENCH_obs_smoke.json: {r.get('config')} "
+                            "missing trace_overhead_ratio")
+        elif float(ratio) > OBS_OVERHEAD_MAX:
+            failures.append(
+                f"BENCH_obs_smoke.json: {r.get('config')} tracing "
+                f"overhead {ratio}x exceeds the {OBS_OVERHEAD_MAX}x "
+                "ceiling (tracing must stay <=5% of solve wall-clock)")
+    return failures
 
 
 def _index(records, id_fields):
@@ -113,6 +146,7 @@ def main(argv=None) -> int:
     failures: list[str] = []
     for name, (id_fields, cost_fields, tp_fields) in GATES.items():
         failures.extend(check_file(name, id_fields, cost_fields, tp_fields))
+    failures.extend(check_obs_overhead())
     if failures:
         print("PERF REGRESSION GATE: FAIL")
         for f in failures:

@@ -18,17 +18,18 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke: tiny trimed + bandit + serve sweeps "
-                         "(interpret path), validates the BENCH_trimed, "
-                         "BENCH_bandit and BENCH_serve JSON schemas + "
-                         "imports; the smoke JSONs land in results/ and "
-                         "feed the benchmarks.check_regression CI gate")
+                    help="CI smoke: tiny trimed + bandit + serve + obs "
+                         "sweeps (interpret path), validates the BENCH_* "
+                         "JSON schemas + imports and the JSONL solve "
+                         "trace against the committed golden trace; the "
+                         "smoke JSONs land in results/ and feed the "
+                         "benchmarks.check_regression CI gate")
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
     quick = not args.full
 
     from . import (bench_bandit, bench_batched, bench_faults, bench_fig3,
-                   bench_kernels, bench_serve, bench_sme_init,
+                   bench_kernels, bench_obs, bench_serve, bench_sme_init,
                    bench_table1, bench_table2, bench_trimed,
                    roofline_report)
 
@@ -48,7 +49,8 @@ def main(argv=None):
 
         checks = [(bench_trimed, "bench_trimed/v1"),
                   (bench_bandit, "bench_bandit/v1"),
-                  (bench_serve, "bench_serve/v1")]
+                  (bench_serve, "bench_serve/v1"),
+                  (bench_obs, "bench_obs/v1")]
         for bench, schema in checks:
             rows, path = bench.run(quick=True, mode="smoke")
             json_path = bench.json_path_for("smoke")
@@ -59,6 +61,24 @@ def main(argv=None):
             assert not missing, f"schema drift: missing {missing}"
             print(f"smoke OK [{schema}]: {len(rows)} rows; "
                   f"json={json_path}; csv={path}")
+
+        # golden-trace schema validation: the smoke trace must validate
+        # against the tracer's own invariants AND match the committed
+        # golden trace structurally (per-kind key sets, bracketing)
+        from pathlib import Path
+
+        from repro.obs.trace import (compare_structure, load_jsonl,
+                                     validate_events)
+
+        golden_path = (Path(__file__).resolve().parent / "baselines"
+                       / "TRACE_golden.jsonl")
+        trace = load_jsonl(bench_obs.trace_path_for("smoke"))
+        errs = validate_events(trace)
+        assert not errs, f"smoke trace invalid: {errs}"
+        errs = compare_structure(trace, load_jsonl(golden_path))
+        assert not errs, f"smoke trace drifted from golden: {errs}"
+        print(f"smoke OK [{trace[0]['schema']}]: {len(trace)} events "
+              f"validate against {golden_path.name}")
         return 0
 
     benches = {
@@ -70,6 +90,7 @@ def main(argv=None):
         "batched_kmedoids": bench_batched.run,
         "serve_throughput": bench_serve.run,
         "fault_overhead": bench_faults.run,
+        "obs_overhead": bench_obs.run,
         "sme_init": bench_sme_init.run,
         "kernels": bench_kernels.run,
         "roofline": roofline_report.run,

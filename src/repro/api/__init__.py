@@ -18,8 +18,6 @@ that owns metric capabilities for every engine. The legacy entrypoints
 """
 from __future__ import annotations
 
-import warnings
-
 from .metrics import (Metric, available_metrics, get_metric,
                       register_metric, require_metric, unregister_metric)
 from .query import MedoidQuery, SolveReport
@@ -49,7 +47,8 @@ def _warn_legacy(name: str, hint: str = "") -> None:
     message prefix is pinned: the tier-1 suite escalates it to an error
     when raised from ``repro.*`` internals (pytest.ini), guaranteeing no
     in-repo code still calls the shims."""
-    warnings.warn(
+    from repro.obs.logs import repro_warn
+    repro_warn(
         f"repro legacy entrypoint {name}() is deprecated; build a "
         f"repro.api.MedoidQuery and call repro.api.solve{hint}",
-        DeprecationWarning, stacklevel=3)
+        DeprecationWarning, logger="repro.api", stacklevel=3)

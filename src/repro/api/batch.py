@@ -276,3 +276,27 @@ def _run_chunk(chunk, n, block, metric, use_kernels, interpret, has_warm,
             extras={"batch": dict(batch_info),
                     "lower_bound": float(lo_b[j]) * n / nm1},
         )
+        if rec["query"].trace is not None:
+            _trace_lane(rec["query"].trace, j, n, metric, reports[i],
+                        int(live[j]))
+
+
+def _trace_lane(spec, lane, n, metric, report, survivors):
+    """Per-lane trace for a packed ``solve_many`` query: the packed
+    engine has no per-lane segment boundaries (all lanes advance in one
+    jitted program), so the lane trace is the honest three-event
+    summary — begin, one ``lane`` event, end."""
+    from repro.obs.trace import resolve_trace
+    tracer = resolve_trace(spec)
+    tracer.start_session()
+    tracer.begin(engine="batched", n=n, metric=metric)
+    tracer.event("lane", lane=lane, survivors=survivors,
+                 elements=int(report.elements_computed))
+    tracer.end(engine="batched", index=int(report.indices[0]),
+               energy=float(report.energies[0]),
+               elements=int(report.elements_computed),
+               rounds=int(report.n_rounds),
+               certified=bool(report.certified),
+               halt_reason="converged" if report.certified else "budget")
+    tracer.close()
+    report.extras["obs"] = {"trace": tracer.describe()}

@@ -170,6 +170,10 @@ def _kmedoids_update_params(q: MedoidQuery, reasons: list):
             mu = "sharded"
     if mu == "sharded" and not get_metric(q.metric).has_triangle:
         mu = "scan"
+        from repro.obs.logs import get_logger
+        get_logger("repro.api.planner").warning(
+            "medoid-update: non-triangle metric %r falls back to the "
+            "exact host-scan update (single-device)", q.metric)
         reasons.append(
             f"medoid-update: non-triangle metric {q.metric!r} cannot "
             "use the sharded elimination update; exact host-scan update "
@@ -587,6 +591,8 @@ def _run_pipelined(q: MedoidQuery, plan: Plan) -> SolveReport:
     kw = {}
     if plan.params.get("deadline_ts") is not None:
         kw["deadline_ts"] = plan.params["deadline_ts"]
+    if plan.params.get("tracer") is not None:
+        kw["trace"] = plan.params["tracer"]
     r = _trimed_pipelined(
         q.X, seed=q.seed, block=q.block, metric=q.metric,
         block_schedule=q.block_schedule,
@@ -610,6 +616,8 @@ def _run_sharded(q: MedoidQuery, plan: Plan) -> SolveReport:
     from repro.runtime import faults
     faults.on_shard_entry(int(plan.params.get("n_shards", 1)))
     kw, opts = _sharded_engine_kw(q)
+    if plan.params.get("tracer") is not None:
+        kw["trace"] = plan.params["tracer"]
     r, per_shard = _trimed_sharded(
         q.X, mesh=q.mesh, block=q.block, metric=q.metric,
         block_schedule=q.block_schedule,
@@ -847,14 +855,52 @@ def solve(query, plan=None, explain=False):
         # stamp the absolute deadline at execution time (fault clock, so
         # injected stalls blow it deterministically in tests)
         p.params["deadline_ts"] = faults.clock() + float(query.deadline_s)
+    tracer = None
+    if query.trace is not None:
+        from repro.obs.trace import resolve_trace
+        tracer = resolve_trace(query.trace)
+        tracer.start_session()
+        p.params["tracer"] = tracer
+    from repro.obs import profile as _profile
+    prof = _profile.active()
+    prof_mark = prof.mark() if prof is not None else 0
     try:
         report = _EXECUTORS[p.engine](query, p)
         report.plan = p
-        return report
     except Exception as err:
         if query.on_error != "degrade":
             raise
-        return _solve_degraded(query, p, err)
+        report = _solve_degraded(query, p, err)
+    _finish_obs(query, p, report, tracer, prof, prof_mark)
+    return report
+
+
+def _finish_obs(query, p: Plan, report: SolveReport, tracer, prof,
+                prof_mark: int) -> None:
+    """Attach ``extras["obs"]`` after a solve. Engines without native
+    segment tracing (everything but pipelined/sharded) still yield a
+    begin + end trace from the report — a one-event elimination curve
+    is honest for a single-pass engine."""
+    if tracer is None and prof is None:
+        return
+    obs: dict[str, Any] = {}
+    if tracer is not None:
+        if not tracer.engine_ran:
+            tracer.begin(engine=report.plan.engine,
+                         n=int(p.params.get("n") or _query_n(query)),
+                         metric=query.metric)
+            tracer.end(engine=report.plan.engine,
+                       index=int(report.indices[0]),
+                       energy=float(report.energies[0]),
+                       elements=int(report.elements_computed),
+                       rounds=int(report.n_rounds),
+                       certified=bool(report.certified),
+                       halt_reason=report.extras.get("halt_reason", ""))
+        tracer.close()
+        obs["trace"] = tracer.describe()
+    if prof is not None:
+        obs["kernels"] = prof.summary(since=prof_mark)
+    report.extras["obs"] = obs
 
 
 def _check_finite(query: MedoidQuery) -> None:
@@ -901,9 +947,15 @@ _DEGRADE_CHAIN = {
 
 
 def _solve_degraded(query: MedoidQuery, p: Plan, err) -> SolveReport:
+    from repro.obs.logs import get_logger
+    from repro.obs.metrics import REGISTRY
+    log = get_logger("repro.api.planner")
+    tracer = p.params.get("tracer")
     m = require_metric(query.metric, caller="solve")
     attempts = [f"on_error=degrade: {p.engine} raised "
                 f"{type(err).__name__}: {err}"]
+    log.warning("on_error=degrade: engine %s raised %s: %s",
+                p.engine, type(err).__name__, err)
     last = err
     rungs = []
     if p.params.get("use_kernels"):
@@ -922,6 +974,12 @@ def _solve_degraded(query: MedoidQuery, p: Plan, err) -> SolveReport:
     for eng, qq, note in rungs:
         reasons = p.reasons + tuple(attempts) + (f"on_error=degrade: "
                                                  f"{note}",)
+        REGISTRY.counter(
+            "degrade_hops_total",
+            "planner on_error=degrade ladder hops").inc(engine=eng)
+        if tracer is not None:
+            tracer.event("hop", engine=eng, reason=note)
+        log.warning("on_error=degrade: %s", note)
         try:
             params = _derive_params(qq, eng, [], m)
             params["use_kernels"] = False
@@ -930,6 +988,8 @@ def _solve_degraded(query: MedoidQuery, p: Plan, err) -> SolveReport:
             if (p.params.get("deadline_ts") is not None
                     and eng in _DEADLINE_ENGINES):
                 params["deadline_ts"] = p.params["deadline_ts"]
+            if tracer is not None:
+                params["tracer"] = tracer
             plan2 = Plan(eng, reasons, params,
                          cost_estimate=_estimate_cost(qq, eng, params))
             report = _EXECUTORS[eng](qq, plan2)
@@ -938,5 +998,7 @@ def _solve_degraded(query: MedoidQuery, p: Plan, err) -> SolveReport:
         except Exception as e2:
             attempts.append(f"on_error=degrade: {eng} raised "
                             f"{type(e2).__name__}: {e2}")
+            log.warning("on_error=degrade: %s raised %s: %s",
+                        eng, type(e2).__name__, e2)
             last = e2
     raise last

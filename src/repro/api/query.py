@@ -73,6 +73,16 @@ class MedoidQuery:
     * ``nonfinite`` — ``"raise"`` (default) rejects NaN/Inf rows in a
       host-array ``X`` at solve time (a single NaN silently poisons
       every triangle bound); ``"allow"`` skips the check.
+
+    Observability (DESIGN.md §14):
+
+    * ``trace`` — ``True`` (in-memory), a JSONL path, or a
+      :class:`~repro.obs.trace.SolveTracer`: record the per-round
+      elimination curve at the engine's host-visible segment
+      boundaries. Deterministic and bit-neutral: the traced solve
+      returns the exact same answer, and ``trace=None`` leaves the
+      compiled program untouched. Events (and a summary) surface in
+      ``SolveReport.extras["obs"]``.
     """
     X: Any
     metric: str = "l2"
@@ -94,6 +104,7 @@ class MedoidQuery:
     deadline_s: float | None = None
     on_error: str = "raise"
     nonfinite: str = "raise"
+    trace: Any = None
     engine_opts: dict = field(default_factory=dict)
 
     def __post_init__(self):
@@ -113,6 +124,9 @@ class MedoidQuery:
             raise ValueError(
                 "MedoidQuery: nonfinite must be 'raise' or 'allow', "
                 f"got {self.nonfinite!r}")
+        if self.trace is not None:
+            from repro.obs.trace import resolve_trace
+            resolve_trace(self.trace)   # raises on an invalid spec
         if self.deadline_s is not None and not (
                 isinstance(self.deadline_s, (int, float))
                 and float(self.deadline_s) > 0):
@@ -138,7 +152,7 @@ _QUERY_LEAVES = ("X", "assignments", "warm_idx", "update")
 _QUERY_AUX = tuple(f for f in (
     "metric", "k", "topk", "mode", "budget", "delta", "device_policy",
     "mesh", "seed", "block", "block_schedule", "use_kernels", "n_iter",
-    "deadline_s", "on_error", "nonfinite", "engine_opts"))
+    "deadline_s", "on_error", "nonfinite", "trace", "engine_opts"))
 
 
 def _query_flatten(q: MedoidQuery):

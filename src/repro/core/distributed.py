@@ -48,7 +48,6 @@ Entry points: the planner executes ``_trimed_sharded`` /
 from __future__ import annotations
 
 import functools
-import warnings
 
 import numpy as np
 
@@ -123,13 +122,14 @@ def _clamped_block(block, n, p, caller):
     requested = int(block)
     eff = effective_block(n, p, requested)
     if eff < min(requested, n):
-        warnings.warn(
+        from repro.obs.logs import repro_warn
+        repro_warn(
             f"{caller}: block={requested} exceeds the per-shard column "
             f"count {_layout(n, p)[2]} of the {p}-shard layout; round "
             f"width clamped to {eff}. Results stay exact but the pivot "
             "sequence and work counters diverge from the single-device "
             f"engine at block={requested}.",
-            UserWarning, stacklevel=3)
+            UserWarning, logger="repro.core.distributed", stacklevel=3)
     return eff
 
 
@@ -452,6 +452,7 @@ def _trimed_sharded(
     interpret=None,
     max_computed: int | None = None,
     seed: int = 0,
+    trace=None,
 ):
     """Exact medoid via the sharded pipelined engine (DESIGN.md §11).
 
@@ -472,12 +473,19 @@ def _trimed_sharded(
     """
     del seed    # selection is deterministic (lowest-bound)
     require_metric(metric, need_triangle=True, caller="trimed_sharded")
+    from repro.obs.trace import l_summary as _l_summary, resolve_trace
+    tracer = resolve_trace(trace)
     X = jnp.asarray(X)
     n, d = X.shape
     mesh, p = _resolve_mesh(mesh, axis)
     if n == 1:
         per_shard = np.zeros(p, np.int64)
         per_shard[0] = 1                      # shard 0 owns the only row
+        if tracer is not None:
+            tracer.begin(engine="sharded", n=1, d=int(d), metric=metric,
+                         block=int(block))
+            tracer.end(engine="sharded", index=0, energy=0.0, elements=1,
+                       rounds=0, certified=True, halt_reason="converged")
         return MedoidResult(0, 0.0, 1, 0, 1), per_shard
     s, n_pad, n_local, c_loc = _layout(n, p)
     block = _clamped_block(block, n, p, "trimed_sharded")
@@ -503,6 +511,27 @@ def _trimed_sharded(
     surv_gidx = jax.device_put(
         jnp.arange(n_pad, dtype=jnp.int32), NamedSharding(mesh, P(axis)))
     l_s, alive_s = l, alive
+    d1 = max(n - 1, 1)
+
+    def _trace_stage(phase, rung):
+        # rides the loop's existing host sync (live_loc is already on the
+        # host); the l/alive gather is tracing-only work
+        if tracer is None:
+            return
+        e_h = float(e_cl)
+        l_h = np.asarray(l_s, np.float64)
+        mask = np.logical_and(np.asarray(alive_s, bool), l_h < e_h)
+        tracer.segment(
+            round=int(n_rounds), phase=phase, stage=n_stages, rung=rung,
+            survivors=live, incumbent=int(m_cl),
+            energy=(e_h * n / d1 if np.isfinite(e_h) else None),
+            elements=int(n_comp), l_summary=_l_summary(l_h, mask))
+        tracer.flush()
+
+    if tracer is not None:
+        tracer.begin(engine="sharded", n=n, d=int(d), metric=metric,
+                     block=int(block), shards=p)
+    _trace_stage("full", n)
 
     while live > 0 and int(n_comp) < budget_host:
         max_loc = int(np.asarray(live_loc).max())
@@ -517,16 +546,23 @@ def _trimed_sharded(
          fold_cols) = rep2
         live = int(np.asarray(live_loc).sum())
         n_stages += 1
+        _trace_stage("ladder", m_loc)
 
     n_rounds = int(n_rounds)
     n_comp = int(n_comp)
-    e_paper = float(e_cl) * n / max(n - 1, 1)
+    e_paper = float(e_cl) * n / d1
     result = MedoidResult(
         int(m_cl), e_paper, n_comp, n_rounds, n_comp * n,
         n_stages=n_stages,
         x_cols_streamed=n_rounds * n + int(fold_cols),
         certified=(live == 0),
     )
+    if tracer is not None:
+        tracer.end(engine="sharded", index=int(m_cl), energy=e_paper,
+                   elements=n_comp, rounds=n_rounds,
+                   certified=(live == 0),
+                   halt_reason="converged" if live == 0 else "budget",
+                   survivors=live, stages=n_stages)
     return result, np.asarray(own, np.int64)
 
 

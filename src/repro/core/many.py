@@ -251,4 +251,15 @@ def solve_many_bucket(Xq, warm_q, warm_valid_q, budget_q, *, block: int,
     else:
         out = _many_stage_jnp(Xq, l0q, warm_q, warm_valid_q, budget_q,
                               block, metric, has_warm)
-    return tuple(np.asarray(o) for o in out)
+    out = tuple(np.asarray(o) for o in out)
+    # library-level observability counters (DESIGN.md §14): packed-solve
+    # volume on the process-wide registry — host-side, after the solve
+    from repro.obs.metrics import REGISTRY
+    REGISTRY.counter("many_buckets_total",
+                     "packed solve_many bucket launches").inc()
+    REGISTRY.counter("many_lanes_total",
+                     "lanes across all packed buckets").inc(qn)
+    REGISTRY.counter("many_elements_total",
+                     "computed elements across all packed buckets").inc(
+                         float(out[2].sum()))
+    return out

@@ -188,6 +188,72 @@ def _live_count(l, alive, e_cl):
     return jnp.logical_and(alive, l < e_cl).sum()
 
 
+# ---------------------------------------------------------------------------
+# in-loop telemetry recording (DESIGN.md §14)
+#
+# Per-round trace events are recorded *inside* the jitted round loop into
+# fixed-size device buffers (one slot per round of the segment) and
+# drained by the host at the segment boundary it already synchronises
+# on. This keeps tracing out of the host loop entirely: a traced solve
+# segments every ``_SEG_DEFAULT`` rounds instead of every round, and the
+# per-round values ride along for free. ``rec_len`` is static — when 0
+# (tracing off) the loop functions compile to the exact program they
+# were before telemetry existed.
+# ---------------------------------------------------------------------------
+_REC_SAMPLE = 256    # interior quartiles sort at most this many entries
+
+
+def _rec_init(rec_len, dtype):
+    """One traced segment's telemetry buffers, packed into two arrays
+    (one int scatter + one float scatter per round keeps the recording
+    out of the round's critical path): ``[live, incumbent, elements]``
+    and ``[e_cl, l_mean, l_min, l_q25, l_q50, l_q75, l_max]``."""
+    return (jnp.zeros((rec_len, 3), jnp.int32),
+            jnp.zeros((rec_len, 7), dtype))
+
+
+def _rec_write(state, rec, seg_start):
+    """Record the just-finished round (slot ``n_rounds - seg_start - 1``;
+    state indices 0-3/8-9 are shared by the full and ladder carries).
+
+    The bound summary is the device-side analogue of
+    :func:`repro.obs.trace.l_summary` over the live mask:
+    ``min``/``max``/``mean`` are exact O(M) reductions (``l >= 0``, so
+    the zero-filled select is max-safe); the interior quartiles
+    interpolate a deterministic strided sample of at most
+    ``_REC_SAMPLE`` entries — a full per-round sort would cost more
+    than the round's own bound work. Ordering
+    ``min <= q25 <= q50 <= q75 <= max`` still holds (sample values are
+    bracketed by the exact extremes); if the sample misses every live
+    entry (tiny tail of survivors) the quartiles collapse to the
+    midpoint of the exact extremes."""
+    i = state[9] - seg_start - 1
+    l, alive, e_cl = state[0], state[1], state[2]
+    mask = jnp.logical_and(alive, l < e_cl)
+    live = mask.sum()
+    vals = jnp.where(mask, l, jnp.inf)
+    zeros = jnp.where(mask, l, 0)
+    mn = vals.min()
+    mx = zeros.max()
+    mean = zeros.sum() / jnp.maximum(live, 1).astype(l.dtype)
+    m = vals.shape[0]
+    if m > _REC_SAMPLE:
+        vals = vals[:: m // _REC_SAMPLE][:_REC_SAMPLE]
+    s = jnp.sort(vals)
+    live_s = (s < jnp.inf).sum()
+    hi = jnp.maximum(live_s - 1, 0).astype(l.dtype)
+    pos = jnp.asarray((0.25, 0.5, 0.75), l.dtype) * hi
+    lo_i = jnp.floor(pos).astype(jnp.int32)
+    hi_i = jnp.ceil(pos).astype(jnp.int32)
+    frac = pos - lo_i.astype(l.dtype)
+    q = s[lo_i] * (1 - frac) + s[hi_i] * frac
+    q = jnp.where(live_s > 0, q, (mn + mx) / 2)
+    ints = jnp.stack([live.astype(jnp.int32), state[3], state[8]])
+    flts = jnp.concatenate(
+        [jnp.stack([e_cl, mean, mn]).astype(l.dtype), q, mx[None]])
+    return (rec[0].at[i].set(ints), rec[1].at[i].set(flts))
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("block", "warm", "metric", "use_kernels", "interpret",
@@ -228,17 +294,18 @@ def _stage0_init(X, l0, warm_arr, budget, block, warm, metric, use_kernels,
 @functools.partial(
     jax.jit,
     static_argnames=("block", "metric", "use_kernels", "interpret",
-                     "can_compact"),
+                     "can_compact", "rec_len"),
 )
 def _stage0_loop(X, state, budget, seg_cap, block, metric, use_kernels,
-                 interpret, can_compact):
+                 interpret, can_compact, rec_len=0):
     """One full-domain *segment*: steady rounds until the live count
     drops below N/2 (compaction trigger), the computed-row budget is
     spent, no survivor remains, or ``seg_cap`` rounds have run since
     entry (the host-visibility boundary — ``seg_cap`` is traced, so the
     segmented and straight-through paths share one compiled program and
     the per-round math is identical either way). Returns the final
-    state plus the live count."""
+    state plus the live count; ``rec_len > 0`` (tracing) additionally
+    returns per-round telemetry buffers of that many slots."""
     n = X.shape[0]
     x_sq = (sq_norms(X) if metric in ("l2", "sqeuclidean")
             else jnp.zeros(n, X.dtype))
@@ -254,6 +321,16 @@ def _stage0_loop(X, state, budget, seg_cap, block, metric, use_kernels,
             return jnp.logical_and(go, 2 * live > n)
         return go
 
+    if rec_len:
+        def body(carry):
+            s, rec = carry
+            s = round_fn(s, block)
+            return s, _rec_write(s, rec, seg_start)
+
+        state, rec = jax.lax.while_loop(
+            lambda c: cond(c[0]), body,
+            (state, _rec_init(rec_len, X.dtype)))
+        return state, _live_count(state[0], state[1], state[2]), rec
     state = jax.lax.while_loop(cond, lambda s: round_fn(s, block), state)
     return state, _live_count(state[0], state[1], state[2])
 
@@ -346,14 +423,16 @@ def _stage_enter(X, surv_idx, l_s, alive_s, e_cl, pidx, m_out, metric,
 @functools.partial(
     jax.jit,
     static_argnames=("block", "metric", "use_kernels", "interpret",
-                     "is_floor"),
+                     "is_floor", "rec_len"),
 )
 def _stage_loop(X, surv_idx, state, budget, seg_cap, block, metric,
-                use_kernels, interpret, is_floor):
+                use_kernels, interpret, is_floor, rec_len=0):
     """One compacted-stage *segment*: rounds until the next ladder
     trigger, termination, or ``seg_cap`` rounds since entry (the
     host-visibility boundary). ``Xs`` is re-gathered from ``surv_idx``
-    — a deterministic gather, bit-identical to the compaction's."""
+    — a deterministic gather, bit-identical to the compaction's.
+    ``rec_len > 0`` (tracing) additionally returns per-round telemetry
+    buffers of that many slots."""
     n = X.shape[0]
     m = surv_idx.shape[0]
     Xs = jnp.take(X, surv_idx, axis=0)
@@ -371,6 +450,16 @@ def _stage_loop(X, surv_idx, state, budget, seg_cap, block, metric,
 
     body = functools.partial(_stage_round, X, Xs, surv_idx, x_sq, n,
                              metric, use_kernels, interpret, budget, block)
+    if rec_len:
+        def body2(carry):
+            s, rec = carry
+            s = body(s)
+            return s, _rec_write(s, rec, seg_start)
+
+        state, rec = jax.lax.while_loop(
+            lambda c: cond(c[0]), body2,
+            (state, _rec_init(rec_len, X.dtype)))
+        return state, _live_count(state[0], state[1], state[2]), rec
     state = jax.lax.while_loop(cond, body, state)
     return state, _live_count(state[0], state[1], state[2])
 
@@ -404,6 +493,7 @@ def _trimed_pipelined(
     resume: str = "auto",
     deadline_ts: float | None = None,
     heartbeat_timeout_s: float | None = None,
+    trace=None,
 ) -> MedoidResult:
     """Exact medoid via the survivor-compacted, software-pipelined engine
     (DESIGN.md §4). One X-stream per steady-state round; bound
@@ -454,6 +544,13 @@ def _trimed_pipelined(
     * ``heartbeat_timeout_s`` — arm a :class:`~repro.runtime.faults
       .RoundWatchdog`; if segments stop beating for this long (by the
       fault clock) the solve halts as ``halt_reason="stalled"``.
+    * ``trace`` — a :class:`~repro.obs.trace.SolveTracer` (or path /
+      ``True``, see :func:`~repro.obs.trace.resolve_trace`): emit one
+      deterministic elimination-curve event per segment boundary
+      (DESIGN.md §14). Tracing reuses the segment machinery — values
+      are read at boundaries the host already observes, and with
+      ``trace=None`` the segmentation condition (and hence the
+      compiled program) is exactly what it was without this knob.
 
     Only triangle-inequality metrics are admissible (the elimination
     bound is the triangle bound)."""
@@ -493,14 +590,25 @@ def _trimed_pipelined(
     if resume not in ("auto", "never", "require"):
         raise ValueError(f"resume must be 'auto', 'never' or 'require', "
                          f"got {resume!r}")
+    from repro.obs.trace import _finite as _tfin
+    from repro.obs.trace import resolve_trace
+    tracer = resolve_trace(trace)
     segmented = (ck is not None or deadline_ts is not None
-                 or heartbeat_timeout_s is not None or faults.active())
+                 or heartbeat_timeout_s is not None or faults.active()
+                 or tracer is not None)
     if checkpoint_every is None:
         # deadline/heartbeat callers asked for interruptibility: check
-        # every round. Pure checkpointing amortises the host sync.
-        checkpoint_every = (1 if (deadline_ts is not None
-                                  or heartbeat_timeout_s is not None)
-                            else _SEG_DEFAULT)
+        # every round. A tracer records per-round telemetry *inside*
+        # the jitted loop (rec_len below), so it only needs boundaries
+        # at drain granularity — like pure checkpointing it amortises
+        # the host sync over _SEG_DEFAULT rounds unless the tracer
+        # asked for a specific cadence.
+        if deadline_ts is not None or heartbeat_timeout_s is not None:
+            checkpoint_every = 1
+        elif tracer is not None:
+            checkpoint_every = tracer.every or _SEG_DEFAULT
+        else:
+            checkpoint_every = _SEG_DEFAULT
     seg_cap = jnp.asarray(
         max(int(checkpoint_every), 1) if segmented else 2**31 - 1,
         jnp.int32)
@@ -516,8 +624,46 @@ def _trimed_pipelined(
             raise FileNotFoundError(
                 f"resume='require' but no SolveState checkpoint in "
                 f"{ck.dir}")
-    wd = (faults.RoundWatchdog(heartbeat_timeout_s)
+    wd = (faults.RoundWatchdog(heartbeat_timeout_s, sink=tracer)
           if heartbeat_timeout_s is not None else None)
+    d1 = max(n - 1, 1)
+    if tracer is not None:
+        tracer.begin(engine="pipelined", n=n, d=int(X.shape[1]),
+                     metric=metric, block=block,
+                     resumed=st is not None,
+                     elements=int(st.n_comp) if st is not None else 0,
+                     round_base=int(st.n_rounds) if st is not None else -1)
+
+    rec_len = int(max(checkpoint_every, 1)) if tracer is not None else 0
+
+    def _drain(phase, rec, r0, r1):
+        """Emit one elimination-curve event per round recorded in the
+        segment's device buffers. Runs after the checkpoint save and
+        *before* the fault hook (like the save itself), so a kill at
+        this boundary leaves the segment's events on disk and a resumed
+        run appends the byte-identical continuation. The buffers are
+        host pulls at an already-synchronised boundary — telemetry adds
+        no new synchronisation points and no wall-clock."""
+        if tracer is None or rec is None:
+            return
+        ints, flts = np.asarray(rec[0]), np.asarray(rec[1])
+        rung = m_out if phase == "ladder" else n
+        for j in range(int(r1) - int(r0)):
+            liv, inc, ncmp = (int(v) for v in ints[j])
+            e = float(flts[j, 0])
+            s = liv
+            ls = None
+            if s > 0:
+                f = flts[j]
+                ls = {"min": _tfin(f[2]), "q25": _tfin(f[3]),
+                      "q50": _tfin(f[4]), "q75": _tfin(f[5]),
+                      "max": _tfin(f[6]), "mean": _tfin(f[1])}
+            tracer.segment(
+                round=int(r0) + 1 + j, phase=phase, stage=n_stages,
+                rung=rung, survivors=s, incumbent=inc,
+                energy=(e * n / d1 if np.isfinite(e) else None),
+                elements=ncmp, l_summary=ls)
+        tracer.flush()   # durable before the fault hook can kill us
 
     def _save(phase, surv_idx_d, state11):
         if ck is None:
@@ -584,11 +730,15 @@ def _trimed_pipelined(
                                    metric, use_kernels, interpret,
                                    has_warm_idx)
         while True:
-            state10, live_d = _stage0_loop(X, state10, budget, seg_cap,
-                                           block, metric, use_kernels,
-                                           interpret, can_compact)
+            r0 = int(state10[9])
+            out = _stage0_loop(X, state10, budget, seg_cap, block,
+                               metric, use_kernels, interpret,
+                               can_compact, rec_len)
+            state10, live_d = out[0], out[1]
             live = int(live_d)
             _save(PHASE_FULL, None, state10 + (fold_cols,))
+            _drain("full", out[2] if rec_len else None, r0,
+                   int(state10[9]))
             halt = _halted_after(state10[9])
             if (halt or live == 0 or int(state10[8]) >= budget_host
                     or (can_compact and 2 * live <= n)):
@@ -611,13 +761,17 @@ def _trimed_pipelined(
         while True:
             state11 = (l_c, alive_c, e_cl, m_cl, pidx, pe, pv, dprev,
                        n_comp, n_rounds, fold_cols)
-            state11, live_d = _stage_loop(X, surv_idx, state11, budget,
-                                          seg_cap, block, metric,
-                                          use_kernels, interpret, is_floor)
+            r0 = int(n_rounds)
+            out = _stage_loop(X, surv_idx, state11, budget, seg_cap,
+                              block, metric, use_kernels, interpret,
+                              is_floor, rec_len)
+            state11, live_d = out[0], out[1]
             (l_c, alive_c, e_cl, m_cl, pidx, pe, pv, dprev, n_comp,
              n_rounds, fold_cols) = state11
             live = int(live_d)
             _save(PHASE_LADDER, surv_idx, state11)
+            _drain("ladder", out[2] if rec_len else None, r0,
+                   int(n_rounds))
             halt = _halted_after(n_rounds)
             if halt or live == 0 or int(n_comp) >= budget_host:
                 break
@@ -635,9 +789,14 @@ def _trimed_pipelined(
     # e * n / (n-1) evaluated left-to-right: the packed-many and sharded
     # engines reproduce this exact association, so any re-grouping here
     # breaks their bit-identity contracts by one ulp
-    d1 = max(n - 1, 1)
     lo_int = float(l_h[live_mask].min()) if live_mask.any() else e_h
     halt_reason = "" if certified else (halt or "budget")
+    if tracer is not None:
+        tracer.end(engine="pipelined", index=int(m_cl),
+                   energy=(e_h * n / d1 if np.isfinite(e_h) else None),
+                   elements=n_comp_h, rounds=n_rounds_h,
+                   certified=certified, halt_reason=halt_reason,
+                   survivors=int(live_mask.sum()), stages=n_stages)
     return MedoidResult(
         int(m_cl), e_h * n / d1, n_comp_h, n_rounds_h, n_comp_h * n,
         n_stages=n_stages,

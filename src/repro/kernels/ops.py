@@ -346,3 +346,31 @@ def make_pallas_distance_fn(metric="l2", tn=DEFAULT_TN, interpret=None):
         return pairwise_distances(xb, x, metric=metric, tn=tn,
                                   interpret=interpret)
     return fn
+
+
+# ---------------------------------------------------------------------------
+# observability (DESIGN.md §14): route every public kernel wrapper
+# through repro.obs.profile.observed. Disabled (the default) this is one
+# `is None` check in front of the *same* jitted callable — the compiled
+# program is untouched; inside `with profile_kernels()` eager calls are
+# timed and placed on the roofline. The raw jitted callables stay
+# importable as `_<name>_jit`.
+# ---------------------------------------------------------------------------
+from repro.obs import profile as _prof  # noqa: E402
+
+
+def _observe_wrap(name, fn):
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        return _prof.observed(name, fn, *args, **kwargs)
+    return wrapper
+
+
+for _name in ("pairwise_distances", "block_energies", "bound_update",
+              "masked_energies", "masked_bound_update", "pipelined_round",
+              "masked_pipelined_round", "many_block_energies",
+              "many_pipelined_round", "sample_stats"):
+    _fn = globals()[_name]
+    globals()["_" + _name + "_jit"] = _fn
+    globals()[_name] = _observe_wrap(_name, _fn)
+del _name, _fn

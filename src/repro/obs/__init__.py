@@ -1,0 +1,28 @@
+"""Observability subsystem (DESIGN.md §14): traces, metrics, profiling.
+
+Three layers, all inert unless asked for:
+
+* :mod:`repro.obs.trace` — per-round solve telemetry (the paper's
+  elimination curve) captured at the fault-runtime's host-visible
+  segment boundaries; deterministic, byte-identical JSONL.
+* :mod:`repro.obs.metrics` — counters/gauges/histograms under the
+  ``repro_obs_`` namespace with Prometheus-text and JSONL exporters;
+  ``MedoidServer`` serves a registry at ``metrics_text()``.
+* :mod:`repro.obs.profile` — per-invocation Pallas kernel timing with
+  analytic FLOP/byte models placed on the machine roofline.
+
+:mod:`repro.obs.logs` routes every engine/planner diagnostic through
+the single ``repro`` logger namespace.
+"""
+from .logs import get_logger, repro_warn
+from .metrics import REGISTRY, METRICS_SCHEMA, MetricsRegistry
+from .profile import KernelProfiler, profile_kernels
+from .trace import (TRACE_SCHEMA, SolveTracer, compare_structure,
+                    load_jsonl, resolve_trace, validate_events)
+
+__all__ = [
+    "TRACE_SCHEMA", "METRICS_SCHEMA", "SolveTracer", "resolve_trace",
+    "validate_events", "compare_structure", "load_jsonl",
+    "MetricsRegistry", "REGISTRY", "KernelProfiler", "profile_kernels",
+    "get_logger", "repro_warn",
+]

@@ -1,0 +1,43 @@
+"""One ``repro`` logger namespace for every engine/planner diagnostic.
+
+Before this module the repo's user-facing diagnostics were split across
+two channels with different ergonomics: ``warnings.warn`` (block
+clamping, legacy-shim deprecations) and silent plan ``reasons`` (the
+kmedoids non-triangle fallback). Operators of a long-running service
+configure ``logging``, not ``warnings`` — so every diagnostic now
+*also* flows through a logger under the single ``repro`` namespace
+(``repro.api``, ``repro.core.distributed``, ...), where standard
+``logging`` config can silence, capture or ship it.
+
+:func:`repro_warn` keeps the ``warnings`` channel intact — the
+pytest warnings-as-errors contract (``pytest.ini``) keys on the
+warning's *origin module* via ``stacklevel``, so the helper bumps
+``stacklevel`` by exactly one to stay transparent to that resolution.
+"""
+from __future__ import annotations
+
+import logging
+import warnings
+
+ROOT = "repro"
+
+
+def get_logger(name: str = ROOT) -> logging.Logger:
+    """A logger under the ``repro`` namespace. ``name`` may be a full
+    dotted path (``"repro.api"``) or a suffix (``"api"``)."""
+    if name != ROOT and not name.startswith(ROOT + "."):
+        name = f"{ROOT}.{name}"
+    return logging.getLogger(name)
+
+
+def repro_warn(message: str, category=UserWarning, *,
+               logger: str = ROOT, stacklevel: int = 2) -> None:
+    """Emit ``message`` on both channels: a ``repro.*`` log record (for
+    ``logging`` config) and a real warning (for ``warnings`` filters and
+    the pytest contract).
+
+    ``stacklevel`` has the same meaning as in :func:`warnings.warn` as
+    seen by *our caller*: the helper adds its own frame transparently.
+    """
+    get_logger(logger).warning("%s", message)
+    warnings.warn(message, category, stacklevel=stacklevel + 1)

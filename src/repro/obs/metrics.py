@@ -1,0 +1,221 @@
+"""Metrics registry: counters/gauges/histograms under ``repro.obs``.
+
+A deliberately small, dependency-free re-implementation of the usual
+client-library surface (DESIGN.md §14): metrics live in a
+:class:`MetricsRegistry`, carry optional label sets, and export through
+two channels —
+
+* :meth:`MetricsRegistry.to_text` — Prometheus exposition format
+  (``# HELP`` / ``# TYPE`` / samples), served by
+  ``MedoidServer.metrics_text()`` as the scrape endpoint;
+* :meth:`MetricsRegistry.export_jsonl` — a JSONL event log under the
+  versioned schema ``repro.obs.metrics/v1``, one sample per line, with
+  deterministic key order and float formatting (the same dump rules as
+  the solve tracer, so snapshots diff cleanly).
+
+All metric names are prefixed ``repro_obs_`` so every exported sample
+sits in one namespace. A process-wide default registry ``REGISTRY``
+collects library-level counters (packed-solve lanes, watchdog beats);
+servers own private registries so concurrent servers don't alias.
+"""
+from __future__ import annotations
+
+import json
+import math
+
+METRICS_SCHEMA = "repro.obs.metrics/v1"
+PREFIX = "repro_obs_"
+
+_RATIO_BUCKETS = (0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 4.0, 8.0)
+
+
+def dump_json(obj) -> str:
+    """Deterministic JSON: sorted keys, no whitespace, shortest-repr
+    floats (Python's ``repr`` round-trips bit-exactly)."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def _labels_key(labels: dict) -> tuple:
+    return tuple(sorted(labels.items()))
+
+
+def _fmt_value(v) -> str:
+    if isinstance(v, float):
+        if math.isinf(v):
+            return "+Inf" if v > 0 else "-Inf"
+        return repr(v)
+    return str(v)
+
+
+def _fmt_labels(items) -> str:
+    if not items:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in items)
+    return "{" + inner + "}"
+
+
+class _Metric:
+    kind = "untyped"
+
+    def __init__(self, name: str, help_: str = ""):
+        self.name = name
+        self.help = help_
+        self._series: dict = {}
+
+    def _slot(self, labels: dict):
+        key = _labels_key(labels)
+        if key not in self._series:
+            self._series[key] = self._new_series()
+        return self._series[key]
+
+    def samples(self):
+        """Yields ``(suffix, label_items, value)`` exposition samples."""
+        raise NotImplementedError
+
+
+class Counter(_Metric):
+    kind = "counter"
+
+    def _new_series(self):
+        return [0.0]
+
+    def inc(self, amount: float = 1, **labels) -> None:
+        if amount < 0:
+            raise ValueError("counters only go up")
+        self._slot(labels)[0] += amount
+
+    def value(self, **labels) -> float:
+        return self._slot(labels)[0]
+
+    def samples(self):
+        for key, slot in sorted(self._series.items()):
+            yield "", key, slot[0]
+
+
+class Gauge(_Metric):
+    kind = "gauge"
+
+    def _new_series(self):
+        return [0.0]
+
+    def set(self, value: float, **labels) -> None:
+        self._slot(labels)[0] = value
+
+    def inc(self, amount: float = 1, **labels) -> None:
+        self._slot(labels)[0] += amount
+
+    def dec(self, amount: float = 1, **labels) -> None:
+        self._slot(labels)[0] -= amount
+
+    def value(self, **labels) -> float:
+        return self._slot(labels)[0]
+
+    def samples(self):
+        for key, slot in sorted(self._series.items()):
+            yield "", key, slot[0]
+
+
+class Histogram(_Metric):
+    kind = "histogram"
+
+    def __init__(self, name, help_="", buckets=_RATIO_BUCKETS):
+        super().__init__(name, help_)
+        self.buckets = tuple(sorted(float(b) for b in buckets))
+
+    def _new_series(self):
+        # per-bucket cumulative counts + sum + count
+        return {"buckets": [0] * len(self.buckets), "sum": 0.0, "count": 0}
+
+    def observe(self, value: float, **labels) -> None:
+        slot = self._slot(labels)
+        for i, b in enumerate(self.buckets):
+            if value <= b:
+                slot["buckets"][i] += 1
+        slot["sum"] += value
+        slot["count"] += 1
+
+    def value(self, **labels) -> dict:
+        return dict(self._slot(labels))
+
+    def samples(self):
+        for key, slot in sorted(self._series.items()):
+            for b, c in zip(self.buckets, slot["buckets"]):
+                yield "_bucket", key + (("le", _fmt_value(float(b))),), c
+            yield "_bucket", key + (("le", "+Inf"),), slot["count"]
+            yield "_sum", key, slot["sum"]
+            yield "_count", key, slot["count"]
+
+
+class MetricsRegistry:
+    """A named collection of metrics with idempotent constructors: asking
+    twice for the same name returns the same instrument (mismatched
+    kinds raise)."""
+
+    def __init__(self):
+        self._metrics: dict[str, _Metric] = {}
+
+    def _register(self, cls, name, help_, **kw):
+        if not name.startswith(PREFIX):
+            name = PREFIX + name
+        existing = self._metrics.get(name)
+        if existing is not None:
+            if not isinstance(existing, cls):
+                raise ValueError(
+                    f"metric {name!r} already registered as "
+                    f"{existing.kind}, not {cls.kind}")
+            return existing
+        m = cls(name, help_, **kw)
+        self._metrics[name] = m
+        return m
+
+    def counter(self, name: str, help_: str = "") -> Counter:
+        return self._register(Counter, name, help_)
+
+    def gauge(self, name: str, help_: str = "") -> Gauge:
+        return self._register(Gauge, name, help_)
+
+    def histogram(self, name: str, help_: str = "",
+                  buckets=_RATIO_BUCKETS) -> Histogram:
+        return self._register(Histogram, name, help_, buckets=buckets)
+
+    # -- exporters ----------------------------------------------------
+    def to_text(self) -> str:
+        """Prometheus exposition format."""
+        lines = []
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            if m.help:
+                lines.append(f"# HELP {name} {m.help}")
+            lines.append(f"# TYPE {name} {m.kind}")
+            for suffix, label_items, value in m.samples():
+                lines.append(f"{name}{suffix}{_fmt_labels(label_items)} "
+                             f"{_fmt_value(value)}")
+        return "\n".join(lines) + "\n"
+
+    def snapshot(self) -> list[dict]:
+        """All current samples as plain dicts (the JSONL export rows)."""
+        rows = []
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            for suffix, label_items, value in m.samples():
+                rows.append({
+                    "schema": METRICS_SCHEMA,
+                    "name": name + suffix,
+                    "kind": m.kind,
+                    "labels": dict(label_items),
+                    "value": value,
+                })
+        return rows
+
+    def export_jsonl(self, path=None) -> str:
+        """The JSONL event-log exporter: one deterministic line per
+        sample. Returns the text; also writes it when ``path`` given."""
+        text = "".join(dump_json(row) + "\n" for row in self.snapshot())
+        if path is not None:
+            with open(path, "w", encoding="utf-8") as fh:
+                fh.write(text)
+        return text
+
+
+#: process-wide default registry for library-level counters
+REGISTRY = MetricsRegistry()

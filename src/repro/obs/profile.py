@@ -1,0 +1,189 @@
+"""Kernel profiling hooks: per-invocation timing + roofline placement.
+
+Every public wrapper in :mod:`repro.kernels.ops` routes through
+:func:`observed`. When no profiler is active (the default) the hook is a
+single ``is None`` check and the call proceeds to the *same* jitted
+callable as before — the disabled path runs the exact compiled program
+it always did. Inside ``with profile_kernels() as prof:`` each *eager*
+invocation is timed wall-clock (``block_until_ready``) and recorded with
+an analytic FLOP/byte model, then placed on the machine roofline via
+:func:`repro.roofline.analysis.kernel_roofline` (wiring the previously
+idle seed module).
+
+Two honest caveats, by design:
+
+* calls whose operands are tracers (a kernel invoked *inside* an
+  engine's jitted stage) are passed through untimed — they fuse into
+  the enclosing program and have no per-invocation wall-clock. The
+  engines' end-to-end cost lives in the solve trace; per-kernel
+  rooflines come from eager invocations (``benchmarks/bench_obs.py``
+  drives exactly those).
+* timings include dispatch overhead — on the CPU/interpret path that
+  dominates, and the reported ``roofline_fraction`` is correspondingly
+  tiny. The numbers become meaningful on an accelerator backend; the
+  *model* FLOPs/bytes are backend-independent.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+F32 = 4                     # the kernel family computes in fp32
+
+
+def _pass_cost(b, n, d, out_elems, flops_per_cell=2.0):
+    """One tiled stream of ``x`` against a ``(b, d)`` pivot block: the
+    ``b*n*d`` multiply-adds of the distance dot products dominate;
+    ``flops_per_cell`` covers the per-cell epilogue (norm combine,
+    sqrt/abs, mask, accumulate). Bytes: both operands + the output —
+    the fused kernels never materialise the ``(b, n)`` block in HBM."""
+    flops = 2.0 * b * n * d + flops_per_cell * b * n
+    nbytes = F32 * (b * d + n * d + out_elems)
+    return flops, nbytes
+
+
+def _cost_pairwise(xb, x, **kw):
+    b, d = xb.shape[-2], xb.shape[-1]
+    n = x.shape[-2]
+    # materialised (B, N) output is the point of this kernel
+    return _pass_cost(b, n, d, out_elems=b * n)
+
+
+def _cost_energies(xb, x, *rest, **kw):
+    b, d = xb.shape[-2], xb.shape[-1]
+    n = x.shape[-2]
+    q = xb.shape[0] if xb.ndim == 3 else 1
+    f, by = _pass_cost(b, n, d, out_elems=b)
+    return q * f, q * by
+
+
+def _cost_bound_update(xb, x, *rest, **kw):
+    b, d = xb.shape[-2], xb.shape[-1]
+    n = x.shape[-2]
+    # reads + writes the length-n bound vector on top of the pass
+    f, by = _pass_cost(b, n, d, out_elems=n, flops_per_cell=4.0)
+    return f, by + F32 * n
+
+
+def _cost_pipelined(xb_new, xb_prev, x, *rest, **kw):
+    b = xb_new.shape[-2] + xb_prev.shape[-2]
+    d = x.shape[-1]
+    n = x.shape[-2]
+    q = x.shape[0] if x.ndim == 3 else 1
+    f, by = _pass_cost(b, n, d, out_elems=xb_new.shape[-2] + n,
+                       flops_per_cell=4.0)
+    return q * f, q * (by + F32 * n)
+
+
+def _cost_sample_stats(xa, xs, **kw):
+    m, d = xa.shape
+    s = xs.shape[0]
+    # three (M,) outputs: sums, sumsq, maxs
+    return _pass_cost(m, s, d, out_elems=3 * m, flops_per_cell=5.0)
+
+
+#: analytic FLOP/byte models keyed by the ops.py wrapper name
+KERNEL_COSTS = {
+    "pairwise_distances": _cost_pairwise,
+    "block_energies": _cost_energies,
+    "bound_update": _cost_bound_update,
+    "masked_energies": _cost_energies,
+    "masked_bound_update": _cost_bound_update,
+    "pipelined_round": _cost_pipelined,
+    "masked_pipelined_round": _cost_pipelined,
+    "many_block_energies": _cost_energies,
+    "many_pipelined_round": _cost_pipelined,
+    "sample_stats": _cost_sample_stats,
+}
+
+try:
+    from jax.core import Tracer as _Tracer
+except ImportError:                                  # pragma: no cover
+    try:
+        from jax import core as _jax_core
+        _Tracer = _jax_core.Tracer
+    except Exception:
+        _Tracer = ()
+
+
+def _eager(args) -> bool:
+    return not any(isinstance(a, _Tracer) for a in args)
+
+
+class KernelProfiler:
+    """Per-invocation records of the Pallas kernel family."""
+
+    def __init__(self):
+        self.records: list[dict] = []
+
+    def record(self, name: str, flops: float, nbytes: float,
+               seconds: float) -> None:
+        self.records.append({"kernel": name, "flops": flops,
+                             "bytes": nbytes, "seconds": seconds})
+
+    def mark(self) -> int:
+        return len(self.records)
+
+    def summary(self, since: int = 0) -> dict:
+        """Aggregate per-kernel totals + roofline placement for the
+        records from index ``since`` on."""
+        return summarise(self.records[since:])
+
+
+def summarise(records) -> dict:
+    from repro.roofline.analysis import kernel_roofline
+
+    per = {}
+    for r in records:
+        s = per.setdefault(r["kernel"], {"calls": 0, "flops": 0.0,
+                                         "bytes": 0.0, "seconds": 0.0})
+        s["calls"] += 1
+        s["flops"] += r["flops"]
+        s["bytes"] += r["bytes"]
+        s["seconds"] += r["seconds"]
+    for s in per.values():
+        s["roofline"] = kernel_roofline(s["flops"], s["bytes"],
+                                        s["seconds"])
+    totals = {
+        "calls": sum(s["calls"] for s in per.values()),
+        "flops": sum(s["flops"] for s in per.values()),
+        "bytes": sum(s["bytes"] for s in per.values()),
+        "seconds": sum(s["seconds"] for s in per.values()),
+    }
+    return {"kernels": per, "totals": totals}
+
+
+_ACTIVE: KernelProfiler | None = None
+
+
+def active() -> KernelProfiler | None:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def profile_kernels():
+    """Activate kernel timing for the dynamic extent (not thread-safe —
+    one profiler per process, like jax's own profiler)."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, KernelProfiler()
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = prev
+
+
+def observed(name: str, fn, *args, **kwargs):
+    """The ops.py hook: time the call iff a profiler is active and the
+    operands are concrete (an eager invocation). Otherwise — always,
+    when disabled — fall straight through to the same jitted callable."""
+    prof = _ACTIVE
+    if prof is None or not _eager(args):
+        return fn(*args, **kwargs)
+    import jax
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    seconds = time.perf_counter() - t0
+    flops, nbytes = KERNEL_COSTS[name](*args, **kwargs)
+    prof.record(name, flops, nbytes, seconds)
+    return out

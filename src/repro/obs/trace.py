@@ -1,0 +1,358 @@
+"""Per-round solve telemetry: the elimination-curve tracer (DESIGN.md §14).
+
+The paper's central empirical object is the elimination curve — how many
+candidates survive each round and how many distance computations that
+cost. :class:`SolveTracer` captures it by riding the host-visible
+segment boundaries the fault-tolerant runtime already creates
+(``core/pipelined.py``, DESIGN.md §13): at every boundary the engine is
+*already* synchronising with the host, so the tracer reads the same
+host-resident values and adds **zero extra device→host syncs**.
+
+Determinism contract (property-tested in ``tests/test_obs.py``):
+
+* events carry deterministic values only — round counts, survivor
+  counts, incumbent index/energy, element counts, bound quantiles.
+  **No wall-clock, no hostnames, no pids.** Wall-clock profiling lives
+  in :mod:`repro.obs.profile`, outside the trace;
+* events serialise with sorted keys, no whitespace, shortest-repr
+  floats — the same query + seed yields a **byte-identical** JSONL
+  file across runs, and a kill-and-resume run *appends* to the killed
+  run's file and converges on the byte-identical uninterrupted trace
+  (events are written before the fault hook can raise, mirroring the
+  checkpoint-before-kill ordering);
+* tracing never changes the solve: with ``trace=None`` the engine's
+  segmentation condition is untouched (the disabled path compiles to
+  the exact same program), and with tracing on the values are read at
+  boundaries whose round sequence is bit-identical anyway (PR 7's
+  segmentation-neutrality contract).
+
+Schema ``repro.obs.trace/v1`` — one JSON object per line:
+
+* ``begin``  — solve header: engine, n, d, metric, block;
+* ``round``  — one segment boundary: cumulative ``round``, ``phase``
+  (``full``/``ladder``), ladder ``rung`` size and ``stage`` ordinal,
+  ``survivors``, incumbent index + paper-scale ``energy``, cumulative
+  ``elements`` + ``elements_round`` delta, and ``l_summary`` bound
+  quantiles (the bound-tightness histogram summary);
+* ``heartbeat`` — a RoundWatchdog beat (only when a heartbeat is armed);
+* ``hop``    — a planner degrade/retry hop (``on_error="degrade"``);
+* ``lane``   — a packed ``solve_many`` per-lane summary;
+* ``end``    — final index/energy/elements/rounds/certified/halt_reason.
+
+``sum(elements_round) == SolveReport.elements_computed`` exactly: the
+engine always emits the final boundary, and deltas telescope.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+TRACE_SCHEMA = "repro.obs.trace/v1"
+
+#: event kinds and the keys every event of that kind must carry
+EVENT_KEYS = {
+    "begin": {"kind", "schema", "engine", "n", "metric"},
+    "round": {"kind", "round", "phase", "stage", "rung", "survivors",
+              "incumbent", "energy", "elements", "elements_round",
+              "l_summary"},
+    "heartbeat": {"kind", "round"},
+    "hop": {"kind", "engine", "reason"},
+    "lane": {"kind", "lane", "survivors", "elements"},
+    "end": {"kind", "engine", "index", "energy", "elements", "rounds",
+            "certified", "halt_reason"},
+}
+
+
+def dump_event(event: dict) -> str:
+    """Deterministic single-line JSON (sorted keys, no whitespace)."""
+    return json.dumps(event, sort_keys=True, separators=(",", ":"))
+
+
+def _finite(x) -> float | None:
+    """JSON-safe float: non-finite becomes ``None`` (strict-JSON lines)."""
+    x = float(x)
+    return x if np.isfinite(x) else None
+
+
+def l_summary(l, mask) -> dict | None:
+    """Bound-tightness summary over the live entries: quantiles + mean of
+    the lower-bound vector. float64 quantiles of identical inputs are
+    bit-deterministic, so this stays inside the byte-identity contract."""
+    vals = np.asarray(l, np.float64)[np.asarray(mask, bool)]
+    if vals.size == 0:
+        return None
+    qs = np.quantile(vals, (0.0, 0.25, 0.5, 0.75, 1.0))
+    return {"min": _finite(qs[0]), "q25": _finite(qs[1]),
+            "q50": _finite(qs[2]), "q75": _finite(qs[3]),
+            "max": _finite(qs[4]), "mean": _finite(vals.mean())}
+
+
+class SolveTracer:
+    """Collects trace events in memory and (optionally) streams them to a
+    JSONL file. Events are **per round** regardless of ``every`` — the
+    engine records round telemetry inside its jitted loop and drains it
+    at segment boundaries. ``every`` only requests a specific drain
+    (segment) cadence in rounds when tracing is the sole reason to
+    segment; ``None`` (default) lets the engine amortise the host sync
+    over its usual segment length, and an explicit ``checkpoint_every``
+    always wins.
+    """
+
+    schema = TRACE_SCHEMA
+
+    def __init__(self, path=None, every: int | None = None):
+        self.path = os.fspath(path) if path is not None else None
+        self.every = max(int(every), 1) if every is not None else None
+        self.events: list[dict] = []
+        self._fh = None
+        self._begun = False
+        self.engine_ran = False
+        self._elements_prev = 0
+        self._last_round = -1
+        self._complete = False
+
+    # -- lifecycle ----------------------------------------------------
+    def start_session(self) -> None:
+        """Called by ``solve()`` at entry: a fresh in-memory event list
+        for this solve. Never touches the file — whether the file is
+        truncated or appended is decided by ``begin(resumed=...)``, so
+        a resumed solve keeps the killed run's prefix."""
+        self.close()
+        self.events = []
+        self._begun = False
+        self.engine_ran = False
+        self._elements_prev = 0
+        self._last_round = -1
+        self._complete = False
+
+    def begin(self, *, engine: str, resumed: bool = False,
+              elements: int = 0, round_base: int = -1, **meta) -> None:
+        """Engine entry. Fresh solves truncate the sink and write the
+        ``begin`` header; resumed solves append (the killed run already
+        wrote the header) and re-base the element-delta accounting at
+        the restored cumulative count. ``round_base`` is the restored
+        round counter: a resumed engine may replay a zero-round segment
+        at the restored boundary (the killed run already logged it), so
+        :meth:`segment` drops events at rounds <= this base."""
+        self.engine_ran = True
+        if self._begun:
+            # a degrade/retry hop re-entered with a new engine: keep the
+            # trace rolling in the same session, re-basing the element
+            # deltas at the new engine's starting count
+            self._elements_prev = int(elements)
+            self._last_round = -1
+            self._emit({"kind": "begin", "schema": TRACE_SCHEMA,
+                        "engine": engine, "resumed": False, **meta})
+            return
+        self._begun = True
+        self._elements_prev = int(elements)
+        self._last_round = int(round_base)
+        if resumed and self.path is not None and os.path.exists(self.path):
+            # resuming from the checkpoint of a *finished* solve (the
+            # kill never landed): the trace is already complete, and a
+            # replayed run must not append a second ``end``
+            try:
+                lines = [ln for ln in
+                         open(self.path, encoding="utf-8").read()
+                         .splitlines() if ln.strip()]
+                if lines and json.loads(lines[-1]).get("kind") == "end":
+                    self._complete = True
+            except (OSError, ValueError):    # pragma: no cover
+                pass
+        if self.path is not None:
+            self._fh = open(self.path, "a" if resumed else "w",
+                            encoding="utf-8")
+        if not resumed:
+            self._emit({"kind": "begin", "schema": TRACE_SCHEMA,
+                        "engine": engine, "resumed": False, **meta})
+        self.flush()
+
+    def segment(self, *, round: int, phase: str, stage: int, rung: int,
+                survivors: int, incumbent: int, energy, elements: int,
+                l_summary=None) -> None:
+        """One host-visible segment boundary (>= 1 elimination rounds).
+        A boundary at an already-logged round (a resumed engine's
+        zero-round replay segment) is dropped — the killed run wrote
+        it, and byte-identity with the uninterrupted trace depends on
+        not writing it twice."""
+        elements = int(elements)
+        if int(round) <= self._last_round:
+            self._elements_prev = elements
+            return
+        self._last_round = int(round)
+        self._emit({
+            "kind": "round", "round": int(round), "phase": phase,
+            "stage": int(stage), "rung": int(rung),
+            "survivors": int(survivors), "incumbent": int(incumbent),
+            "energy": _finite(energy) if energy is not None else None,
+            "elements": elements,
+            "elements_round": elements - self._elements_prev,
+            "l_summary": l_summary,
+        })
+        self._elements_prev = elements
+
+    def event(self, kind: str, **payload) -> None:
+        """A free-form deterministic event (``heartbeat``, ``hop``,
+        ``lane``). These are rare, so each is flushed immediately —
+        the dense per-round stream batches via :meth:`flush` instead."""
+        self._emit({"kind": kind, **payload})
+        self.flush()
+
+    def flush(self) -> None:
+        """Push buffered events to disk. Engines call this at segment
+        boundaries *before* their fault hooks run, so a kill at a
+        boundary leaves every earlier event durable (the kill/resume
+        byte-identity contract) without paying one flush per round."""
+        if self._fh is not None:
+            self._fh.flush()
+
+    def end(self, *, engine: str, index: int, energy, elements: int,
+            rounds: int, certified: bool, halt_reason: str = "",
+            **extra) -> None:
+        self._emit({
+            "kind": "end", "engine": engine, "index": int(index),
+            "energy": _finite(energy) if energy is not None else None,
+            "elements": int(elements), "rounds": int(rounds),
+            "certified": bool(certified), "halt_reason": halt_reason,
+            **extra,
+        })
+        self.close()
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    # -- accounting helpers -------------------------------------------
+    def _emit(self, event: dict) -> None:
+        if self._complete:
+            return
+        self.events.append(event)
+        if self._fh is not None:
+            self._fh.write(dump_event(event) + "\n")
+
+    def describe(self) -> dict:
+        """The ``SolveReport.extras["obs"]["trace"]`` summary."""
+        return {"schema": TRACE_SCHEMA, "path": self.path,
+                "n_events": len(self.events), "events": list(self.events)}
+
+
+def resolve_trace(spec) -> SolveTracer | None:
+    """Normalise the ``MedoidQuery.trace`` knob: ``None``/``False`` off,
+    ``True`` an in-memory tracer, a path a JSONL-backed tracer, a
+    :class:`SolveTracer` taken as-is."""
+    if spec is None or spec is False:
+        return None
+    if isinstance(spec, SolveTracer):
+        return spec
+    if spec is True:
+        return SolveTracer()
+    if isinstance(spec, (str, os.PathLike)):
+        return SolveTracer(path=spec)
+    raise ValueError(
+        f"trace must be None, True, a path, or a SolveTracer; "
+        f"got {type(spec).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# validation (the CI golden-trace gate)
+# ---------------------------------------------------------------------------
+def validate_events(events) -> list[str]:
+    """Structural validation of a trace event stream. Returns a list of
+    problems (empty == valid). Checks the schema header, per-kind
+    required keys, and the paper-grounded monotonicity invariants:
+    rounds increase, survivors never increase (bounds only grow and the
+    incumbent only tightens), cumulative elements never decrease, and
+    the per-round deltas telescope to the final element count."""
+    errs = []
+    events = list(events)
+    if not events:
+        return ["empty trace"]
+    if events[0].get("kind") != "begin":
+        errs.append("first event is not 'begin'")
+    elif events[0].get("schema") != TRACE_SCHEMA:
+        errs.append(f"schema {events[0].get('schema')!r} != {TRACE_SCHEMA}")
+    last_round, last_surv, last_elem = -1, None, None
+    delta_sum = 0
+    for i, ev in enumerate(events):
+        kind = ev.get("kind")
+        need = EVENT_KEYS.get(kind)
+        if need is None:
+            errs.append(f"event {i}: unknown kind {kind!r}")
+            continue
+        missing = need - set(ev)
+        if missing:
+            errs.append(f"event {i} ({kind}): missing {sorted(missing)}")
+            continue
+        if kind == "begin" and i > 0:
+            # a degrade hop restarts the engine: rounds/elements re-base
+            last_round, last_surv, last_elem = -1, None, None
+            delta_sum = 0
+        if kind != "round":
+            continue
+        if ev["round"] <= last_round:
+            errs.append(f"event {i}: round {ev['round']} not increasing")
+        last_round = ev["round"]
+        if last_surv is not None and ev["survivors"] > last_surv:
+            errs.append(f"event {i}: survivors grew "
+                        f"{last_surv} -> {ev['survivors']}")
+        last_surv = ev["survivors"]
+        if last_elem is not None and ev["elements"] < last_elem:
+            errs.append(f"event {i}: elements decreased")
+        last_elem = ev["elements"]
+        delta_sum += ev["elements_round"]
+    ends = [ev for ev in events if ev.get("kind") == "end"]
+    rounds = [ev for ev in events if ev.get("kind") == "round"]
+    if ends and rounds:
+        if ends[-1]["elements"] != rounds[-1]["elements"]:
+            errs.append("end.elements != last round.elements")
+        if delta_sum != ends[-1]["elements"]:
+            errs.append(f"sum(elements_round)={delta_sum} != "
+                        f"end.elements={ends[-1]['elements']}")
+    return errs
+
+
+def load_jsonl(path) -> list[dict]:
+    events = []
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                events.append(json.loads(line))
+    return events
+
+
+def compare_structure(events, golden) -> list[str]:
+    """Golden-trace comparison for CI: the live trace must exhibit every
+    event kind the golden trace has, with byte-identical key sets per
+    kind, and the first/last kinds must agree. Numeric values and round
+    *counts* are deliberately not compared — float bits (and hence the
+    exact pivot sequence) drift across BLAS/jax builds; structure is the
+    cross-platform contract, byte-identity is the same-host contract
+    tested in tests/test_obs.py."""
+    errs = []
+    if not events or not golden:
+        return ["empty trace or golden"]
+
+    def _keysets(evs):
+        out = {}
+        for ev in evs:
+            out.setdefault(ev.get("kind"), set()).update(ev)
+        return out
+
+    live_k, gold_k = _keysets(events), _keysets(golden)
+    for kind, gkeys in sorted(gold_k.items()):
+        if kind not in live_k:
+            errs.append(f"kind {kind!r} present in golden, absent live")
+        elif live_k[kind] != gkeys:
+            errs.append(f"kind {kind!r}: keys "
+                        f"{sorted(live_k[kind] ^ gkeys)} drifted")
+    for kind in sorted(set(live_k) - set(gold_k)):
+        errs.append(f"kind {kind!r} absent from golden")
+    if events[0].get("kind") != golden[0].get("kind"):
+        errs.append("first event kind drifted")
+    if events[-1].get("kind") != golden[-1].get("kind"):
+        errs.append("last event kind drifted")
+    return errs

@@ -167,6 +167,33 @@ def min_serve_bytes(cfg, shape, n_chips: int) -> float:
     return (p_bytes + c_bytes) / n_chips
 
 
+def kernel_roofline(flops: float, nbytes: float, elapsed_s: float,
+                    peak_flops: float = PEAK_FLOPS_BF16,
+                    hbm_bw: float = HBM_BW) -> dict:
+    """Place one kernel invocation (or an aggregate of them) on the
+    machine roofline from its analytic FLOP/byte model and measured
+    wall-clock (:mod:`repro.obs.profile` feeds this). ``compute_s`` /
+    ``memory_s`` are the two roofline floors; ``bound`` names the
+    higher one; ``roofline_fraction`` is floor-time / measured-time
+    (dispatch overhead drives it toward 0 on the interpret path)."""
+    compute_s = flops / peak_flops
+    memory_s = nbytes / hbm_bw
+    bound = "compute" if compute_s >= memory_s else "memory"
+    achieved_flops = flops / elapsed_s if elapsed_s > 0 else 0.0
+    achieved_bw = nbytes / elapsed_s if elapsed_s > 0 else 0.0
+    floor = max(compute_s, memory_s)
+    frac = floor / elapsed_s if elapsed_s > 0 else 0.0
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "bound": bound,
+        "achieved_flops": achieved_flops,
+        "achieved_bw": achieved_bw,
+        "arithmetic_intensity": flops / nbytes if nbytes else 0.0,
+        "roofline_fraction": round(frac, 6),
+    }
+
+
 def roofline_terms(cfg, shape, rec: dict) -> dict:
     flops = rec.get("flops") or 0.0
     nbytes = rec.get("bytes_accessed") or 0.0

@@ -242,18 +242,33 @@ class RoundWatchdog:
     launcher-level :class:`~repro.runtime.fault_tolerance.Supervisor`:
     the engine beats once per segment; :meth:`stalled` reports whether
     the gap since the last beat exceeds ``timeout_s`` on the fault
-    clock (so injected stalls trip it deterministically)."""
+    clock (so injected stalls trip it deterministically).
 
-    def __init__(self, timeout_s: float):
+    Heartbeats are first-class observability events (DESIGN.md §14):
+    every beat increments the ``repro_obs_watchdog_beats_total``
+    counter on the default metrics registry, and when a ``sink`` (a
+    :class:`~repro.obs.trace.SolveTracer` or anything with an
+    ``event(kind, **payload)`` method) is attached each beat lands in
+    the trace as a deterministic ``heartbeat`` event — round number
+    only, never wall-clock, so traced solves stay byte-identical."""
+
+    def __init__(self, timeout_s: float, sink=None):
         from repro.runtime.fault_tolerance import (Supervisor,
                                                    SupervisorConfig)
         self.timeout_s = float(timeout_s)
+        self.sink = sink
         self._sup = Supervisor(
             1, SupervisorConfig(heartbeat_timeout_s=float(timeout_s)),
             clock=clock)
 
     def beat(self, n_rounds: int, dt_s: float = 0.0) -> None:
         self._sup.heartbeat(0, int(n_rounds), float(dt_s))
+        from repro.obs.metrics import REGISTRY
+        REGISTRY.counter(
+            "watchdog_beats_total",
+            "RoundWatchdog heartbeats across all solves").inc()
+        if self.sink is not None:
+            self.sink.event("heartbeat", round=int(n_rounds))
 
     def stalled(self) -> bool:
         evicted = self._sup.check()

@@ -34,6 +34,9 @@ import numpy as np
 
 from repro.models import model as M
 
+#: versioned schema of the MedoidServer structured event log
+SERVE_EVENTS_SCHEMA = "repro.obs.serve/v1"
+
 
 # ---------------------------------------------------------------------------
 # medoid serving: budget-aware admission over solve_many
@@ -100,6 +103,36 @@ class MedoidServer:
         self.finished: list[MedoidRequest] = []
         self.steps: list[dict] = []
         self._uid = 0
+        # observability (DESIGN.md §14): a private registry (concurrent
+        # servers must not alias) + a structured event log. Every
+        # isolation decision lands here as a typed event; the human-
+        # readable line in ``req.decisions`` is derived from it.
+        from repro.obs.metrics import MetricsRegistry
+        self.metrics = MetricsRegistry()
+        self.events: list[dict] = []
+
+    # -------------------------------------------------- observability
+    def metrics_text(self) -> str:
+        """The Prometheus-style scrape endpoint: current queue depth,
+        admitted/degraded/quarantined counts, budget utilisation,
+        backoff/retry counters — exposition text format."""
+        self.metrics.gauge(
+            "serve_queue_depth", "requests waiting in the FIFO queue"
+        ).set(len(self.queue))
+        return self.metrics.to_text()
+
+    def _event(self, kind: str, req: "MedoidRequest | None" = None,
+               decision: str | None = None, **fields) -> dict:
+        """Append one structured event (schema ``repro.obs.serve/v1``);
+        mirrors the human-readable ``decision`` line into the request's
+        isolation audit trail."""
+        ev = {"kind": kind, "schema": SERVE_EVENTS_SCHEMA, **fields}
+        if req is not None:
+            ev["uid"] = req.uid
+        self.events.append(ev)
+        if req is not None and decision is not None:
+            req.decisions.append(decision)
+        return ev
 
     # ------------------------------------------------------------ admin
     def submit(self, query) -> int:
@@ -182,40 +215,73 @@ class MedoidServer:
                 self.finished.append(req)
             elif kind == "deferred":
                 n_deferred += 1
-                req.decisions.append(
-                    f"step {step_no}: step deadline blown before this "
-                    "request's bisection half ran; deferred to next step")
+                self._event(
+                    "deferred", req, step=step_no,
+                    decision=(
+                        f"step {step_no}: step deadline blown before this "
+                        "request's bisection half ran; deferred to next "
+                        "step"))
+                self.metrics.counter(
+                    "serve_deferred_total",
+                    "bisection halves deferred past a step deadline").inc()
                 req.not_before_step = step_no + 1
                 requeue.append(req)
             else:                                   # kind == "err"
                 n_failed += 1
                 req.retries += 1
                 req.error = payload
-                req.decisions.append(
-                    f"step {step_no}: attempt {req.retries} failed: "
-                    f"{payload}")
+                self._event(
+                    "failure", req, step=step_no, attempt=req.retries,
+                    error=payload,
+                    decision=(f"step {step_no}: attempt {req.retries} "
+                              f"failed: {payload}"))
+                self.metrics.counter(
+                    "serve_failures_total",
+                    "request attempts that raised").inc()
                 if req.retries > self.max_retries:
                     n_quarantined += 1
                     req.quarantined = True
-                    req.decisions.append(
-                        f"step {step_no}: quarantined after "
-                        f"{req.retries} failed attempts "
-                        f"(max_retries={self.max_retries})")
+                    self._event(
+                        "quarantine", req, step=step_no,
+                        attempts=req.retries,
+                        decision=(
+                            f"step {step_no}: quarantined after "
+                            f"{req.retries} failed attempts "
+                            f"(max_retries={self.max_retries})"))
+                    self.metrics.counter(
+                        "serve_quarantined_total",
+                        "requests tombstoned after max_retries").inc()
                     req.report = self._tombstone(req)
                     req.step = step_no
                     served.append(req)
                     self.finished.append(req)
                 else:
                     backoff = self.backoff_base * (2 ** (req.retries - 1))
-                    req.decisions.append(
-                        f"step {step_no}: requeued with backoff "
-                        f"{backoff} step(s)")
+                    self._event(
+                        "backoff", req, step=step_no, retries=req.retries,
+                        backoff_steps=backoff,
+                        decision=(f"step {step_no}: requeued with backoff "
+                                  f"{backoff} step(s)"))
+                    self.metrics.counter(
+                        "serve_retries_total",
+                        "failed requests requeued for retry").inc()
+                    self.metrics.counter(
+                        "serve_backoff_steps_total",
+                        "cumulative backoff delay in steps").inc(backoff)
                     req.not_before_step = step_no + backoff
                     requeue.append(req)
         if requeue:
             self.queue = sorted(self.queue + requeue, key=lambda r: r.uid)
 
         reports = [r.report for r in served]
+        # cost-model calibration: engine-reported elements vs the
+        # planner's admission estimate, over the exact-admitted requests
+        # actually served (anytime caps and tombstones would skew it)
+        cal = [r for r in served
+               if r.admitted_mode == "exact" and not r.quarantined]
+        est_exact = sum(r.cost_estimate for r in cal)
+        spent_exact = sum(r.report.elements_computed for r in cal)
+        cost_err = (spent_exact / est_exact) if est_exact > 0 else None
         self.steps.append({
             "step": step_no,
             "n_requests": len(batch),
@@ -227,10 +293,34 @@ class MedoidServer:
             "anytime_cap": cap if overflow else 0,
             "estimated_elements": spent_est,
             "spent_elements": spent,
+            "cost_estimate_error": cost_err,
             "buckets": sorted({rep.plan.params["solve_many"]["bucket"]
                                for rep in reports
                                if "solve_many" in rep.plan.params}),
         })
+        mx = self.metrics
+        mx.counter("serve_requests_total",
+                   "requests served, by admitted mode").inc(
+                       len(batch) - len(overflow), mode="exact")
+        if overflow:
+            mx.counter("serve_requests_total",
+                       "requests served, by admitted mode").inc(
+                           len(overflow), mode="anytime")
+        mx.histogram("serve_budget_utilisation",
+                     "spent_elements / budget per step").observe(
+                         spent / self.budget)
+        if cost_err is not None:
+            mx.histogram("serve_cost_estimate_error",
+                         "spent / estimated elements over exact-admitted "
+                         "requests per step").observe(cost_err)
+        mx.gauge("serve_queue_depth",
+                 "requests waiting in the FIFO queue").set(len(self.queue))
+        self._event("step", step=step_no, n_requests=len(batch),
+                    n_exact=len(batch) - len(overflow),
+                    n_anytime=len(overflow), n_failed=n_failed,
+                    n_quarantined=n_quarantined, n_deferred=n_deferred,
+                    estimated_elements=spent_est, spent_elements=spent,
+                    cost_estimate_error=cost_err)
         return served
 
     # ----------------------------------------------------- fault paths

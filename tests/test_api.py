@@ -585,7 +585,7 @@ EXPECTED_QUERY_FIELDS = [
     "X", "metric", "k", "assignments", "topk", "mode", "budget", "delta",
     "warm_idx", "device_policy", "mesh", "seed", "block", "block_schedule",
     "use_kernels", "n_iter", "update", "deadline_s", "on_error",
-    "nonfinite", "engine_opts",
+    "nonfinite", "trace", "engine_opts",
 ]
 
 EXPECTED_REPORT_FIELDS = [

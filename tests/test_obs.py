@@ -1,0 +1,437 @@
+"""Observability subsystem (DESIGN.md §14): traces, metrics, profiling.
+
+The two contracts everything else hangs off:
+
+* **bit-neutrality** — a traced solve returns the exact same answer
+  (index, energy, computed elements, rounds, certificate) as the same
+  solve untraced, for every engine; with ``trace=None`` the engine
+  compiles the exact same program as before the subsystem existed;
+* **byte-determinism** — the same query + seed yields a byte-identical
+  JSONL trace across runs, and a solve killed at any segment boundary
+  and resumed converges on the byte-identical trace of the
+  uninterrupted run (the trace rides PR 7's checkpoint-before-kill
+  ordering).
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st, watchdog
+
+from repro.api import MedoidQuery, solve, solve_many
+from repro.core.pipelined import _trimed_pipelined
+from repro.obs import (REGISTRY, MetricsRegistry, SolveTracer,
+                       profile_kernels, repro_warn, resolve_trace,
+                       validate_events)
+from repro.obs.trace import compare_structure, dump_event, load_jsonl
+from repro.runtime import faults
+
+METRICS = ("l2", "l1")
+
+
+def _X(n, d=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, d)).astype(np.float32)
+
+
+def _sig(rep):
+    """The bit-identity signature of a SolveReport."""
+    return (rep.index, rep.energy, rep.elements_computed, rep.n_rounds,
+            rep.certified)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + exporters
+# ---------------------------------------------------------------------------
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("solves_total", "solves")
+    c.inc()
+    c.inc(2, engine="pipelined")
+    assert c.value() == 1 and c.value(engine="pipelined") == 2
+    with pytest.raises(ValueError, match="only go up"):
+        c.inc(-1)
+    g = reg.gauge("depth")
+    g.set(5)
+    g.dec(2)
+    assert g.value() == 3
+    h = reg.histogram("ratio", buckets=(1.0, 2.0))
+    h.observe(0.5)
+    h.observe(1.5)
+    h.observe(99.0)
+    s = h.value()
+    assert s["count"] == 3 and s["buckets"] == [1, 2]
+
+
+def test_registry_idempotent_and_kind_checked():
+    reg = MetricsRegistry()
+    assert reg.counter("x") is reg.counter("x")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("x")
+
+
+def test_prometheus_text_format():
+    reg = MetricsRegistry()
+    reg.counter("req_total", "requests").inc(3, mode="exact")
+    reg.gauge("depth").set(2)
+    reg.histogram("util", buckets=(0.5, 1.0)).observe(0.75)
+    text = reg.to_text()
+    assert "# HELP repro_obs_req_total requests" in text
+    assert "# TYPE repro_obs_req_total counter" in text
+    assert 'repro_obs_req_total{mode="exact"} 3' in text
+    assert "repro_obs_depth 2" in text
+    assert 'repro_obs_util_bucket{le="0.5"} 0' in text
+    assert 'repro_obs_util_bucket{le="+Inf"} 1' in text
+    assert "repro_obs_util_count 1" in text
+
+
+def test_jsonl_export_deterministic(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("a").inc()
+    reg.histogram("b", buckets=(1.0,)).observe(0.5)
+    t1 = reg.export_jsonl(tmp_path / "m.jsonl")
+    t2 = reg.export_jsonl()
+    assert t1 == t2
+    assert (tmp_path / "m.jsonl").read_text() == t1
+    import json
+    rows = [json.loads(line) for line in t1.splitlines()]
+    assert all(r["schema"] == "repro.obs.metrics/v1" for r in rows)
+    assert all(r["name"].startswith("repro_obs_") for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# the one logger namespace
+# ---------------------------------------------------------------------------
+def test_repro_warn_logs_and_warns(caplog):
+    with caplog.at_level("WARNING", logger="repro"):
+        with pytest.warns(UserWarning, match="sample message"):
+            repro_warn("sample message", logger="repro.core.test")
+    assert any(rec.name == "repro.core.test" and
+               "sample message" in rec.message for rec in caplog.records)
+
+
+def test_legacy_shim_routes_through_repro_logger(caplog):
+    from repro.core.trimed import medoid
+    X = _X(64)
+    with caplog.at_level("WARNING", logger="repro"):
+        with pytest.warns(DeprecationWarning, match="legacy entrypoint"):
+            medoid(X)
+    assert any(rec.name == "repro.api" for rec in caplog.records)
+
+
+def test_block_clamp_warning_still_fires(caplog):
+    from repro.core.distributed import _clamped_block
+    with caplog.at_level("WARNING", logger="repro"):
+        with pytest.warns(UserWarning, match="per-shard column"):
+            _clamped_block(4096, 300, 2, "test_obs")
+    assert any(rec.name == "repro.core.distributed"
+               for rec in caplog.records)
+
+
+# ---------------------------------------------------------------------------
+# solve tracer: structure + accounting
+# ---------------------------------------------------------------------------
+def test_trace_basics_pipelined():
+    X = _X(600, seed=0)
+    rep = solve(MedoidQuery(X, trace=True), plan="pipelined")
+    obs = rep.extras["obs"]
+    events = obs["trace"]["events"]
+    assert validate_events(events) == []
+    assert events[0]["kind"] == "begin"
+    assert events[0]["engine"] == "pipelined"
+    assert events[-1]["kind"] == "end"
+    rounds = [e for e in events if e["kind"] == "round"]
+    assert rounds, "no round events from a segmented engine"
+    # per-round element deltas telescope exactly to the unified cost
+    assert sum(e["elements_round"] for e in rounds) == \
+        rep.elements_computed
+    # survivors never increase (bounds only grow, incumbent only drops)
+    survs = [e["survivors"] for e in rounds]
+    assert all(a >= b for a, b in zip(survs, survs[1:]))
+    # the end event is the report, bit for bit
+    end = events[-1]
+    assert end["index"] == rep.index
+    assert end["energy"] == rep.energy
+    assert end["elements"] == rep.elements_computed
+    assert end["rounds"] == rep.n_rounds
+    assert end["certified"] == rep.certified
+    # bound summaries are well-formed where present
+    for e in rounds:
+        if e["l_summary"] is not None:
+            ls = e["l_summary"]
+            assert ls["min"] <= ls["q50"] <= ls["max"]
+
+
+def test_trace_no_wallclock_keys():
+    """Trace events carry deterministic values only — nothing that
+    smells like a timestamp, hostname or pid."""
+    X = _X(300, seed=1)
+    rep = solve(MedoidQuery(X, trace=True), plan="pipelined")
+    for ev in rep.extras["obs"]["trace"]["events"]:
+        for key in ev:
+            assert not any(tok in key.lower() for tok in
+                           ("time", "clock", "host", "pid", "date"))
+
+
+def test_sharded_trace(tmp_path):
+    X = _X(700, seed=2)
+    path = tmp_path / "shard.jsonl"
+    rep = solve(MedoidQuery(X, device_policy="sharded", trace=str(path)))
+    assert rep.plan.engine == "sharded"
+    events = load_jsonl(path)
+    assert validate_events(events) == []
+    rounds = [e for e in events if e["kind"] == "round"]
+    assert sum(e["elements_round"] for e in rounds) == \
+        rep.elements_computed
+    assert events[0]["shards"] >= 1
+
+
+def test_fallback_engines_get_begin_end():
+    """Engines without native segment traces still produce an honest
+    begin+end pair through the planner."""
+    X = _X(300, seed=3)
+    for engine in ("sequential", "block", "scan"):
+        rep = solve(MedoidQuery(X, trace=True), plan=engine)
+        events = rep.extras["obs"]["trace"]["events"]
+        kinds = [e["kind"] for e in events]
+        assert kinds[0] == "begin" and kinds[-1] == "end"
+        assert events[-1]["index"] == rep.index
+        assert events[-1]["elements"] == rep.elements_computed
+
+
+def test_resolve_trace_validation():
+    assert resolve_trace(None) is None
+    assert resolve_trace(False) is None
+    assert isinstance(resolve_trace(True), SolveTracer)
+    t = SolveTracer()
+    assert resolve_trace(t) is t
+    assert resolve_trace("/tmp/x.jsonl").path == "/tmp/x.jsonl"
+    with pytest.raises(ValueError, match="trace must be"):
+        resolve_trace(42)
+    with pytest.raises(ValueError, match="trace must be"):
+        MedoidQuery(_X(64), trace=42)
+
+
+def test_validate_events_catches_breakage():
+    X = _X(300, seed=4)
+    rep = solve(MedoidQuery(X, trace=True), plan="pipelined")
+    good = rep.extras["obs"]["trace"]["events"]
+    assert validate_events([]) == ["empty trace"]
+    assert validate_events(good[1:])            # missing begin
+    bad = [dict(e) for e in good]
+    for e in bad:
+        if e["kind"] == "round":
+            e["elements_round"] += 1            # break the telescoping
+            break
+    assert any("sum(elements_round)" in p for p in validate_events(bad))
+
+
+# ---------------------------------------------------------------------------
+# bit-neutrality: tracing changes nothing about the answer
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(engine=st.sampled_from(("sequential", "block", "pipelined", "scan")),
+       metric=st.sampled_from(METRICS),
+       seed=st.integers(min_value=0, max_value=3))
+def test_trace_on_off_bit_identical(engine, metric, seed):
+    X = _X(257, seed=seed)
+    with watchdog(300, "trace parity run stalled"):
+        off = solve(MedoidQuery(X, metric=metric), plan=engine)
+        on = solve(MedoidQuery(X, metric=metric, trace=True), plan=engine)
+    assert _sig(on) == _sig(off)
+
+
+def test_trace_on_off_bit_identical_sharded():
+    X = _X(513, seed=1)
+    off = solve(MedoidQuery(X, device_policy="sharded"))
+    on = solve(MedoidQuery(X, device_policy="sharded", trace=True))
+    assert _sig(on) == _sig(off)
+
+
+# ---------------------------------------------------------------------------
+# byte-determinism: same query + seed -> byte-identical JSONL
+# ---------------------------------------------------------------------------
+def test_trace_file_byte_identical_across_runs(tmp_path):
+    X = _X(513, seed=2)
+    blobs = []
+    for run in range(2):
+        path = tmp_path / f"run{run}.jsonl"
+        solve(MedoidQuery(X, trace=str(path)), plan="pipelined")
+        blobs.append(path.read_bytes())
+    assert blobs[0] == blobs[1]
+    assert blobs[0]                       # non-empty
+    for line in blobs[0].decode().splitlines():
+        assert "\t" not in line and line == line.strip()
+
+
+def test_in_memory_events_serialise_identically(tmp_path):
+    """The in-memory event list and the file are the same stream: the
+    file is exactly the dumped events."""
+    X = _X(300, seed=5)
+    path = tmp_path / "t.jsonl"
+    rep = solve(MedoidQuery(X, trace=str(path)), plan="pipelined")
+    events = rep.extras["obs"]["trace"]["events"]
+    dumped = "".join(dump_event(e) + "\n" for e in events)
+    assert path.read_text() == dumped
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.sampled_from([257, 513]),
+       metric=st.sampled_from(METRICS),
+       kill=st.integers(min_value=1, max_value=6),
+       every=st.sampled_from([1, 2]),
+       seed=st.integers(min_value=0, max_value=2))
+def test_kill_and_resume_trace_byte_identical(n, metric, kill, every, seed):
+    """A solve killed at any segment boundary and resumed appends to the
+    killed run's trace file and converges on the byte-identical trace of
+    the uninterrupted run — events are written before the fault hook can
+    raise, mirroring the checkpoint ordering."""
+    import tempfile
+    X = _X(n, seed=seed)
+    with tempfile.TemporaryDirectory() as td, watchdog(
+            300, "kill/resume trace parity stalled"):
+        ref_path = f"{td}/ref.jsonl"
+        _trimed_pipelined(X, metric=metric, checkpoint=f"{td}/ck_ref",
+                          checkpoint_every=every, trace=ref_path)
+        path = f"{td}/killed.jsonl"
+        try:
+            with faults.inject(faults.FaultSpec(fail_round=kill)):
+                _trimed_pipelined(X, metric=metric, checkpoint=f"{td}/ck",
+                                  checkpoint_every=every, trace=path)
+        except faults.FaultError:
+            pass
+        _trimed_pipelined(X, metric=metric, checkpoint=f"{td}/ck",
+                          checkpoint_every=every, resume="require",
+                          trace=path)
+        with open(ref_path, "rb") as fh:
+            ref = fh.read()
+        with open(path, "rb") as fh:
+            got = fh.read()
+        assert got == ref, f"trace diverged after kill@{kill}"
+
+
+# ---------------------------------------------------------------------------
+# packed solve_many lanes + heartbeats + degrade hops
+# ---------------------------------------------------------------------------
+def test_solve_many_lane_traces():
+    qs = [MedoidQuery(_X(128, seed=s), trace=True) for s in range(3)]
+    reps = solve_many(qs)
+    for j, rep in enumerate(reps):
+        events = rep.extras["obs"]["trace"]["events"]
+        kinds = [e["kind"] for e in events]
+        assert kinds == ["begin", "lane", "end"]
+        lane = events[1]
+        assert lane["lane"] == j
+        assert lane["elements"] == rep.elements_computed
+        assert events[-1]["index"] == rep.index
+
+
+def test_heartbeat_events_in_trace():
+    X = _X(300, seed=6)
+    tracer = SolveTracer()
+    before = REGISTRY.counter("watchdog_beats_total").value()
+    r = _trimed_pipelined(X, heartbeat_timeout_s=100.0, trace=tracer)
+    beats = [e for e in tracer.events if e["kind"] == "heartbeat"]
+    assert beats, "no heartbeat events with a watchdog armed"
+    assert all(set(e) == {"kind", "round"} for e in beats)
+    assert REGISTRY.counter("watchdog_beats_total").value() >= \
+        before + len(beats)
+    assert validate_events(tracer.events) == []
+    assert tracer.events[-1]["index"] == r.index
+
+
+def test_degrade_hop_recorded_in_trace():
+    X = _X(513, seed=7)
+    ref = solve(MedoidQuery(X), plan="pipelined")
+    with faults.inject(faults.FaultSpec(fail_round=1, fail_once=True)):
+        rep = solve(MedoidQuery(X, on_error="degrade", trace=True),
+                    plan="pipelined")
+    events = rep.extras["obs"]["trace"]["events"]
+    kinds = [e["kind"] for e in events]
+    assert "hop" in kinds
+    hop = next(e for e in events if e["kind"] == "hop")
+    assert hop["engine"] == "scan"
+    assert validate_events(events) == []
+    assert rep.index == ref.index
+    before = REGISTRY.counter("degrade_hops_total").value(engine="scan")
+    assert before >= 1
+
+
+# ---------------------------------------------------------------------------
+# kernel profiling + roofline wiring
+# ---------------------------------------------------------------------------
+def test_profiler_times_eager_kernels():
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    X = jnp.asarray(_X(256, d=8), jnp.float32)
+    with profile_kernels() as prof:
+        ops.pairwise_distances(X[:16], X)
+        ops.block_energies(X[:16], X)
+    assert [r["kernel"] for r in prof.records] == \
+        ["pairwise_distances", "block_energies"]
+    for r in prof.records:
+        assert r["flops"] > 0 and r["bytes"] > 0 and r["seconds"] > 0
+    summ = prof.summary()
+    assert set(summ["kernels"]) == {"pairwise_distances", "block_energies"}
+    roof = summ["kernels"]["pairwise_distances"]["roofline"]
+    assert set(roof) >= {"compute_s", "memory_s", "bound",
+                         "achieved_flops", "achieved_bw",
+                         "roofline_fraction"}
+    assert roof["bound"] in ("compute", "memory")
+    assert summ["totals"]["calls"] == 2
+
+
+def test_profiler_results_match_unprofiled():
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    X = jnp.asarray(_X(200, d=8), jnp.float32)
+    base = np.asarray(ops.pairwise_distances(X[:8], X))
+    with profile_kernels():
+        prof_out = np.asarray(ops.pairwise_distances(X[:8], X))
+    np.testing.assert_array_equal(base, prof_out)
+
+
+def test_profiler_surfaces_in_report_extras():
+    X = _X(300, seed=8)
+    with profile_kernels():
+        rep = solve(MedoidQuery(X), plan="pipelined")
+    obs = rep.extras["obs"]
+    assert "kernels" in obs
+    assert "totals" in obs["kernels"]
+    # per-report isolation: a second profiled solve reports only its own
+    # records, not the first solve's
+    with profile_kernels():
+        rep2 = solve(MedoidQuery(X), plan="pipelined")
+    assert rep2.extras["obs"]["kernels"]["totals"]["calls"] == \
+        rep.extras["obs"]["kernels"]["totals"]["calls"]
+
+
+def test_kernel_roofline_math():
+    from repro.roofline.analysis import kernel_roofline
+    r = kernel_roofline(1e12, 1e9, 1.0, peak_flops=1e12, hbm_bw=1e12)
+    assert r["bound"] == "compute"
+    assert r["compute_s"] == 1.0
+    assert r["achieved_flops"] == 1e12
+    assert r["arithmetic_intensity"] == 1000.0
+    r2 = kernel_roofline(1e6, 1e12, 0.5, peak_flops=1e12, hbm_bw=1e9)
+    assert r2["bound"] == "memory"
+    assert r2["achieved_bw"] == 2e12
+
+
+# ---------------------------------------------------------------------------
+# golden-trace structural comparison (the CI gate's comparator)
+# ---------------------------------------------------------------------------
+def test_compare_structure_accepts_self_and_rejects_drift():
+    X = _X(300, seed=9)
+    rep = solve(MedoidQuery(X, trace=True), plan="pipelined")
+    events = rep.extras["obs"]["trace"]["events"]
+    assert compare_structure(events, events) == []
+    # value drift is fine (different BLAS), structure drift is not
+    mutated = [dict(e) for e in events]
+    for e in mutated:
+        if e["kind"] == "round":
+            e["energy"] = 123.456
+    assert compare_structure(mutated, events) == []
+    dropped = [dict(e) for e in events]
+    for e in dropped:
+        e.pop("l_summary", None)
+    assert compare_structure(dropped, events)

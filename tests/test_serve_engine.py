@@ -148,3 +148,85 @@ def test_server_under_watchdog():
         finished = srv.run()
     assert len(finished) == len(_mixed_queries())
     assert all(r.report is not None for r in finished)
+
+
+# ---------------------------------------------------------------------------
+# observability: calibration metric, metrics endpoint, structured events
+# ---------------------------------------------------------------------------
+def test_cost_estimate_error_within_2x():
+    """The step summary's ``cost_estimate_error`` (engine-reported spent
+    elements over the planner's admission estimate, exact-admitted
+    requests only) stays within the cost model's calibrated 2x bound —
+    the same bound tests/test_api.py pins per-engine."""
+    srv = MedoidServer(budget=1e9)
+    for q in _mixed_queries():
+        srv.submit(q)
+    srv.step()
+    summary = srv.steps[0]
+    err = summary["cost_estimate_error"]
+    assert err is not None
+    assert 0.5 <= err <= 2.0, (
+        f"cost model drifted: spent/estimated = {err}")
+    # the ratio is consistent with the raw step accounting
+    assert summary["estimated_elements"] > 0
+    assert summary["spent_elements"] > 0
+
+
+def test_metrics_text_endpoint():
+    srv = MedoidServer(budget=1e9)
+    for s in range(3):
+        srv.submit(MedoidQuery(_X(128, seed=s)))
+    srv.step()
+    text = srv.metrics_text()
+    assert "# TYPE repro_obs_serve_requests_total counter" in text
+    assert 'repro_obs_serve_requests_total{mode="exact"} 3' in text
+    assert "# TYPE repro_obs_serve_queue_depth gauge" in text
+    assert "repro_obs_serve_queue_depth 0" in text
+    assert "repro_obs_serve_budget_utilisation_count 1" in text
+    assert "repro_obs_serve_cost_estimate_error_sum" in text
+
+
+def test_structured_events_replace_decisions():
+    """Failure handling emits typed events (schema repro.obs.serve/v1)
+    whose human-readable mirror is what lands in ``req.decisions`` —
+    the audit trail keeps its strings, the event log carries the
+    structure."""
+    from repro.runtime import faults
+    from repro.serve.engine import SERVE_EVENTS_SCHEMA
+
+    srv = MedoidServer(budget=1e9, max_retries=0)
+    X_bad = _X(128, seed=0)
+    srv.submit(MedoidQuery(X_bad))
+    with faults.inject(faults.FaultSpec()):
+        faults.mark_poison(X_bad)
+        with watchdog(300, "poisoned step stalled"):
+            served = srv.step()
+    kinds = [e["kind"] for e in srv.events]
+    assert "failure" in kinds and "quarantine" in kinds
+    assert kinds[-1] == "step"
+    assert all(e["schema"] == SERVE_EVENTS_SCHEMA for e in srv.events)
+    fail = next(e for e in srv.events if e["kind"] == "failure")
+    assert fail["uid"] == served[0].uid and fail["attempt"] == 1
+    # the human strings the fault tests pin are still on the request
+    assert any("attempt 1 failed" in d for d in served[0].decisions)
+    assert any("quarantined after" in d for d in served[0].decisions)
+    text = srv.metrics_text()
+    assert "repro_obs_serve_failures_total 1" in text
+    assert "repro_obs_serve_quarantined_total 1" in text
+
+
+def test_backoff_events_and_counters():
+    from repro.runtime import faults
+
+    srv = MedoidServer(budget=1e9, max_retries=2, backoff_base=1)
+    X_bad = _X(128, seed=1)
+    srv.submit(MedoidQuery(X_bad))
+    with faults.inject(faults.FaultSpec()):
+        faults.mark_poison(X_bad)
+        with watchdog(300, "backoff step stalled"):
+            srv.step()
+    backs = [e for e in srv.events if e["kind"] == "backoff"]
+    assert len(backs) == 1 and backs[0]["backoff_steps"] == 1
+    text = srv.metrics_text()
+    assert "repro_obs_serve_retries_total 1" in text
+    assert "repro_obs_serve_backoff_steps_total 1" in text
