@@ -1,0 +1,138 @@
+"""Streaming index economy: amortised repair cost vs fresh re-solve.
+
+The streaming index (``repro.stream``, DESIGN.md §15) claims that a
+churning dataset can be served exactly — every ``query()`` bit-for-bit
+a fresh ``solve()`` — at a fraction of re-solve cost. This bench
+measures that fraction: starting from a solved index, a stream of
+single-point op+query cycles (delete one random row, insert one random
+row, query) runs until ``turnover`` of the dataset has churned, and
+the repair cost is read off the index's own accounting (the unified
+computed-row currency every engine reports).
+
+``vs_fresh_ratio`` is the headline: mean repair elements per *query*
+over the elements a fresh pipelined solve of the same set computes —
+i.e. what serving the stream cost relative to re-solving at every
+query. ``check_regression.py`` gates it absolutely (``<= 0.15`` at 1%
+turnover) and gates ``amortized_elements_per_op`` against the
+committed baseline; ``exact`` (final query vs fresh solve parity,
+index/energy/certificate) is gated at exactly 1 — economy numbers from
+an inexact index would be meaningless.
+
+The first cycles after a build pay a warm-up slab: rows compacted away
+by the sub-quadratic build carry only the incumbent-energy bound, so
+the first deletes re-admit a slab whose exact energies the repair then
+caches — visible as ``full_resolves``/high early cost, amortised out
+by steady state (~1 row per op). The turnover sweep in full mode shows
+where amortisation stops winning.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .common import RESULTS_DIR, save_csv
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_stream.json"
+
+FIELDS = ["config", "n", "d", "metric", "turnover", "ops", "queries",
+          "repair_elements", "fresh_elements",
+          "amortized_elements_per_op", "vs_fresh_ratio",
+          "full_resolves", "invalidated", "exact"]
+
+
+def json_path_for(mode: str | None) -> Path:
+    """Smoke runs must not clobber the committed perf-trajectory file."""
+    if mode == "smoke":
+        return RESULTS_DIR / "BENCH_stream_smoke.json"
+    return JSON_PATH
+
+
+def _bench_config(config, n, d, metric, turnover, seed=0):
+    from repro.core.pipelined import _trimed_pipelined
+    from repro.stream import MedoidIndex
+
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    idx = MedoidIndex.from_data(X, metric=metric)
+    idx.query()                       # the build itself is not churn
+
+    cycles = max(1, int(round(turnover * n)))
+    before = idx.stats["elements_total"]
+    resolves0 = idx.stats["full_resolves"]
+    for _ in range(cycles):           # one op = one single-point change
+        pos = int(rng.integers(0, idx.n))
+        X = np.delete(X, pos, axis=0)
+        idx.delete([pos])
+        row = rng.standard_normal((1, d)).astype(np.float32)
+        X = np.concatenate([X, row])
+        idx.insert(row)
+        idx.query()
+    repair = float(idx.stats["elements_total"] - before)
+
+    fresh = _trimed_pipelined(X, metric=metric)
+    res = idx.query()
+    exact = int((res.index, res.energy, res.certified)
+                == (fresh.index, fresh.energy, fresh.certified))
+    ops = 2 * cycles
+    return {
+        "config": config, "n": n, "d": d, "metric": metric,
+        "turnover": turnover, "ops": ops, "queries": cycles,
+        "repair_elements": round(repair, 1),
+        "fresh_elements": int(fresh.n_computed),
+        "amortized_elements_per_op": round(repair / ops, 3),
+        "vs_fresh_ratio": round(repair / cycles / fresh.n_computed, 4),
+        "full_resolves": int(idx.stats["full_resolves"] - resolves0),
+        "invalidated": int(idx.stats["invalidated"]),
+        "exact": exact,
+    }
+
+
+def run(quick: bool = True, mode: str | None = None):
+    """Returns ``(rows, csv_path)`` like every bench; also writes the
+    ``bench_stream/v1`` JSON."""
+    if mode == "smoke":
+        configs = [("smoke-1k", 1024, 3, "l2", 0.01),
+                   ("smoke-1k-2pct", 1024, 3, "l2", 0.02)]
+    elif quick:
+        configs = [("quick-4k", 4096, 2, "l2", 0.01)]
+    else:
+        # the acceptance cell (8192, d=2, l2, 1%) plus a turnover sweep
+        configs = [("full-8k", 8192, 2, "l2", t)
+                   for t in (0.005, 0.01, 0.02, 0.05)]
+
+    RESULTS_DIR.mkdir(exist_ok=True)
+    rows, records = [], []
+    for config, n, d, metric, turnover in configs:
+        rec = _bench_config(config, n, d, metric, turnover)
+        records.append(rec)
+        rows.append([rec[f] for f in FIELDS])
+        print(f"  {config}: n={n} turnover={turnover:.1%} repair "
+              f"{rec['repair_elements']:.0f} vs fresh "
+              f"{rec['fresh_elements']}/query "
+              f"({rec['vs_fresh_ratio']:.3f}x, exact={rec['exact']})")
+
+    payload = {"schema": "bench_stream/v1", "fields": FIELDS,
+               "records": records,
+               "methodology": "warm index; turnover*n single-point "
+                              "delete+insert cycles, query after each; "
+                              "repair cost from the index's computed-"
+                              "row accounting; vs_fresh = mean repair "
+                              "elements/query over fresh n_computed; "
+                              "exactness asserted against a fresh "
+                              "pipelined solve of the final set"}
+    out_json = json_path_for(mode)
+    out_json.parent.mkdir(exist_ok=True)
+    out_json.write_text(json.dumps(payload, indent=1) + "\n")
+    csv_name = "stream_smoke" if mode == "smoke" else "stream"
+    path = save_csv(csv_name, FIELDS, rows)
+    return rows, path
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows, path = run(quick="--full" not in sys.argv,
+                     mode="smoke" if "--smoke" in sys.argv else None)
+    print(f"wrote {path}")

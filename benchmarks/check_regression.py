@@ -29,6 +29,13 @@ deterministic work counters the engines are built around:
   wall-clock over tracing off. This one is a ratio of two walls on the
   *same* machine in the *same* process, so it is gated absolutely, not
   against a committed baseline.
+* ``bench_stream``: ``amortized_elements_per_op`` / ``repair_elements``
+  (the streaming index's churn-repair cost) against the baseline, plus
+  two **absolute** gates — ``exact == 1`` (every record must match a
+  fresh solve bit-for-bit) and ``vs_fresh_ratio <=
+  STREAM_VS_FRESH_MAX`` (repair must stay under 15% of re-solving at
+  every query). Both are properties of the run itself, deterministic
+  for the seeded stream.
 
 Records are matched by their identity fields; a record present in the
 baseline but missing from the current run also fails (an engine cell
@@ -38,7 +45,7 @@ win). Regenerate the baselines deliberately with::
     PYTHONPATH=src python -m benchmarks.run --smoke
     cp results/BENCH_trimed_smoke.json results/BENCH_bandit_smoke.json \\
         results/BENCH_serve_smoke.json results/BENCH_obs_smoke.json \\
-        benchmarks/baselines/
+        results/BENCH_stream_smoke.json benchmarks/baselines/
     cp results/TRACE_smoke.jsonl benchmarks/baselines/TRACE_golden.jsonl
 
 (then halve the serve baseline's speedup field by hand if the run was on
@@ -56,6 +63,7 @@ RESULTS_DIR = ROOT / "results"
 
 TOLERANCE = 0.10          # >10% growth of a cost counter fails the gate
 OBS_OVERHEAD_MAX = 1.05   # tracing on must stay within 5% of tracing off
+STREAM_VS_FRESH_MAX = 0.15  # streaming repair <= 15% of re-solve/query
 
 # file -> (identity fields, lower-is-better cost fields,
 #          higher-is-better throughput fields)
@@ -72,6 +80,11 @@ GATES = {
     "BENCH_obs_smoke.json": (("config", "n", "d"),
                              ("elements",),
                              ()),
+    "BENCH_stream_smoke.json": (("config", "n", "d", "metric",
+                                 "turnover"),
+                                ("amortized_elements_per_op",
+                                 "repair_elements"),
+                                ()),
 }
 
 
@@ -93,6 +106,35 @@ def check_obs_overhead() -> list[str]:
                 f"BENCH_obs_smoke.json: {r.get('config')} tracing "
                 f"overhead {ratio}x exceeds the {OBS_OVERHEAD_MAX}x "
                 "ceiling (tracing must stay <=5% of solve wall-clock)")
+    return failures
+
+
+def check_stream_economy() -> list[str]:
+    """Absolute gates on the streaming index smoke: every record must
+    be ``exact`` (bit-for-bit fresh-solve parity — economy numbers
+    from an inexact index are meaningless) and serve churn at
+    ``vs_fresh_ratio <= STREAM_VS_FRESH_MAX`` (no baseline involved —
+    both are properties of the run itself)."""
+    cur_path = RESULTS_DIR / "BENCH_stream_smoke.json"
+    if not cur_path.exists():
+        return [f"BENCH_stream_smoke.json: missing {cur_path} "
+                "(run `python -m benchmarks.run --smoke` first)"]
+    failures = []
+    for r in json.loads(cur_path.read_text()).get("records", []):
+        cfg = r.get("config")
+        if r.get("exact") != 1:
+            failures.append(
+                f"BENCH_stream_smoke.json: {cfg} is NOT exact — "
+                "streaming query() diverged from a fresh solve")
+        ratio = r.get("vs_fresh_ratio")
+        if ratio is None:
+            failures.append(f"BENCH_stream_smoke.json: {cfg} missing "
+                            "vs_fresh_ratio")
+        elif float(ratio) > STREAM_VS_FRESH_MAX:
+            failures.append(
+                f"BENCH_stream_smoke.json: {cfg} repair cost "
+                f"{ratio}x of a fresh solve exceeds the "
+                f"{STREAM_VS_FRESH_MAX}x ceiling")
     return failures
 
 
@@ -147,6 +189,7 @@ def main(argv=None) -> int:
     for name, (id_fields, cost_fields, tp_fields) in GATES.items():
         failures.extend(check_file(name, id_fields, cost_fields, tp_fields))
     failures.extend(check_obs_overhead())
+    failures.extend(check_stream_economy())
     if failures:
         print("PERF REGRESSION GATE: FAIL")
         for f in failures:

@@ -30,8 +30,8 @@ def main(argv=None):
 
     from . import (bench_bandit, bench_batched, bench_faults, bench_fig3,
                    bench_kernels, bench_obs, bench_serve, bench_sme_init,
-                   bench_table1, bench_table2, bench_trimed,
-                   roofline_report)
+                   bench_stream, bench_table1, bench_table2,
+                   bench_trimed, roofline_report)
 
     if args.smoke:
         # the benches now route every engine through repro.api.solve;
@@ -50,7 +50,8 @@ def main(argv=None):
         checks = [(bench_trimed, "bench_trimed/v1"),
                   (bench_bandit, "bench_bandit/v1"),
                   (bench_serve, "bench_serve/v1"),
-                  (bench_obs, "bench_obs/v1")]
+                  (bench_obs, "bench_obs/v1"),
+                  (bench_stream, "bench_stream/v1")]
         for bench, schema in checks:
             rows, path = bench.run(quick=True, mode="smoke")
             json_path = bench.json_path_for("smoke")
@@ -91,6 +92,7 @@ def main(argv=None):
         "serve_throughput": bench_serve.run,
         "fault_overhead": bench_faults.run,
         "obs_overhead": bench_obs.run,
+        "stream_churn": bench_stream.run,
         "sme_init": bench_sme_init.run,
         "kernels": bench_kernels.run,
         "roofline": roofline_report.run,

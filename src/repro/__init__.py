@@ -5,9 +5,9 @@ The public surface is :mod:`repro.api` — one declarative front door
 the first-class ``Metric`` registry. Layers underneath: core (the
 paper's engines), bandit (anytime / budgeted queries: UCB racing +
 sequential halving + the exact-finisher hybrid), kernels (Pallas),
-models (arch zoo), distributed (sharding), train/serve (drivers),
-data/optim/checkpoint/runtime (substrate), launch (mesh + dry-run),
-roofline (perf analysis).
+models (arch zoo), stream (exact churn maintenance), train/serve
+(drivers), data/optim/checkpoint/runtime (substrate), launch (mesh +
+shardings + dry-run), roofline (perf analysis).
 """
 from . import compat  # noqa: F401  (installs jax<0.5 mesh-API shims)
 from .api import (  # noqa: F401

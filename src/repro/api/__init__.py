@@ -26,9 +26,11 @@ from .batch import solve_many
 
 __all__ = [
     "ENGINES",
+    "MedoidIndex",
     "MedoidQuery",
     "Metric",
     "Plan",
+    "SlidingWindowIndex",
     "SolveReport",
     "available_metrics",
     "get_metric",
@@ -40,6 +42,18 @@ __all__ = [
     "solve_many",
     "unregister_metric",
 ]
+
+_LAZY = {"MedoidIndex": "repro.stream.index",
+         "SlidingWindowIndex": "repro.stream.window"}
+
+
+def __getattr__(name: str):
+    # the streaming index imports api.metrics/api.planner, so exporting
+    # it here eagerly would be circular — resolve on first access
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def _warn_legacy(name: str, hint: str = "") -> None:

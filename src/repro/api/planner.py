@@ -1002,3 +1002,37 @@ def _solve_degraded(query: MedoidQuery, p: Plan, err) -> SolveReport:
                         eng, type(e2).__name__, e2)
             last = e2
     raise last
+
+
+# ---------------------------------------------------------------------------
+# streaming-index repair accounting (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+def plan_repair(X, *, metric: str = "l2", block: int = 128,
+                pending_ops: int = 0, invalidated: int = 0,
+                elements: float = 0.0) -> Plan:
+    """The :class:`~repro.stream.MedoidIndex` repair plan: not a routing
+    decision (the index always repairs through the pipelined ladder) but
+    the accounting record an admission scheduler budgets against —
+    ``params["repair"]`` holds the churn batch size, the invalidated
+    survivor count (``-1`` when the repair fell back to a full
+    re-solve), the elements actually spent, and the planner's fresh
+    re-solve estimate for the same set, so ``vs_fresh`` is the measured
+    repair saving."""
+    q = MedoidQuery(X=X, metric=metric, block=int(block))
+    fresh = float(_estimate_cost(q, "pipelined", {}))
+    repair = {
+        "pending_ops": int(pending_ops),
+        "invalidated": int(invalidated),
+        "elements": float(elements),
+        "fresh_estimate": fresh,
+        "vs_fresh": float(elements) / fresh if fresh > 0 else None,
+    }
+    reason = (f"stream repair: {pending_ops} churn op(s), "
+              f"{invalidated} invalidated survivor(s), "
+              f"{elements:.1f} elements vs {fresh:.1f} fresh-solve "
+              "estimate"
+              if invalidated >= 0 else
+              f"stream repair fell back to a full re-solve after "
+              f"{pending_ops} churn op(s)")
+    return Plan("stream_repair", (reason,), {"repair": repair},
+                cost_estimate=float(elements))

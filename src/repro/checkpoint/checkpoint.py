@@ -6,7 +6,8 @@ Layout:  <dir>/step_<N>/
          <dir>/LATEST             (atomic pointer file)
 
 * Writes go to ``step_<N>.tmp`` then ``os.replace`` -> crash-safe.
-* ``keep_last`` old checkpoints are retained, older ones pruned.
+* ``keep_last`` old checkpoints are retained, older ones pruned
+  (``keep_last=None`` keeps everything; values below 1 are refused).
 * Restore is *elastic*: arrays are saved as full logical values and
   re-sharded onto whatever mesh the restoring job brings up (the mesh
   may have a different data-axis size after a failure — DESIGN.md §6).
@@ -28,7 +29,14 @@ import numpy as np
 
 
 class Checkpointer:
-    def __init__(self, directory: str, keep_last: int = 3):
+    def __init__(self, directory: str, keep_last: int | None = 3):
+        if keep_last is not None and keep_last < 1:
+            # keep_last=0 would slice steps[:-0] == steps[:0] and prune
+            # nothing — silently acting as "unlimited"; refuse instead
+            # of guessing (None is the explicit unlimited spelling)
+            raise ValueError(
+                f"keep_last must be >= 1 or None (unlimited), got "
+                f"{keep_last}")
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep_last = keep_last
@@ -131,6 +139,8 @@ class Checkpointer:
         self._prune()
 
     def _prune(self):
+        if self.keep_last is None:       # unlimited retention
+            return
         steps = sorted(self.all_steps())
         for s in steps[: -self.keep_last]:
             shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)

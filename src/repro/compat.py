@@ -1,7 +1,7 @@
 """Version-compat shims for jax < 0.5 mesh/sharding APIs.
 
 The distributed layer (``core/distributed.py``, ``models/moe.py``,
-``distributed/pipeline.py``, ``launch/mesh.py``) is written against the
+``launch/mesh.py``) is written against the
 modern mesh API: ``jax.sharding.AxisType``, ``jax.make_mesh(...,
 axis_types=...)``, ``jax.set_mesh`` (ambient mesh), ``jax.shard_map``
 (with ``check_vma``) and ``jax.sharding.get_abstract_mesh``. jax 0.4.x

@@ -70,6 +70,7 @@ def _lane_stage(X, l0, warm_arr, warm_valid, budget, block, metric,
         jnp.zeros((0, n), X.dtype),               # prev rows (jnp carry)
         jnp.asarray(0, jnp.int32),                # n_computed
         jnp.asarray(0, jnp.int32),                # n_rounds
+        jnp.zeros(n, X.dtype),                    # esum energy cache
     )
     round_fn = functools.partial(_pipe_round0, X, x_sq, n, metric,
                                  False, None, budget)
@@ -93,7 +94,8 @@ def _summarise(state):
     ``lo`` is the certificate floor: min live lower bound (or the
     incumbent itself when none survive) — the true optimum lies in
     ``[lo, e_cl]``, deterministically."""
-    (l, alive, e_cl, m_cl, _pi, _pe, _pv, _d, n_comp, n_rounds) = state
+    (l, alive, e_cl, m_cl, _pi, _pe, _pv, _d, n_comp, n_rounds,
+     _es) = state
     live_mask = jnp.logical_and(alive, l < e_cl)
     live = live_mask.sum()
     lo = jnp.where(live_mask, l, jnp.inf).min(axis=-1)

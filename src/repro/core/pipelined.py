@@ -129,8 +129,16 @@ def _pipe_round0(X, x_sq, n, metric, use_kernels, interpret, budget, state,
     bounds lag one round). jnp path: the previous block's distance rows
     ride the loop carry, so the fold is elementwise and happens *before*
     selection (no lag). ``forced_idx`` overrides candidate selection (the
-    warm-seed round used by the bandit hybrid's finisher)."""
-    (l, alive, e_cl, m_cl, pidx, pe, pv, dprev, n_comp, n_rounds) = state
+    warm-seed round used by the bandit hybrid's finisher).
+
+    The trailing carry slot ``esum`` is the per-row **energy cache**
+    (DESIGN.md §15): every computed pivot's raw ``S(i)`` column sum,
+    scattered as a side buffer so the persisted ``SolveState`` carries
+    the exact contributions streaming churn repair delta-adjusts. It
+    never feeds back into the round math — bit-identity of the
+    elimination sequence is untouched."""
+    (l, alive, e_cl, m_cl, pidx, pe, pv, dprev, n_comp, n_rounds,
+     esum) = state
 
     if not use_kernels:
         # fold previous block from the carried rows, then select
@@ -166,14 +174,17 @@ def _pipe_round0(X, x_sq, n, metric, use_kernels, interpret, budget, state,
     alive = alive.at[idx].set(jnp.where(valid, False, alive[idx]))
     n_comp = n_comp + valid.sum()
     pe = jnp.where(valid, e_blk, 0.0)
+    # energy cache: invalid slots route out of bounds and drop
+    esum = esum.at[jnp.where(valid, idx, n)].set(e_sums, mode="drop")
     return (l, alive, e_cl, m_cl, idx, pe, valid, dnew, n_comp,
-            n_rounds + 1)
+            n_rounds + 1, esum)
 
 
 def _pad_prev(state, block, has_carry):
     """Pad the previous-block carry up to the steady-state width so the
     while_loop state shape is invariant."""
-    (l, alive, e_cl, m_cl, pidx, pe, pv, dprev, n_comp, n_rounds) = state
+    (l, alive, e_cl, m_cl, pidx, pe, pv, dprev, n_comp, n_rounds,
+     esum) = state
     pad = block - pidx.shape[0]
     if pad:
         pidx = jnp.pad(pidx, (0, pad))
@@ -181,7 +192,8 @@ def _pad_prev(state, block, has_carry):
         pv = jnp.pad(pv, (0, pad))
         if has_carry:
             dprev = jnp.pad(dprev, ((0, pad), (0, 0)))
-    return (l, alive, e_cl, m_cl, pidx, pe, pv, dprev, n_comp, n_rounds)
+    return (l, alive, e_cl, m_cl, pidx, pe, pv, dprev, n_comp, n_rounds,
+            esum)
 
 
 def _live_count(l, alive, e_cl):
@@ -279,6 +291,7 @@ def _stage0_init(X, l0, warm_arr, budget, block, warm, metric, use_kernels,
         jnp.zeros((0, n), X.dtype),               # prev rows (jnp carry)
         jnp.asarray(0, jnp.int32),                # n_computed
         jnp.asarray(0, jnp.int32),                # n_rounds
+        jnp.zeros(n, X.dtype),                    # esum energy cache
     )
     round_fn = functools.partial(_pipe_round0, X, x_sq, n, metric,
                                  use_kernels, interpret, budget)
@@ -354,7 +367,7 @@ def _stage_round(X, Xs, surv_idx, x_sq, n, metric, use_kernels,
     the ``M`` survivor columns, then stream ``X`` once for the new
     block's exact energies."""
     (l_s, alive_s, e_cl, m_cl, pidx, pe, pv, dprev_s, n_comp, n_rounds,
-     fold_cols) = state
+     fold_cols, esum) = state
     m = Xs.shape[0]
 
     # 1. fold previous block — bound tightening over M, not N
@@ -389,8 +402,11 @@ def _stage_round(X, Xs, surv_idx, x_sq, n, metric, use_kernels,
     alive_s = alive_s.at[pos].set(jnp.where(valid, False, alive_s[pos]))
     n_comp = n_comp + valid.sum()
     pe = jnp.where(valid, e_blk, 0.0)
+    # energy cache at *global* row indices (idx may alias the buffer's
+    # empty-slot zeros when invalid — route those out of bounds)
+    esum = esum.at[jnp.where(valid, idx, n)].set(e_sums, mode="drop")
     return (l_s, alive_s, e_cl, m_cl, idx, pe, valid, dnew_s, n_comp,
-            n_rounds + 1, fold_cols)
+            n_rounds + 1, fold_cols, esum)
 
 
 @functools.partial(
@@ -665,11 +681,11 @@ def _trimed_pipelined(
                 elements=ncmp, l_summary=ls)
         tracer.flush()   # durable before the fault hook can kill us
 
-    def _save(phase, surv_idx_d, state11):
+    def _save(phase, surv_idx_d, state12):
         if ck is None:
             return
         (l_c, alive_c, e_cl, m_cl, pidx, pe, pv, dprev, n_comp, n_rounds,
-         fold_cols) = state11
+         fold_cols, esum) = state12
         save_state(ck, SolveState(
             phase=phase, n_stages=n_stages, m_out=m_out, is_floor=is_floor,
             surv_idx=np.asarray(surv_idx_d) if phase == PHASE_LADDER
@@ -679,7 +695,8 @@ def _trimed_pipelined(
             pidx=np.asarray(pidx), pe=np.asarray(pe), pv=np.asarray(pv),
             dprev=np.asarray(dprev), n_comp=np.asarray(n_comp),
             n_rounds=np.asarray(n_rounds),
-            fold_cols=np.asarray(fold_cols)), fp)
+            fold_cols=np.asarray(fold_cols),
+            esum=np.asarray(esum)), fp)
 
     def _halted_after(n_rounds_d):
         """Post-segment host checks, in order: checkpoint already saved,
@@ -713,39 +730,43 @@ def _trimed_pipelined(
                       jnp.asarray(st.pv), jnp.asarray(st.dprev),
                       jnp.asarray(st.n_comp), jnp.asarray(st.n_rounds))
         fold_cols = jnp.asarray(st.fold_cols)
+        esum = jnp.asarray(st.esum)
         live = int(np.logical_and(st.alive,
                                   st.l < float(st.e_cl)).sum())
         need_enter = False
     else:
         if st is not None:      # resumed in the full-domain phase
             n_stages = st.n_stages
-            state10 = (jnp.asarray(st.l), jnp.asarray(st.alive),
-                       jnp.asarray(st.e_cl), jnp.asarray(st.m_cl),
-                       jnp.asarray(st.pidx), jnp.asarray(st.pe),
-                       jnp.asarray(st.pv), jnp.asarray(st.dprev),
-                       jnp.asarray(st.n_comp), jnp.asarray(st.n_rounds))
+            state_full = (jnp.asarray(st.l), jnp.asarray(st.alive),
+                          jnp.asarray(st.e_cl), jnp.asarray(st.m_cl),
+                          jnp.asarray(st.pidx), jnp.asarray(st.pe),
+                          jnp.asarray(st.pv), jnp.asarray(st.dprev),
+                          jnp.asarray(st.n_comp),
+                          jnp.asarray(st.n_rounds),
+                          jnp.asarray(st.esum))
             fold_cols = jnp.asarray(st.fold_cols)
         else:
-            state10 = _stage0_init(X, l0, warm_arr, budget, block, warm,
-                                   metric, use_kernels, interpret,
-                                   has_warm_idx)
+            state_full = _stage0_init(X, l0, warm_arr, budget, block,
+                                      warm, metric, use_kernels,
+                                      interpret, has_warm_idx)
         while True:
-            r0 = int(state10[9])
-            out = _stage0_loop(X, state10, budget, seg_cap, block,
+            r0 = int(state_full[9])
+            out = _stage0_loop(X, state_full, budget, seg_cap, block,
                                metric, use_kernels, interpret,
                                can_compact, rec_len)
-            state10, live_d = out[0], out[1]
+            state_full, live_d = out[0], out[1]
             live = int(live_d)
-            _save(PHASE_FULL, None, state10 + (fold_cols,))
+            _save(PHASE_FULL, None,
+                  state_full[:10] + (fold_cols, state_full[10]))
             _drain("full", out[2] if rec_len else None, r0,
-                   int(state10[9]))
-            halt = _halted_after(state10[9])
-            if (halt or live == 0 or int(state10[8]) >= budget_host
+                   int(state_full[9]))
+            halt = _halted_after(state_full[9])
+            if (halt or live == 0 or int(state_full[8]) >= budget_host
                     or (can_compact and 2 * live <= n)):
                 break
             # segment cap hit mid-phase: keep streaming full-domain rounds
         (l_c, alive_c, e_cl, m_cl, pidx, pe, pv, dprev, n_comp,
-         n_rounds) = state10
+         n_rounds, esum) = state_full
         surv_idx = jnp.arange(n, dtype=jnp.int32)
 
     # ---- compaction-ladder phase ----
@@ -759,17 +780,17 @@ def _trimed_pipelined(
             n_stages += 1
         need_enter = True
         while True:
-            state11 = (l_c, alive_c, e_cl, m_cl, pidx, pe, pv, dprev,
-                       n_comp, n_rounds, fold_cols)
+            state_lad = (l_c, alive_c, e_cl, m_cl, pidx, pe, pv, dprev,
+                         n_comp, n_rounds, fold_cols, esum)
             r0 = int(n_rounds)
-            out = _stage_loop(X, surv_idx, state11, budget, seg_cap,
+            out = _stage_loop(X, surv_idx, state_lad, budget, seg_cap,
                               block, metric, use_kernels, interpret,
                               is_floor, rec_len)
-            state11, live_d = out[0], out[1]
+            state_lad, live_d = out[0], out[1]
             (l_c, alive_c, e_cl, m_cl, pidx, pe, pv, dprev, n_comp,
-             n_rounds, fold_cols) = state11
+             n_rounds, fold_cols, esum) = state_lad
             live = int(live_d)
-            _save(PHASE_LADDER, surv_idx, state11)
+            _save(PHASE_LADDER, surv_idx, state_lad)
             _drain("ladder", out[2] if rec_len else None, r0,
                    int(n_rounds))
             halt = _halted_after(n_rounds)
@@ -805,6 +826,261 @@ def _trimed_pipelined(
         lo_bound=min(lo_int, e_h) * n / d1,
         halt_reason=halt_reason,
     )
+
+
+# ---------------------------------------------------------------------------
+# streaming repair: resume elimination over an injected survivor set
+# (DESIGN.md §15 — the churn-repair half of repro.stream.MedoidIndex)
+# ---------------------------------------------------------------------------
+def resume_with_survivors(
+    X,
+    l,
+    computed,
+    e_cl,
+    m_cl,
+    esum,
+    *,
+    block: int = 128,
+    metric: str = "l2",
+    ladder_min: int = LADDER_MIN,
+    use_kernels: bool = False,
+    interpret=None,
+    checkpoint=None,
+    checkpoint_every: int | None = None,
+    resume: str = "auto",
+    fingerprint_extra: dict | None = None,
+    trace=None,
+    repair_info: dict | None = None,
+):
+    """Finish an elimination whose bounds were repaired out-of-band.
+
+    The streaming index (:mod:`repro.stream`) delta-adjusts a persisted
+    solve's bounds and energy cache after churn, elects an incumbent
+    from the cache, and hands the *invalidated* rows — the ones whose
+    repaired ``l`` fell back under the incumbent — to this entry point.
+    It enters the compaction ladder directly: the injected survivor set
+    is compacted onto the pow2 rung by :func:`_stage_enter` with a
+    **neutralised previous-block carry** (``pv`` all-False, so the first
+    fold is a provable no-op — ``max(l, -inf)`` on the jnp path, an
+    all-masked column max in the kernel) and then runs the exact
+    :func:`_stage_loop` segments a fresh solve would, with the same
+    checkpoint / fault-injection / trace machinery (kill-and-resume
+    mid-repair is bit-identical, same as DESIGN.md §13).
+
+    ``l`` must hold valid lower bounds on the **current** internal
+    ``S/N`` energies for every row, ``computed`` marks rows whose exact
+    energy is cached in ``esum`` (raw ``S`` sums), and ``(e_cl, m_cl)``
+    is the incumbent elected from that cache — its energy exact on the
+    current set. Exactness then follows from the paper's argument
+    unchanged: every row ends computed or bound-eliminated.
+
+    Returns ``(result, final)``: a :class:`MedoidResult` whose counters
+    cover only the repair work, and ``final`` — the repaired
+    full-domain state ``{l, alive, esum, e_cl, m_cl}`` (numpy; ladder
+    buffers scattered back through ``surv_idx``) that seeds the next
+    repair."""
+    require_metric(metric, need_triangle=True,
+                   caller="resume_with_survivors")
+    from repro.core.solve_state import (PHASE_LADDER, SolveState,
+                                        SolveStateMismatch, load_state,
+                                        save_state, state_fingerprint)
+    from repro.runtime import faults
+
+    X = jnp.asarray(X)
+    n = X.shape[0]
+    if n < 2:
+        raise ValueError("resume_with_survivors needs n >= 2; tiny sets "
+                         "re-solve from scratch")
+    block = int(min(block, n))
+    floor = max(int(ladder_min), block)
+    budget_host = faults.effective_budget(2**31 - 1)
+    budget = jnp.asarray(budget_host, jnp.int32)
+
+    l_in = jnp.maximum(jnp.asarray(l, X.dtype), 0.0)
+    alive_in = jnp.asarray(np.logical_not(np.asarray(computed, bool)))
+    esum_in = jnp.asarray(esum, X.dtype)
+    e0 = jnp.asarray(np.asarray(e_cl, X.dtype))
+    m0 = jnp.asarray(int(m_cl), jnp.int32)
+
+    ck = _as_checkpointer(checkpoint)
+    if resume not in ("auto", "never", "require"):
+        raise ValueError(f"resume must be 'auto', 'never' or 'require', "
+                         f"got {resume!r}")
+    from repro.obs.trace import _finite as _tfin
+    from repro.obs.trace import resolve_trace
+    tracer = resolve_trace(trace)
+    segmented = ck is not None or faults.active() or tracer is not None
+    if checkpoint_every is None:
+        checkpoint_every = ((tracer.every or _SEG_DEFAULT)
+                            if tracer is not None else _SEG_DEFAULT)
+    seg_cap = jnp.asarray(
+        max(int(checkpoint_every), 1) if segmented else 2**31 - 1,
+        jnp.int32)
+    fp = state_fingerprint(
+        n=n, d=int(X.shape[1]), dtype=str(X.dtype), metric=metric,
+        block=block, use_kernels=bool(use_kernels),
+        ladder_min=int(ladder_min), entry="stream_repair",
+        **(fingerprint_extra or {}))
+    st = None
+    if ck is not None and resume in ("auto", "require"):
+        st = load_state(ck, fp)
+        if st is None and resume == "require":
+            raise FileNotFoundError(
+                f"resume='require' but no SolveState checkpoint in "
+                f"{ck.dir}")
+    d1 = max(n - 1, 1)
+    rec_len = int(max(checkpoint_every, 1)) if tracer is not None else 0
+    if tracer is not None:
+        tracer.begin(engine="stream_repair", n=n, d=int(X.shape[1]),
+                     metric=metric, block=block,
+                     resumed=st is not None,
+                     elements=int(st.n_comp) if st is not None else 0,
+                     round_base=int(st.n_rounds) if st is not None else -1)
+        if repair_info and st is None:
+            # op summary once per repair; a resumed continuation already
+            # has it on disk (byte-identity across kill/resume)
+            tracer.event("repair", **repair_info)
+
+    halt = ""
+    n_stages = 0
+    m_out, is_floor = 0, False
+    need_enter = True
+
+    def _save(surv_idx_d, state12):
+        if ck is None:
+            return
+        (l_c, alive_c, e_d, m_d, pidx, pe, pv, dprev, n_comp, n_rounds,
+         fold_cols, esum_c) = state12
+        save_state(ck, SolveState(
+            phase=PHASE_LADDER, n_stages=n_stages, m_out=m_out,
+            is_floor=is_floor, surv_idx=np.asarray(surv_idx_d),
+            l=np.asarray(l_c), alive=np.asarray(alive_c),
+            e_cl=np.asarray(e_d), m_cl=np.asarray(m_d),
+            pidx=np.asarray(pidx), pe=np.asarray(pe), pv=np.asarray(pv),
+            dprev=np.asarray(dprev), n_comp=np.asarray(n_comp),
+            n_rounds=np.asarray(n_rounds),
+            fold_cols=np.asarray(fold_cols),
+            esum=np.asarray(esum_c)), fp)
+
+    def _drain(rec, r0, r1):
+        if tracer is None or rec is None:
+            return
+        ints, flts = np.asarray(rec[0]), np.asarray(rec[1])
+        for j in range(int(r1) - int(r0)):
+            liv, inc, ncmp = (int(v) for v in ints[j])
+            e = float(flts[j, 0])
+            ls = None
+            if liv > 0:
+                f = flts[j]
+                ls = {"min": _tfin(f[2]), "q25": _tfin(f[3]),
+                      "q50": _tfin(f[4]), "q75": _tfin(f[5]),
+                      "max": _tfin(f[6]), "mean": _tfin(f[1])}
+            tracer.segment(
+                round=int(r0) + 1 + j, phase="repair", stage=n_stages,
+                rung=m_out, survivors=liv, incumbent=inc,
+                energy=(e * n / d1 if np.isfinite(e) else None),
+                elements=ncmp, l_summary=ls)
+        tracer.flush()
+
+    if st is not None:
+        if st.phase != PHASE_LADDER:
+            raise SolveStateMismatch(
+                "stream-repair checkpoints are always ladder-phase")
+        n_stages, m_out, is_floor = st.n_stages, st.m_out, st.is_floor
+        surv_idx = jnp.asarray(st.surv_idx)
+        (l_c, alive_c, e_d, m_d, pidx, pe, pv, dprev, n_comp,
+         n_rounds) = (jnp.asarray(st.l), jnp.asarray(st.alive),
+                      jnp.asarray(st.e_cl), jnp.asarray(st.m_cl),
+                      jnp.asarray(st.pidx), jnp.asarray(st.pe),
+                      jnp.asarray(st.pv), jnp.asarray(st.dprev),
+                      jnp.asarray(st.n_comp), jnp.asarray(st.n_rounds))
+        fold_cols = jnp.asarray(st.fold_cols)
+        esum_c = jnp.asarray(st.esum)
+        live = int(np.logical_and(st.alive, st.l < float(st.e_cl)).sum())
+        need_enter = False
+    else:
+        surv_idx = jnp.arange(n, dtype=jnp.int32)
+        l_c, alive_c, e_d, m_d = l_in, alive_in, e0, m0
+        # neutralised previous-block carry: all-False pv makes the
+        # first fold an identity on both the jnp and kernel paths
+        pidx = jnp.zeros(block, jnp.int32)
+        pe = jnp.zeros(block, X.dtype)
+        pv = jnp.zeros(block, bool)
+        dprev = jnp.zeros((block, 0), X.dtype)
+        n_comp = jnp.asarray(0, jnp.int32)
+        n_rounds = jnp.asarray(0, jnp.int32)
+        fold_cols = jnp.asarray(0, jnp.int32)
+        esum_c = esum_in
+        live = int(jnp.logical_and(alive_in, l_in < e0).sum())
+
+    while not halt and live > 0 and int(n_comp) < budget_host:
+        if need_enter:
+            # unlike the fresh driver (which only ladders when n > floor)
+            # this entry point always compacts, so clamp the rung to n
+            m_out = min(max(pow2_at_least(live), floor), n)
+            is_floor = m_out <= floor or m_out >= n
+            surv_idx, l_c, alive_c, dprev = _stage_enter(
+                X, surv_idx, l_c, alive_c, e_d, pidx, m_out, metric,
+                use_kernels, interpret)
+            n_stages += 1
+        need_enter = True
+        while True:
+            state_lad = (l_c, alive_c, e_d, m_d, pidx, pe, pv, dprev,
+                         n_comp, n_rounds, fold_cols, esum_c)
+            r0 = int(n_rounds)
+            out = _stage_loop(X, surv_idx, state_lad, budget, seg_cap,
+                              block, metric, use_kernels, interpret,
+                              is_floor, rec_len)
+            state_lad, live_d = out[0], out[1]
+            (l_c, alive_c, e_d, m_d, pidx, pe, pv, dprev, n_comp,
+             n_rounds, fold_cols, esum_c) = state_lad
+            live = int(live_d)
+            _save(surv_idx, state_lad)
+            _drain(out[2] if rec_len else None, r0, int(n_rounds))
+            faults.on_segment(int(n_rounds))
+            if halt or live == 0 or int(n_comp) >= budget_host:
+                break
+            if not is_floor and 4 * live <= m_out:
+                break               # ladder trigger: next rung compacts
+
+    # ---- finalize + scatter the compacted buffers back to (n,) ----
+    n_rounds_h = int(n_rounds)
+    n_comp_h = int(n_comp)
+    e_h = float(e_d)
+    l_np, alive_np = np.asarray(l_c), np.asarray(alive_c)
+    live_mask = np.logical_and(alive_np, l_np < e_h)
+    certified = not live_mask.any()
+    lo_int = float(l_np[live_mask].min()) if live_mask.any() else e_h
+    halt_reason = "" if certified else (halt or "budget")
+
+    l_full = np.array(np.asarray(l_in))
+    alive_full = np.array(np.asarray(alive_in))
+    if n_stages > 0 or st is not None:        # ladder ran: buffers compacted
+        sidx = np.asarray(surv_idx)
+        slot = np.isfinite(l_np)              # empty slots stay +inf
+        l_full[sidx[slot]] = l_np[slot]
+        alive_full[sidx[slot]] = alive_np[slot]
+    else:
+        l_full, alive_full = l_np.copy(), alive_np.copy()
+
+    if tracer is not None:
+        tracer.end(engine="stream_repair", index=int(m_d),
+                   energy=(e_h * n / d1 if np.isfinite(e_h) else None),
+                   elements=n_comp_h, rounds=n_rounds_h,
+                   certified=certified, halt_reason=halt_reason,
+                   survivors=int(live_mask.sum()), stages=n_stages)
+    result = MedoidResult(
+        int(m_d), e_h * n / d1, n_comp_h, n_rounds_h, n_comp_h * n,
+        n_stages=n_stages,
+        x_cols_streamed=n_rounds_h * n + int(fold_cols),
+        certified=certified,
+        lo_bound=min(lo_int, e_h) * n / d1,
+        halt_reason=halt_reason,
+    )
+    final = {"l": l_full, "alive": alive_full,
+             "esum": np.asarray(esum_c), "e_cl": np.asarray(e_d),
+             "m_cl": int(m_d)}
+    return result, final
 
 
 # ---------------------------------------------------------------------------

@@ -18,10 +18,13 @@ geometry, budget...) would silently diverge from bit-identity, so a
 fingerprint mismatch refuses to resume (:class:`SolveStateMismatch`)
 instead of guessing.
 
-This is also the foundation the ROADMAP's streaming-maintenance item
-builds on: a finished solve's ``SolveState`` (bounds + survivor buffer
-+ incumbent) is exactly the index that insert/delete repair starts
-from.
+This is also the foundation the streaming index (``repro.stream``,
+DESIGN.md §15) builds on: a finished solve's ``SolveState`` (bounds +
+survivor buffer + incumbent) is exactly the index that insert/delete
+repair starts from. Format 2 adds ``esum`` — the per-row **energy
+cache**: the raw ``S(i)`` column sum of every computed pivot row,
+scatter-updated inside the round loops. Churn repair delta-adjusts
+these cached contributions instead of recomputing rows from scratch.
 """
 from __future__ import annotations
 
@@ -35,10 +38,10 @@ PHASE_FULL = 0      # full-domain rounds (no survivor buffer yet)
 PHASE_LADDER = 1    # compacted-buffer rounds on the pow2 ladder
 
 ARRAY_FIELDS = ("surv_idx", "l", "alive", "e_cl", "m_cl", "pidx", "pe",
-                "pv", "dprev", "n_comp", "n_rounds", "fold_cols")
+                "pv", "dprev", "n_comp", "n_rounds", "fold_cols", "esum")
 AUX_FIELDS = ("phase", "n_stages", "m_out", "is_floor")
 
-_FORMAT = 1          # bump on any layout change
+_FORMAT = 2          # bump on any layout change (2: + esum energy cache)
 
 
 class SolveStateMismatch(ValueError):
@@ -72,6 +75,7 @@ class SolveState:
     n_comp: np.ndarray | None = None
     n_rounds: np.ndarray | None = None
     fold_cols: np.ndarray | None = None
+    esum: np.ndarray | None = None
 
     # ------------------------------------------------------- conversions
     def leaves(self) -> list:

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeSpec
-from repro.distributed import sharding as sh
+from repro.launch import shardings as sh
 from repro.models import model as M
 from repro.optim import adamw
 

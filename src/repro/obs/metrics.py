@@ -217,5 +217,44 @@ class MetricsRegistry:
         return text
 
 
+#: histogram buckets for per-op repair cost (distance-matrix elements):
+#: a healthy streaming index amortises to a handful of rows per op
+_ELEMENTS_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 64.0, 256.0, 1024.0,
+                     4096.0, 16384.0)
+
+
+def stream_metrics(registry: "MetricsRegistry") -> dict:
+    """The streaming-index instrument family (``repro_obs_stream_*``),
+    registered idempotently on ``registry``. ``repro.stream.index``
+    feeds these; the keys are its contract:
+
+    - ``ops``            counter, labeled ``op=insert|delete|update``
+    - ``repairs``        counter: incremental repairs served
+    - ``invalidated``    counter: survivors re-admitted to the engine
+    - ``resolves``       counter: full re-solve fallbacks
+    - ``elements``       counter, labeled ``path=repair|resolve``
+    - ``elements_per_op`` histogram: amortised repair elements per
+      churn op — the headline economy of the index
+    """
+    return {
+        "ops": registry.counter(
+            "stream_ops_total", "churn operations applied to the index"),
+        "repairs": registry.counter(
+            "stream_repairs_total", "incremental repairs served"),
+        "invalidated": registry.counter(
+            "stream_invalidated_total",
+            "eliminated rows re-admitted to the engine by repair"),
+        "resolves": registry.counter(
+            "stream_full_resolves_total", "full re-solve fallbacks"),
+        "elements": registry.counter(
+            "stream_elements_total",
+            "repair cost in n-length distance row passes, by path"),
+        "elements_per_op": registry.histogram(
+            "stream_elements_per_op",
+            "amortised repair row passes per churn op",
+            buckets=_ELEMENTS_BUCKETS),
+    }
+
+
 #: process-wide default registry for library-level counters
 REGISTRY = MetricsRegistry()

@@ -37,6 +37,10 @@ Schema ``repro.obs.trace/v1`` — one JSON object per line:
 * ``heartbeat`` — a RoundWatchdog beat (only when a heartbeat is armed);
 * ``hop``    — a planner degrade/retry hop (``on_error="degrade"``);
 * ``lane``   — a packed ``solve_many`` per-lane summary;
+* ``repair`` — a streaming-index churn repair summary (DESIGN.md §15):
+  the op batch absorbed, rows delta-repaired, survivors invalidated —
+  emitted right after a ``begin`` with ``engine="stream_repair"``, whose
+  ``round`` events then use ``phase="repair"``;
 * ``end``    — final index/energy/elements/rounds/certified/halt_reason.
 
 ``sum(elements_round) == SolveReport.elements_computed`` exactly: the
@@ -60,6 +64,7 @@ EVENT_KEYS = {
     "heartbeat": {"kind", "round"},
     "hop": {"kind", "engine", "reason"},
     "lane": {"kind", "lane", "survivors", "elements"},
+    "repair": {"kind", "op", "repaired", "invalidated"},
     "end": {"kind", "engine", "index", "energy", "elements", "rounds",
             "certified", "halt_reason"},
 }

@@ -1,7 +1,7 @@
 """AdamW from scratch, mixed-precision, ZeRO-1-shardable state.
 
 State per parameter: fp32 master copy, fp32 first/second moments. The
-sharding layer (`repro.distributed.sharding.opt_specs`) places these on
+sharding layer (`repro.launch.shardings.opt_specs`) places these on
 the ``data`` axis (ZeRO-1) on top of the parameter's own TP sharding.
 Supports global-norm clipping, decoupled weight decay and cosine/linear
 schedules. Gradient compression (int8 error feedback) plugs in upstream

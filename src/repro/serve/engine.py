@@ -110,6 +110,8 @@ class MedoidServer:
         from repro.obs.metrics import MetricsRegistry
         self.metrics = MetricsRegistry()
         self.events: list[dict] = []
+        # resident streaming indexes (attach_index / index_query)
+        self.indexes: dict[str, object] = {}
 
     # -------------------------------------------------- observability
     def metrics_text(self) -> str:
@@ -405,6 +407,62 @@ class MedoidServer:
             self.step()
             steps += 1
         return self.finished
+
+    # -------------------------------------------------- stateful indexes
+    # One-shot queries above are stateless: each request re-solves its
+    # own X. The index mode keeps named ``repro.stream.MedoidIndex``
+    # instances resident so repeat traffic over a churning dataset pays
+    # incremental repair instead of a fresh solve per request. Churn and
+    # queries land in the same ``repro.obs.serve/v1`` event log as the
+    # scheduler's isolation decisions, and the stream instrument family
+    # (``repro_obs_stream_*``) registers on the server's own registry.
+    def attach_index(self, index, name: str = "default"):
+        """Make ``index`` resident under ``name`` (replacing any
+        previous holder) and point its metrics at the server registry."""
+        index.bind_metrics(self.metrics)
+        self.indexes[name] = index
+        self._event("index_attach", name=name, n=index.n,
+                    metric=index.metric)
+        return index
+
+    def _index(self, name: str):
+        if name not in self.indexes:
+            raise KeyError(
+                f"no index named {name!r} is attached (have: "
+                f"{sorted(self.indexes)}); call attach_index first")
+        return self.indexes[name]
+
+    def index_insert(self, rows, name: str = "default") -> None:
+        ix = self._index(name)
+        ix.insert(rows)
+        self._event("index_churn", name=name, op="insert",
+                    k=int(np.atleast_2d(rows).shape[0]), n=ix.n)
+
+    def index_delete(self, idx, name: str = "default") -> None:
+        ix = self._index(name)
+        ix.delete(idx)
+        self._event("index_churn", name=name, op="delete",
+                    k=int(np.atleast_1d(idx).size), n=ix.n)
+
+    def index_update(self, idx, rows, name: str = "default") -> None:
+        ix = self._index(name)
+        ix.update(idx, rows)
+        self._event("index_churn", name=name, op="update",
+                    k=int(np.atleast_1d(idx).size), n=ix.n)
+
+    def index_query(self, name: str = "default"):
+        """The exact medoid of the named index's current rows (bit-for-
+        bit a fresh solve); repair cost lands in the event payload."""
+        ix = self._index(name)
+        before = ix.stats["elements_total"]
+        res = ix.query()
+        self._event("index_query", name=name, n=ix.n,
+                    index=int(res.index), energy=float(res.energy),
+                    certified=bool(res.certified),
+                    elements=float(ix.stats["elements_total"] - before),
+                    repairs=int(ix.stats["repairs"]),
+                    full_resolves=int(ix.stats["full_resolves"]))
+        return res
 
 
 @dataclass

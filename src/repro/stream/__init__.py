@@ -1,0 +1,13 @@
+"""repro.stream — exact streaming medoid maintenance (DESIGN.md §15).
+
+:class:`MedoidIndex` holds a solved dataset and absorbs churn
+(``insert`` / ``delete`` / ``update``) by repairing the persisted
+elimination state instead of re-solving; ``query()`` stays bit-for-bit
+equal to a fresh ``solve()`` on the current rows.
+:class:`SlidingWindowIndex` specialises it to the append-and-expire
+pattern of the KV-compression serving workload.
+"""
+from repro.stream.index import MedoidIndex
+from repro.stream.window import SlidingWindowIndex
+
+__all__ = ["MedoidIndex", "SlidingWindowIndex"]

@@ -1,0 +1,76 @@
+"""Sliding-window medoid maintenance over an append-only stream.
+
+The KV-compression serving workload (``repro.serve.kv_compress``)
+tracks representatives of the most recent window of keys: each decode
+step appends new rows and expires the oldest. That churn pattern is
+exactly insert-at-the-tail plus delete-at-the-head, so
+:class:`SlidingWindowIndex` is a thin policy layer over
+:class:`repro.stream.index.MedoidIndex` — ``push`` appends the new
+rows then expires overflow from the front, and ``query`` stays the
+index's exact, bit-for-bit medoid of the current window.
+
+Positions inside :class:`MedoidIndex` are *dense*: deletes shift later
+rows down and inserts append at the end, so the oldest surviving rows
+always occupy the lowest positions. Expiring ``k`` rows is therefore
+always ``delete(arange(k))``, no bookkeeping needed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.trimed import MedoidResult
+from repro.stream.index import MedoidIndex
+
+
+class SlidingWindowIndex:
+    """Exact medoid of the last ``window`` rows of a stream.
+
+    ``push(rows)`` appends ``rows`` and expires whatever falls out of
+    the window; ``query()`` delegates to the wrapped
+    :class:`MedoidIndex` (same bit-for-bit contract against a fresh
+    solve of the current window). All ``MedoidIndex`` configuration —
+    metric, block, kernels, checkpoint, metrics, trace — passes
+    through ``**cfg``.
+    """
+
+    def __init__(self, index: MedoidIndex, window: int):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.index = index
+        self.window = int(window)
+
+    @classmethod
+    def from_data(cls, X, *, window: int, **cfg) -> "SlidingWindowIndex":
+        """Solve the tail of ``X`` that fits in ``window`` and wrap it."""
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        X = np.asarray(X, np.float32)
+        return cls(MedoidIndex.from_data(X[-window:], **cfg), window)
+
+    # ------------------------------------------------------------ stream
+    def push(self, rows) -> None:
+        """Append ``rows`` to the stream, expiring the oldest overflow.
+
+        Rows beyond ``window`` in a single push are dropped up front —
+        only the tail can survive, so the index never has to absorb
+        rows that would expire within the same call.
+        """
+        rows = np.atleast_2d(np.asarray(rows, np.float32))
+        if rows.shape[0] > self.window:
+            rows = rows[-self.window:]
+        self.index.insert(rows)
+        overflow = self.index.n - self.window
+        if overflow > 0:
+            self.index.delete(np.arange(overflow))
+
+    # ------------------------------------------------------------- reads
+    @property
+    def n(self) -> int:
+        return self.index.n
+
+    @property
+    def X(self) -> np.ndarray:
+        return self.index.X
+
+    def query(self, *, trace=None) -> MedoidResult:
+        return self.index.query(trace=trace)

@@ -1,6 +1,6 @@
 """Train step: value_and_grad + AdamW, microbatch accumulation, optional
 inter-pod gradient compression. Designed to be `jax.jit`-ed under a mesh
-with in/out shardings from `repro.distributed.sharding`.
+with in/out shardings from `repro.launch.shardings`.
 
 Under pjit/GSPMD the loss mean over the (data-sharded) batch already
 implies the gradient all-reduce; microbatching turns one step into a

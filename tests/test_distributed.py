@@ -1,15 +1,12 @@
 """Distributed tests. Multi-device cases run in subprocesses (the JAX
 device count is locked at first init; the main test process keeps the
 single real CPU device, per the dry-run contract)."""
-import json
 import subprocess
 import sys
 import textwrap
 
-import pytest
-
 from repro.configs.base import get_smoke_config
-from repro.distributed import sharding as sh
+from repro.launch import shardings as sh
 from repro.launch import specs as sp
 
 
@@ -57,7 +54,7 @@ def test_sharded_train_step_runs_and_matches():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
         from repro.configs.base import get_smoke_config
-        from repro.distributed import sharding as sh
+        from repro.launch import shardings as sh
         from repro.models import model as M
         from repro.optim import adamw
         from repro.train.train_step import make_train_step
@@ -205,37 +202,6 @@ def test_seq_shard_attention_matches_unsharded():
     assert "OK" in out
 
 
-def test_pipeline_parallel_matches_sequential():
-    """GPipe stage loop == plain sequential layer stack (4 stages)."""
-    out = _run("""
-        import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
-        from repro.distributed.pipeline import make_pipeline_fn
-        L, D, B = 8, 16, 12
-        key = jax.random.PRNGKey(0)
-        params = {"w": jax.random.normal(key, (L, D, D)) * 0.3,
-                  "b": jax.random.normal(key, (L, D)) * 0.1}
-        def layer_fn(lp, h):
-            return jnp.tanh(h @ lp["w"] + lp["b"])
-        x = jax.random.normal(key, (B, D))
-        # sequential reference
-        h = x
-        for i in range(L):
-            h = layer_fn(jax.tree.map(lambda a: a[i], params), h)
-        mesh = jax.make_mesh((4,), ("stage",),
-                             axis_types=(AxisType.Auto,))
-        fn = make_pipeline_fn(layer_fn, mesh, n_stages=4, microbatches=3)
-        got = jax.jit(fn)(params, x)
-        err = float(jnp.max(jnp.abs(got - h)))
-        assert err < 1e-5, err
-        # and it differentiates
-        g = jax.jit(jax.grad(lambda p, x: (fn(p, x)**2).sum()))(params, x)
-        assert all(bool(jnp.isfinite(v).all()) for v in jax.tree.leaves(g))
-        print("OK", err)
-    """, devices=4)
-    assert "OK" in out
-
-
 def test_checkpoint_elastic_restore_across_meshes(tmp_path):
     """Save sharded on a (4,2) mesh, restore onto (2,2) — elastic."""
     out = _run(f"""
@@ -261,24 +227,3 @@ def test_checkpoint_elastic_restore_across_meshes(tmp_path):
         print("OK")
     """)
     assert "OK" in out
-
-
-def test_dryrun_results_complete():
-    """The committed dry-run results cover all 40 cells x both meshes
-    (31 ok + 9 documented skips each)."""
-    import pathlib
-
-    path = pathlib.Path("results/dryrun.json")
-    if not path.exists():
-        pytest.skip("run `python -m repro.launch.dryrun` first")
-    res = json.loads(path.read_text())
-    for mesh in ("single", "multi"):
-        cells = {k: v for k, v in res.items() if v.get("mesh") == mesh}
-        if not cells:
-            pytest.skip(f"{mesh} sweep not yet run")
-        ok = sum(1 for v in cells.values() if v["status"] == "ok")
-        skipped = sum(1 for v in cells.values()
-                      if v["status"] == "skipped")
-        errors = [k for k, v in cells.items() if v["status"] == "error"]
-        assert not errors, errors
-        assert ok + skipped == 40 and skipped == 9, (mesh, ok, skipped)

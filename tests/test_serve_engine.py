@@ -230,3 +230,36 @@ def test_backoff_events_and_counters():
     text = srv.metrics_text()
     assert "repro_obs_serve_retries_total 1" in text
     assert "repro_obs_serve_backoff_steps_total 1" in text
+
+
+def test_stateful_index_mode():
+    """attach_index makes a streaming index resident: churn + query go
+    through the server, land in the serve event log, and the stream
+    instrument family registers on the server's scrape endpoint."""
+    from repro.core.pipelined import _trimed_pipelined
+    from repro.serve.engine import SERVE_EVENTS_SCHEMA
+    from repro.stream import MedoidIndex
+
+    X = _X(300, seed=5)
+    srv = MedoidServer()
+    srv.attach_index(MedoidIndex.from_data(X))
+    srv.index_query()
+    rows = _X(4, seed=6)
+    srv.index_insert(rows)
+    srv.index_delete([5, 9])
+    X = np.delete(np.concatenate([X, rows]), [5, 9], axis=0)
+    res = srv.index_query()
+    ref = _trimed_pipelined(X, metric="l2")
+    assert (res.index, res.energy, res.certified) == (
+        ref.index, ref.energy, ref.certified)
+    kinds = [e["kind"] for e in srv.events]
+    assert kinds == ["index_attach", "index_query", "index_churn",
+                     "index_churn", "index_query"]
+    assert all(e["schema"] == SERVE_EVENTS_SCHEMA for e in srv.events)
+    q = srv.events[-1]
+    assert q["index"] == ref.index and q["elements"] > 0
+    text = srv.metrics_text()
+    assert 'repro_obs_stream_ops_total{op="insert"} 1' in text
+    assert "repro_obs_stream_repairs_total" in text
+    with pytest.raises(KeyError, match="attach_index"):
+        srv.index_query("nope")

@@ -129,6 +129,37 @@ def test_checkpoint_keeps_last_k_and_latest_pointer(tmp_path):
     assert ck.latest_step() == 4
 
 
+def test_checkpoint_keep_last_none_is_unlimited(tmp_path):
+    ck = Checkpointer(tmp_path, keep_last=None)
+    tree = {"a": jnp.zeros(3)}
+    for s in range(1, 8):
+        ck.save(s, tree)
+    assert sorted(ck.all_steps()) == list(range(1, 8))
+    assert ck.latest_step() == 7
+
+
+def test_checkpoint_keep_last_below_one_refused(tmp_path):
+    for bad in (0, -1):
+        with pytest.raises(ValueError, match="keep_last"):
+            Checkpointer(tmp_path, keep_last=bad)
+
+
+def test_checkpoint_prune_drops_oldest_first(tmp_path):
+    """Pruning is by *step* order, not write order, and
+    ``latest_step()`` always names a step that survived the prune."""
+    ck = Checkpointer(tmp_path, keep_last=2)
+    tree = {"a": jnp.zeros(3)}
+    ck.save(7, tree)
+    ck.save(2, tree)                   # out-of-order write
+    assert ck.latest_step() == 2       # pointer tracks the last write
+    ck.save(9, tree)                   # prunes step 2 (lowest step)
+    assert sorted(ck.all_steps()) == [7, 9]
+    ck.save(5, tree)                   # below the retained window:
+    assert sorted(ck.all_steps()) == [7, 9]   # pruned immediately...
+    assert ck.latest_step() == 9       # ...and the pointer falls back
+                                       # to the highest surviving step
+
+
 def test_checkpoint_async(tmp_path):
     ck = Checkpointer(tmp_path)
     tree = {"a": jnp.arange(100.0)}
