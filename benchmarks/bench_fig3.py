@@ -49,4 +49,14 @@ def run(quick: bool = True):
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+
+    if "--graph" in sys.argv:
+        # graph-mode scaling sweep (sweeps vs N, xi fit): delegate to
+        # bench_graph, which emits the BENCH_graph.json artifact
+        from . import bench_graph
+
+        bench_graph.run(quick="--full" not in sys.argv,
+                        mode="smoke" if "--smoke" in sys.argv else None)
+    else:
+        run()

@@ -1,0 +1,138 @@
+"""Graph engine economy: SSSP sweeps vs N on synthetic networks.
+
+The paper's network experiments (Table 1 u-sensor/d-sensor rows, and
+the Fig-3 scaling protocol) measure "distance calculations" — for graph
+datasets one distance calculation is one single-source shortest-path
+(SSSP) *sweep*, the graph analogue of computing a full distance row
+(EXPERIMENTS.md §Networks). This bench runs the device graph engine
+(``metric="graph"``: batched Bellman-Ford sweeps + landmark bounds,
+DESIGN.md §16) against the host ``sequential`` engine (trimed over
+per-row Dijkstra, the paper-faithful baseline) and the implied full
+scan (``n`` sweeps) on the synthetic generators:
+
+* ``grid``   — jittered 4-neighbour lattice, road-network proxy;
+* ``sensor`` — random geometric graph, largest component (paper's
+  u-sensor protocol).
+
+Reported per cell: the engine's sweep breakdown (landmark / pivot /
+certify), ``sweep_frac = sweeps / N`` (the acceptance axis — the CI
+gate requires ``exact == 1`` and ``sweep_frac <= 0.5`` on the N=2048
+grid), and the Fig-3 fit constant ``xi = sweeps / sqrt(N)``. ``exact``
+asserts index parity between the graph engine and the sequential host
+solve — both are certified exact, so disagreement is a bug, not noise.
+
+Full mode (``BENCH_graph.json`` at the repo root, the committed
+artifact EXPERIMENTS.md §Networks tabulates) adds larger N for the
+scaling fit and a landmark-count sweep at the gate size.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .common import RESULTS_DIR, save_csv, timed
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_graph.json"
+
+FIELDS = ["config", "network", "n", "n_landmarks", "sweeps",
+          "landmark_sweeps", "pivot_sweeps", "certify_rows",
+          "relax_iters", "sweep_frac", "xi_sqrtN", "seq_elements",
+          "scan_sweeps", "exact", "wall_s"]
+
+
+def json_path_for(mode: str | None) -> Path:
+    """Smoke runs must not clobber the committed perf-trajectory file."""
+    if mode == "smoke":
+        return RESULTS_DIR / "BENCH_graph_smoke.json"
+    return JSON_PATH
+
+
+def _bench_config(network, n, nl, seed=0):
+    from repro.api import MedoidQuery, solve
+    from repro.core.graph import GraphOracle, grid_network, sensor_network
+
+    gen = grid_network if network == "grid" else sensor_network
+    g, _ = gen(n, seed=seed)
+    g_seq = GraphOracle(g.adj, g.n)
+
+    q = MedoidQuery(g, metric="graph", seed=seed,
+                    engine_opts={"n_landmarks": nl})
+    rep, wall = timed(solve, q)       # wall includes the per-graph jit
+    r_seq, _ = timed(solve, MedoidQuery(g_seq, seed=seed),
+                     plan="sequential")
+    info = rep.extras["graph"]
+    sweeps = int(rep.elements_computed)
+    return {
+        "config": f"{network}-{g.n}-L{nl}", "network": network,
+        "n": g.n, "n_landmarks": nl, "sweeps": sweeps,
+        "landmark_sweeps": int(info["landmark_sweeps"]),
+        "pivot_sweeps": int(info["pivot_sweeps"]),
+        "certify_rows": int(info["certify_rows"]),
+        "relax_iters": int(info["relax_iters"]),
+        "sweep_frac": round(sweeps / g.n, 4),
+        "xi_sqrtN": round(sweeps / np.sqrt(g.n), 2),
+        "seq_elements": int(r_seq.elements_computed),
+        "scan_sweeps": g.n,           # full scan: one SSSP per node
+        "exact": int(rep.index == r_seq.index),
+        "wall_s": round(wall, 3),
+    }
+
+
+def run(quick: bool = True, mode: str | None = None):
+    """Returns ``(rows, csv_path)`` like every bench; also writes the
+    ``bench_graph/v1`` JSON."""
+    if mode == "smoke":
+        # grid-2048 is the acceptance cell the CI gate reads
+        configs = [("grid", 512, 8), ("grid", 2048, 8),
+                   ("sensor", 600, 8)]
+    elif quick:
+        configs = [("grid", 512, 8), ("grid", 1024, 8),
+                   ("grid", 2048, 8), ("sensor", 800, 8),
+                   ("sensor", 1600, 8)]
+    else:
+        # Fig-3-style N sweep + a landmark-count sweep at the gate size
+        configs = ([("grid", n, 8)
+                    for n in (512, 1024, 2048, 4096, 8192)]
+                   + [("sensor", n, 8) for n in (800, 1600, 3200)]
+                   + [("grid", 2048, nl) for nl in (1, 4, 16)])
+
+    RESULTS_DIR.mkdir(exist_ok=True)
+    rows, records = [], []
+    for network, n, nl in configs:
+        rec = _bench_config(network, n, nl)
+        records.append(rec)
+        rows.append([rec[f] for f in FIELDS])
+        print(f"  {rec['config']}: sweeps={rec['sweeps']} "
+              f"({rec['sweep_frac']:.3f}N, xi={rec['xi_sqrtN']}) "
+              f"seq={rec['seq_elements']} scan={rec['scan_sweeps']} "
+              f"exact={rec['exact']}")
+
+    payload = {"schema": "bench_graph/v1", "fields": FIELDS,
+               "records": records,
+               "methodology": "one distance calculation = one SSSP "
+                              "sweep (full source row), the paper's "
+                              "cost unit mapped to graphs; graph "
+                              "engine = device Bellman-Ford sweeps + "
+                              "landmark (ALT) bounds, exactness "
+                              "checked against the certified "
+                              "sequential host solve; scan_sweeps = n "
+                              "is the brute-force reference; "
+                              "generators are synthetic proxies "
+                              "(EXPERIMENTS.md §Networks documents "
+                              "the gap to the paper's OSM data)"}
+    out_json = json_path_for(mode)
+    out_json.parent.mkdir(exist_ok=True)
+    out_json.write_text(json.dumps(payload, indent=1) + "\n")
+    csv_name = "graph_smoke" if mode == "smoke" else "graph"
+    path = save_csv(csv_name, FIELDS, rows)
+    return rows, path
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows, path = run(quick="--full" not in sys.argv,
+                     mode="smoke" if "--smoke" in sys.argv else None)
+    print(f"wrote {path}")

@@ -124,4 +124,14 @@ def run(quick: bool = True):
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+
+    if "--graph" in sys.argv:
+        # network-experiments protocol: delegate to bench_graph, which
+        # emits the BENCH_graph.json artifact EXPERIMENTS.md tabulates
+        from . import bench_graph
+
+        bench_graph.run(quick="--full" not in sys.argv,
+                        mode="smoke" if "--smoke" in sys.argv else None)
+    else:
+        run()

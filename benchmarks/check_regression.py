@@ -36,6 +36,13 @@ deterministic work counters the engines are built around:
   STREAM_VS_FRESH_MAX`` (repair must stay under 15% of re-solving at
   every query). Both are properties of the run itself, deterministic
   for the seeded stream.
+* ``bench_graph``: ``sweeps`` (SSSP sweeps, the paper's distance-
+  calculation unit mapped to graphs) against the baseline, plus two
+  **absolute** gates — ``exact == 1`` for every record (graph-engine
+  index must match the certified sequential host solve) and, on grid
+  networks with ``n >= GRAPH_GATE_MIN_N`` (the N=2048 acceptance
+  cell), ``sweep_frac <= GRAPH_SWEEP_FRAC_MAX`` — the exact graph
+  medoid must cost at most half a brute-force scan.
 
 Records are matched by their identity fields; a record present in the
 baseline but missing from the current run also fails (an engine cell
@@ -45,7 +52,8 @@ win). Regenerate the baselines deliberately with::
     PYTHONPATH=src python -m benchmarks.run --smoke
     cp results/BENCH_trimed_smoke.json results/BENCH_bandit_smoke.json \\
         results/BENCH_serve_smoke.json results/BENCH_obs_smoke.json \\
-        results/BENCH_stream_smoke.json benchmarks/baselines/
+        results/BENCH_stream_smoke.json results/BENCH_graph_smoke.json \\
+        benchmarks/baselines/
     cp results/TRACE_smoke.jsonl benchmarks/baselines/TRACE_golden.jsonl
 
 (then halve the serve baseline's speedup field by hand if the run was on
@@ -64,6 +72,8 @@ RESULTS_DIR = ROOT / "results"
 TOLERANCE = 0.10          # >10% growth of a cost counter fails the gate
 OBS_OVERHEAD_MAX = 1.05   # tracing on must stay within 5% of tracing off
 STREAM_VS_FRESH_MAX = 0.15  # streaming repair <= 15% of re-solve/query
+GRAPH_SWEEP_FRAC_MAX = 0.5  # exact graph medoid <= 0.5 N sweeps (grid,
+GRAPH_GATE_MIN_N = 2000     # ... at the N=2048 acceptance cell)
 
 # file -> (identity fields, lower-is-better cost fields,
 #          higher-is-better throughput fields)
@@ -85,6 +95,9 @@ GATES = {
                                 ("amortized_elements_per_op",
                                  "repair_elements"),
                                 ()),
+    "BENCH_graph_smoke.json": (("config", "network", "n", "n_landmarks"),
+                               ("sweeps",),
+                               ()),
 }
 
 
@@ -135,6 +148,38 @@ def check_stream_economy() -> list[str]:
                 f"BENCH_stream_smoke.json: {cfg} repair cost "
                 f"{ratio}x of a fresh solve exceeds the "
                 f"{STREAM_VS_FRESH_MAX}x ceiling")
+    return failures
+
+
+def check_graph_gates() -> list[str]:
+    """Absolute gates on the graph-engine smoke: every record must be
+    ``exact`` (graph-engine index == certified sequential host solve),
+    and the grid acceptance cells (``network == "grid"``, ``n >=
+    GRAPH_GATE_MIN_N``) must finish within ``GRAPH_SWEEP_FRAC_MAX`` of
+    a brute-force scan's sweeps (no baseline involved — both are
+    properties of the seeded run itself)."""
+    cur_path = RESULTS_DIR / "BENCH_graph_smoke.json"
+    if not cur_path.exists():
+        return [f"BENCH_graph_smoke.json: missing {cur_path} "
+                "(run `python -m benchmarks.run --smoke` first)"]
+    failures = []
+    for r in json.loads(cur_path.read_text()).get("records", []):
+        cfg = r.get("config")
+        if r.get("exact") != 1:
+            failures.append(
+                f"BENCH_graph_smoke.json: {cfg} is NOT exact — graph "
+                "engine diverged from the sequential host solve")
+        frac = r.get("sweep_frac")
+        if frac is None:
+            failures.append(f"BENCH_graph_smoke.json: {cfg} missing "
+                            "sweep_frac")
+        elif (r.get("network") == "grid"
+              and int(r.get("n", 0)) >= GRAPH_GATE_MIN_N
+              and float(frac) > GRAPH_SWEEP_FRAC_MAX):
+            failures.append(
+                f"BENCH_graph_smoke.json: {cfg} sweep fraction {frac} "
+                f"exceeds the {GRAPH_SWEEP_FRAC_MAX} ceiling (exact "
+                "graph medoid must beat half a brute-force scan)")
     return failures
 
 
@@ -190,6 +235,7 @@ def main(argv=None) -> int:
         failures.extend(check_file(name, id_fields, cost_fields, tp_fields))
     failures.extend(check_obs_overhead())
     failures.extend(check_stream_economy())
+    failures.extend(check_graph_gates())
     if failures:
         print("PERF REGRESSION GATE: FAIL")
         for f in failures:

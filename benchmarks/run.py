@@ -29,9 +29,9 @@ def main(argv=None):
     quick = not args.full
 
     from . import (bench_bandit, bench_batched, bench_faults, bench_fig3,
-                   bench_kernels, bench_obs, bench_serve, bench_sme_init,
-                   bench_stream, bench_table1, bench_table2,
-                   bench_trimed, roofline_report)
+                   bench_graph, bench_kernels, bench_obs, bench_serve,
+                   bench_sme_init, bench_stream, bench_table1,
+                   bench_table2, bench_trimed, roofline_report)
 
     if args.smoke:
         # the benches now route every engine through repro.api.solve;
@@ -51,7 +51,8 @@ def main(argv=None):
                   (bench_bandit, "bench_bandit/v1"),
                   (bench_serve, "bench_serve/v1"),
                   (bench_obs, "bench_obs/v1"),
-                  (bench_stream, "bench_stream/v1")]
+                  (bench_stream, "bench_stream/v1"),
+                  (bench_graph, "bench_graph/v1")]
         for bench, schema in checks:
             rows, path = bench.run(quick=True, mode="smoke")
             json_path = bench.json_path_for("smoke")
@@ -93,6 +94,7 @@ def main(argv=None):
         "fault_overhead": bench_faults.run,
         "obs_overhead": bench_obs.run,
         "stream_churn": bench_stream.run,
+        "graph_networks": bench_graph.run,
         "sme_init": bench_sme_init.run,
         "kernels": bench_kernels.run,
         "roofline": roofline_report.run,

@@ -25,6 +25,33 @@ dense ``pairwise`` path, and every engine built on them — without
 touching any ``repro`` internals. Validation error messages come from
 one place (:func:`require_metric`), so every engine reports admissible
 metrics identically.
+
+**Vector-backed vs oracle-backed metrics.** A *vector-backed* metric is
+a ``pairwise_fn`` over row coordinates — the common case, and what every
+dense engine consumes. An *oracle-backed* metric has no pairwise
+formula: distances come from an oracle object passed as ``X`` (anything
+with ``.row(i)`` and ``.n``), and the metric name exists so the planner
+can route to the engine that knows how to drive that oracle. The
+built-in ``"graph"`` metric is the worked example: distances are
+shortest-path lengths answered by ``repro.core.graph.GraphOracle``
+(device Bellman-Ford sweeps + host Dijkstra), so its registered
+``pairwise_fn`` *raises* with a pointer to the oracle — calling it with
+vector rows is always a routing bug, and the registry keeps that error
+in one place. Register your own oracle-backed metric the same way:
+``register_metric("mymetric", raising_fn, has_triangle=...)`` plus an
+oracle class with ``.row``/``.n`` — the ``sequential``/``scan`` engines
+drive any such oracle as-is (see README "Bring your own metric").
+
+**`has_triangle` semantics for non-metric bounds.** ``has_triangle``
+does not promise the engines use the metric axioms directly — it
+promises *valid lower bounds exist* for trimed's elimination test
+(``E(j) >= |E(i) - d(i, j)|``). For vector metrics that is the triangle
+inequality itself. For ``"graph"`` it is the landmark (ALT) bound
+``d(i, j) >= max_l |d(l, i) - d(l, j)|`` (DESIGN.md §16) — derived
+*from* the triangle inequality of shortest-path length, but evaluated
+without ever computing ``d(i, j)``. Either way the contract the flag
+makes is the same: every bound the engines fold is a true lower bound,
+so elimination is exact. Set it only when you can prove that.
 """
 from __future__ import annotations
 
@@ -54,7 +81,7 @@ class Metric:
 
 
 _REGISTRY: dict[str, Metric] = {}
-_BUILTIN_NAMES = ("l2", "sqeuclidean", "l1", "cosine")
+_BUILTIN_NAMES = ("l2", "sqeuclidean", "l1", "cosine", "graph")
 
 
 def register_metric(
@@ -175,3 +202,22 @@ register_metric(Metric(
 register_metric(Metric(
     "cosine", _builtin_pairwise("cosine"), has_triangle=False, kernel=False,
     description="1 - cosine similarity (violates triangle)"))
+
+
+def _graph_pairwise(a, b):
+    """Oracle-backed: there is no coordinate formula for shortest-path
+    distance, so reaching this function is a routing error by
+    construction — the canonical message points at the oracle."""
+    raise ValueError(
+        "metric 'graph' is oracle-backed: distances are shortest-path "
+        "lengths answered by a repro.core.graph.GraphOracle, not a "
+        "formula over vector rows. Pass the oracle as the query input — "
+        "solve(MedoidQuery(GraphOracle(adj, n), metric='graph'))")
+
+
+# has_triangle=True: shortest-path length on an undirected non-negative
+# graph is a true metric, and the engine's landmark (ALT) bounds
+# |d(l,i) - d(l,j)| are valid elimination lower bounds (DESIGN.md §16).
+register_metric(Metric(
+    "graph", _graph_pairwise, has_triangle=True, kernel=False,
+    description="shortest-path length on a GraphOracle (oracle-backed)"))

@@ -8,9 +8,13 @@ survivor-compacted ``pipelined`` engine (§4), the multi-cluster
 ``batched``/``batched_pipelined`` engines (§3/§4), the multi-device
 ``sharded``/``batched_sharded`` engines (§11), the sampling
 ``bandit`` and the bandit+finisher ``hybrid`` (§9), the ``kmedoids``
-driver (§5), host ``topk`` ranking (§6), and the quadratic ``scan``
+driver (§5), host ``topk`` ranking (§6), the quadratic ``scan``
 safety net for exact queries on non-triangle metrics (itself sharded
-under ``device_policy="sharded"``).
+under ``device_policy="sharded"``), and the ``graph`` engine (§16) —
+batched device Bellman-Ford sweeps with landmark elimination bounds for
+``metric="graph"`` queries over a ``repro.core.graph.GraphOracle``
+(directed oracles reroute to the host sequential sweeps: shortest-path
+asymmetry breaks the landmark bounds).
 
 ``solve(query)`` executes the plan; ``solve(query, explain=True)``
 returns the :class:`Plan` (engine + reasons) without computing anything;
@@ -43,7 +47,7 @@ SHARDED_N = 4096            # auto-shard above this when >1 device is up
 
 ENGINES = ("sequential", "block", "pipelined", "sharded", "batched",
            "batched_pipelined", "batched_sharded", "bandit", "hybrid",
-           "kmedoids", "topk", "scan")
+           "kmedoids", "topk", "scan", "graph")
 
 
 @dataclass(frozen=True)
@@ -234,6 +238,7 @@ def _derive_params(query: MedoidQuery, engine: str, reasons: list,
 _COST_SEQ = 2.4       # sequential / topk / batched multiplier (x 2^(d/2) sqrt(N))
 _COST_BLOCK = 3.0     # block-round engines pay partial final blocks
 _COST_ANYTIME = 5.5   # uncapped bandit race + finisher
+_COST_GRAPH = 6.0     # graph sweeps: spatial networks sit in the d~2 regime
 _KMED_BANDIT_FRAC = 0.125   # bandit medoid-update: default sampled fraction
 
 
@@ -254,6 +259,11 @@ def _estimate_cost(q: MedoidQuery, engine: str, params: dict) -> float:
 
     if engine == "scan":
         return float(n)              # exact: one row sum per element
+    if engine == "graph":
+        # landmark sweeps + elimination rounds; spatial networks have
+        # intrinsic dimension ~2, so no 2^(d/2) blow-up term
+        nl = float(q.engine_opts.get("n_landmarks", 8))
+        return float(min(n, max(nl + _COST_GRAPH * sqn, nl + block)))
     if engine == "sequential":
         return float(min(n, max(_COST_SEQ * df * sqn, 1.0)))
     if engine in ("block", "pipelined", "sharded"):
@@ -309,7 +319,40 @@ def plan_query(query: MedoidQuery) -> Plan:
     auto_shard = (q.device_policy == "auto" and not oracle
                   and n > SHARDED_N and _device_count() > 1)
 
-    if q.assignments is not None:
+    if m.name == "graph":
+        # oracle-backed metric: distances come from a GraphOracle's SSSP
+        # sweeps, so the input must BE the oracle and the task must be a
+        # single-medoid solve (the other kinds consume vector columns)
+        if not (oracle and hasattr(q.X, "adj")):
+            raise ValueError(
+                "solve: metric 'graph' is oracle-backed — pass a "
+                "repro.core.graph.GraphOracle as the query input: "
+                "solve(MedoidQuery(GraphOracle(adj, n), metric='graph'))")
+        if q.k is not None or q.assignments is not None \
+                or q.topk is not None:
+            raise ValueError(
+                "solve: metric 'graph' supports single-medoid queries "
+                "only (no k/assignments/topk — those engines consume "
+                "vector columns, not sweep rows)")
+        if anytime:
+            raise ValueError(
+                "solve: anytime/budgeted mode is not supported for "
+                "metric 'graph' (the bandit samples vector columns); "
+                "drop the budget/mode")
+        if getattr(q.X, "directed", False):
+            engine = "sequential"
+            reasons.append(
+                "metric 'graph' on a directed oracle: shortest-path "
+                "asymmetry breaks the landmark bounds, so the device "
+                "sweep engine is inadmissible; paper-faithful host "
+                "sequential sweeps (the D-Sensor protocol)")
+        else:
+            engine = "graph"
+            reasons.append(
+                f"metric 'graph', N={n}: batched device Bellman-Ford "
+                "sweeps with landmark (ALT) elimination bounds "
+                "(DESIGN.md §16)")
+    elif q.assignments is not None:
         if anytime:
             raise ValueError(
                 "solve: anytime per-cluster queries are not supported "
@@ -798,6 +841,19 @@ def _run_kmedoids(q: MedoidQuery, plan: Plan) -> SolveReport:
                 "medoid_update": mu})
 
 
+def _run_graph(q: MedoidQuery, plan: Plan) -> SolveReport:
+    """Batched device Bellman-Ford sweeps + landmark elimination bounds
+    over a :class:`repro.core.graph.GraphOracle` (DESIGN.md §16)."""
+    from repro.core.graph import graph_medoid
+    from repro.runtime import faults
+    faults.check_poison(q.X, "graph engine")
+    opts = dict(q.engine_opts)
+    block = int(opts.pop("block", q.block))
+    r, info = graph_medoid(q.X, seed=q.seed, block=block, **opts)
+    plan.params["sweeps"] = int(r.n_computed)
+    return _report_from_medoid(r, extras={"graph": info})
+
+
 _EXECUTORS = {
     "sequential": _run_sequential,
     "block": _run_block,
@@ -811,6 +867,7 @@ _EXECUTORS = {
     "kmedoids": _run_kmedoids,
     "topk": _run_topk,
     "scan": _run_scan,
+    "graph": _run_graph,
 }
 assert set(_EXECUTORS) == set(ENGINES)
 
@@ -943,6 +1000,8 @@ _DEGRADE_CHAIN = {
     "batched_sharded": ("batched_pipelined", "batched"),
     "batched_pipelined": ("batched",),
     "hybrid": ("bandit",),
+    # graph -> host sequential sweeps: same oracle, same exact answer
+    "graph": ("sequential",),
 }
 
 

@@ -23,7 +23,9 @@ from .baselines import (
     toprank,
     toprank2,
 )
-from .graph import GraphOracle, sensor_network
+from .graph import (GraphOracle, graph_medoid, grid_network,
+                    landmark_energy_bounds, largest_component,
+                    sensor_network, sweep_distances)
 
 __all__ = [
     "VectorOracle",
@@ -57,4 +59,9 @@ __all__ = [
     "pairwise",
     "sq_norms",
     "sensor_network",
+    "graph_medoid",
+    "grid_network",
+    "landmark_energy_bounds",
+    "largest_component",
+    "sweep_distances",
 ]

@@ -1,34 +1,138 @@
-"""Graph distance oracle — shortest-path metric for spatial-network data.
+"""Graph-distance subsystem — shortest-path metric for spatial networks.
 
-The paper's Table 1 runs trimed on road/rail/sensor networks where
-``dist`` is shortest-path length and "computing an element" means one
-Dijkstra sweep. Shortest-path is pointer-chasing work with no TPU
-analogue (DESIGN.md §8), so this oracle is host-side; the *algorithmic*
-layer (trimed's bound logic) is shared with the vector path.
+The paper's headline results (Table 1, Fig. 3) are on road/rail/sensor
+networks where ``dist`` is shortest-path length and "computing an
+element" means one single-source shortest-path (SSSP) sweep. This module
+supplies both halves of that workload:
+
+* :class:`GraphOracle` — CSR adjacency held on device plus an
+  instrumented host Dijkstra (the parity reference). ``row(i)`` is one
+  full sweep (one computed element — ``distances.elements_computed``);
+  ``pair``/``subrow`` run early-exit Dijkstra and charge the settled
+  fraction of a sweep.
+
+* :func:`sweep_distances` — the device "column" primitive: a batched
+  multi-source Bellman-Ford relaxation (one ``jax.lax.while_loop`` over
+  a ``(B, N)`` distance block, scatter-min over the edge list per
+  iteration) playing the role one pairwise block plays for the vector
+  engines. Unreachable nodes keep distance ``inf``, exactly like the
+  host Dijkstra.
+
+* :func:`graph_medoid` — trimed's elimination over sweeps. ``n_landmarks``
+  farthest-point sweeps seed ALT-style lower bounds (DESIGN.md §16):
+  shortest-path length on an undirected non-negatively-weighted graph is
+  a true metric, so ``d(i, j) >= |d(l, i) - d(l, j)|`` for every
+  landmark ``l``, and per-landmark energy lower bounds
+  ``E(j) >= (1/N) sum_i |L[l, j] - L[l, i]|`` follow by summing —
+  computed for all ``j`` at once in O(N log N) per landmark via sorted
+  prefix sums (:func:`landmark_energy_bounds`). Elimination then runs
+  the standard trimed round on exact sweep rows. Device sweeps are f32;
+  exactness against the f64 host reference is restored by an explicit
+  ``rel_margin`` slack on every elimination decision plus an f64 host
+  recompute of the finalist set (the §15 margin-election pattern), so
+  the returned index is bit-equal to the full-scan argmin.
+
+* Generators: :func:`grid_network` (road-like jittered lattice) and
+  :func:`sensor_network` (the paper's U-/D-Sensor Net, SM-I), both
+  restricted to their largest component via :func:`largest_component`.
+
+Directed graphs (the paper's D-Sensor) are quasi-metrics — landmark
+bounds need symmetry — so the planner routes them to the host
+sequential engine; :func:`graph_medoid` refuses them.
 """
 from __future__ import annotations
 
+import functools
 import heapq
 
 import numpy as np
 
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "GraphOracle",
+    "graph_medoid",
+    "grid_network",
+    "landmark_energy_bounds",
+    "largest_component",
+    "sensor_network",
+    "sweep_distances",
+]
+
 
 class GraphOracle:
-    """Instrumented Dijkstra oracle over an adjacency list.
+    """Instrumented shortest-path oracle over a weighted graph.
 
-    ``adj`` maps node -> list of (neighbor, weight). Unreachable nodes get
-    distance ``inf``; trimed handles this correctly (their bound only ever
-    grows, and an element with infinite energy is never a medoid candidate
-    in a connected component).
+    ``adj`` maps node -> list of (neighbor, weight); ``n`` is the node
+    count. For undirected graphs the adjacency must list both directions
+    (the generators here do). The host side answers ``row``/``pair``/
+    ``subrow`` with (early-exit) Dijkstra; the device side exposes the
+    same graph as CSR arrays (:meth:`csr`) and a flat relaxation edge
+    list (:meth:`device_edges`) for :func:`sweep_distances`.
+
+    Unreachable nodes get distance ``inf``; trimed handles this (the
+    bound only ever grows, and an element with infinite energy is never
+    a medoid candidate in a connected component).
+
+    Accounting follows ``distances.elements_computed``: one *element* is
+    one full ``(N,)`` row, so ``row`` charges ``n`` scalar distances and
+    the early-exit paths charge the number of nodes they actually
+    settled (``pair``/``subrow`` cost a fraction of a sweep, not a free
+    scalar — Dijkstra has no O(1) point query).
     """
 
-    def __init__(self, adj: dict[int, list[tuple[int, float]]], n: int):
+    def __init__(self, adj: dict[int, list[tuple[int, float]]], n: int,
+                 directed: bool = False):
         self.adj = adj
         self.n = n
+        self.directed = directed
         self.rows_computed = 0
         self.scalar_distances = 0
+        self._csr = None
+        self._dev = None
 
+    @property
+    def elements(self) -> float:
+        """Computed elements so far (full-row units; distances.py)."""
+        from .distances import elements_computed
+        return elements_computed(self.scalar_distances, self.n)
+
+    # -- device layout ------------------------------------------------------
+    def csr(self):
+        """Host CSR arrays ``(indptr, indices, weights)`` — indptr is
+        ``(n+1,)`` int32, indices/weights are ``(E,)`` int32/float32."""
+        if self._csr is None:
+            counts = np.zeros(self.n + 1, np.int64)
+            for u, edges in self.adj.items():
+                counts[u + 1] = len(edges)
+            indptr = np.cumsum(counts)
+            m = int(indptr[-1])
+            indices = np.empty(m, np.int32)
+            weights = np.empty(m, np.float32)
+            for u, edges in self.adj.items():
+                lo = indptr[u]
+                for k, (v, w) in enumerate(edges):
+                    indices[lo + k] = v
+                    weights[lo + k] = w
+            self._csr = (indptr.astype(np.int32), indices, weights)
+        return self._csr
+
+    def device_edges(self):
+        """Device-resident flat edge list ``(src, dst, w)`` for the
+        Bellman-Ford relaxation — the COO view of :meth:`csr`, uploaded
+        once and cached on the oracle."""
+        if self._dev is None:
+            indptr, indices, weights = self.csr()
+            deg = np.diff(indptr.astype(np.int64))
+            src = np.repeat(np.arange(self.n, dtype=np.int32), deg)
+            self._dev = (jnp.asarray(src), jnp.asarray(indices),
+                         jnp.asarray(weights))
+        return self._dev
+
+    # -- host Dijkstra (parity reference) -----------------------------------
     def row(self, i: int) -> np.ndarray:
+        """One full SSSP sweep from ``i`` (one computed element)."""
         self.rows_computed += 1
         self.scalar_distances += self.n
         dist = np.full(self.n, np.inf)
@@ -46,26 +150,271 @@ class GraphOracle:
         return dist
 
     def pair(self, i: int, j: int) -> float:
-        # single-pair shortest path: run Dijkstra with early exit
-        self.scalar_distances += 1
+        """Single-pair shortest path: Dijkstra from ``i`` that stops the
+        moment ``j`` is settled (popped with its final distance), charged
+        as the settled fraction of a sweep."""
         dist = {i: 0.0}
         heap = [(0.0, i)]
+        settled = 0
         while heap:
             d, u = heapq.heappop(heap)
-            if u == j:
-                return d
             if d > dist.get(u, np.inf):
                 continue
+            settled += 1
+            if u == j:                       # early exit: j is final
+                self.scalar_distances += settled
+                return d
             for v, w in self.adj.get(u, ()):
                 nd = d + w
                 if nd < dist.get(v, np.inf):
                     dist[v] = nd
                     heapq.heappush(heap, (nd, v))
+        self.scalar_distances += settled     # exhausted: j unreachable
         return float("inf")
 
     def subrow(self, i: int, idx: np.ndarray) -> np.ndarray:
-        self.scalar_distances += len(idx) - self.n  # row() adds n below
-        return self.row(i)[idx]
+        """Distances from ``i`` to ``idx``: Dijkstra that stops once every
+        (reachable) target is settled, charged by nodes settled."""
+        idx = np.asarray(idx)
+        targets = set(int(t) for t in idx)
+        dist = np.full(self.n, np.inf)
+        dist[i] = 0.0
+        done = set()
+        heap = [(0.0, i)]
+        settled = 0
+        while heap and len(done) < len(targets):
+            d, u = heapq.heappop(heap)
+            if d > dist[u]:
+                continue
+            settled += 1
+            if u in targets:
+                done.add(u)
+            for v, w in self.adj.get(u, ()):
+                nd = d + w
+                if nd < dist[v]:
+                    dist[v] = nd
+                    heapq.heappush(heap, (nd, v))
+        self.scalar_distances += settled
+        return dist[idx]
+
+
+# ---------------------------------------------------------------------------
+# device sweep primitive — batched multi-source Bellman-Ford
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n",))
+def _bf_sweep_jit(src, dst, w, sources, n):
+    """(B,) sources -> (B, n) shortest-path distances + iteration count.
+
+    Frontier relaxation over the whole edge list: per iteration, gather
+    tentative distances at every edge tail (``dist[:, src] + w``) and
+    scatter-min into the heads — all B sources in one ``(B, E)`` block.
+    The while_loop runs until a full iteration changes nothing (at most
+    ``n`` iterations: Bellman-Ford converges in <= n-1 rounds on any
+    graph with non-negative weights). Unreachable nodes stay ``inf``
+    (``inf + w`` never beats a finite candidate, and never terminates
+    late: an all-inf frontier relaxes to itself and stops the loop).
+    """
+    b = sources.shape[0]
+    dist = jnp.full((b, n), jnp.inf, jnp.float32)
+    dist = dist.at[jnp.arange(b), sources].set(0.0)
+
+    def cond(state):
+        _, changed, it = state
+        return jnp.logical_and(changed, it < n)
+
+    def body(state):
+        dist, _, it = state
+        cand = dist[:, src] + w[None, :]          # (B, E) gather + relax
+        new = dist.at[:, dst].min(cand)           # scatter-min into heads
+        return new, jnp.any(new < dist), it + jnp.int32(1)
+
+    dist, _, iters = jax.lax.while_loop(
+        cond, body, (dist, jnp.array(True), jnp.int32(0)))
+    return dist, iters
+
+
+def sweep_distances(oracle: GraphOracle, sources) -> tuple[np.ndarray, int]:
+    """Batched multi-source SSSP on device; the graph engine's column
+    primitive. Returns ``(dist, iters)`` — ``dist`` is the ``(B, n)``
+    f32 distance block, ``iters`` the relaxation iterations the
+    while_loop ran. Charges one computed element per source on the
+    oracle (one sweep == one full row)."""
+    sources = np.asarray(sources, np.int32)
+    src, dst, w = oracle.device_edges()
+    dist, iters = _bf_sweep_jit(src, dst, w, jnp.asarray(sources),
+                                oracle.n)
+    oracle.rows_computed += len(sources)
+    oracle.scalar_distances += len(sources) * oracle.n
+    return np.asarray(dist), int(iters)
+
+
+# ---------------------------------------------------------------------------
+# landmark (ALT-style) energy lower bounds — DESIGN.md §16
+# ---------------------------------------------------------------------------
+def landmark_energy_bounds(L: np.ndarray) -> np.ndarray:
+    """Initial energy lower bounds from landmark sweep rows.
+
+    ``L`` is the ``(n_landmarks, N)`` matrix of exact distances from each
+    landmark. For a true metric, ``d(i, j) >= |L[l, i] - L[l, j]|``
+    (triangle, both ways), so summing over ``i`` gives a valid per-node
+    energy bound per landmark; the returned bound is the max over
+    landmarks, in the internal ``E = S/N`` convention. Each landmark's
+    sum ``sum_i |x - v_i|`` for all ``x = v_j`` at once comes from the
+    sorted order of ``v``: with ``k(j)`` values ``<= v_j`` and prefix
+    sums ``P``, it equals ``v_j (2 k - N) - 2 P[k] + P[N]`` —
+    O(N log N) per landmark instead of O(N^2). Requires finite ``L``
+    (i.e. a connected graph)."""
+    L = np.asarray(L, np.float64)
+    nl, n = L.shape
+    best = np.zeros(n)
+    for v in L:
+        sv = np.sort(v)
+        prefix = np.concatenate(([0.0], np.cumsum(sv)))
+        k = np.searchsorted(sv, v, side="right")
+        sums = v * (2 * k - n) - 2 * prefix[k] + prefix[n]
+        np.maximum(best, sums / n, out=best)
+    return best
+
+
+# margin covering f32 sweep rounding vs the f64 host reference: path
+# sums accumulate ~eps32 per hop, energies average them — 1e-3 relative
+# dwarfs that by orders of magnitude while keeping elimination sharp.
+_REL_MARGIN = 1e-3
+
+
+def graph_medoid(oracle: GraphOracle, *, n_landmarks: int = 8,
+                 block: int = 64, seed: int = 0,
+                 rel_margin: float = _REL_MARGIN):
+    """Exact medoid of a connected undirected graph via batched sweeps.
+
+    trimed's elimination with SSSP sweeps as the element: ``n_landmarks``
+    farthest-point landmark sweeps seed ALT lower bounds (each landmark
+    row is itself an exact energy, so no sweep is wasted), then rounds of
+    up to ``block`` smallest-bound survivors run as one batched
+    Bellman-Ford block, tightening every bound against every pivot
+    (``l(j) <- max(l(j), |E(b) - d(b, j)|)``). All elimination decisions
+    carry a ``rel_margin`` slack for f32 sweep rounding; the finalists
+    within the margin of the best f32 energy are recomputed by the f64
+    host Dijkstra, making the returned index bit-equal to the full-scan
+    reference.
+
+    Returns ``(MedoidResult, info)`` — ``info`` holds the sweep
+    breakdown (landmark/pivot/certify), relaxation iterations and the
+    landmark ids. Raises on directed oracles (quasi-metric: landmark
+    bounds need symmetry) and on disconnected graphs (every energy is
+    infinite — restrict to a component with :func:`largest_component`).
+    """
+    from repro.obs.metrics import REGISTRY, graph_metrics
+    from .trimed import MedoidResult
+
+    if getattr(oracle, "directed", False):
+        raise ValueError(
+            "graph_medoid: directed graphs are quasi-metrics (d(i,j) != "
+            "d(j,i)) and landmark lower bounds need symmetry; use the "
+            "host sequential engine (the planner does this for "
+            "metric='graph' on a directed oracle)")
+    n = int(oracle.n)
+    if n == 1:
+        return MedoidResult(0, 0.0, 1, 0, 0), {
+            "landmarks": [], "landmark_sweeps": 0, "pivot_sweeps": 0,
+            "certify_rows": 1, "relax_iters": 0, "finalists": 1}
+    inst = graph_metrics(REGISTRY)
+    rng = np.random.default_rng(seed)
+    nl = max(1, min(int(n_landmarks), n))
+    block = max(1, min(int(block), n))
+
+    # -- landmark sweeps: farthest-point selection, one sweep each ----------
+    L = np.empty((nl, n), np.float64)
+    landmarks = np.empty(nl, np.int64)
+    mind = None
+    relax_iters = 0
+    for t in range(nl):
+        lm = int(rng.integers(n)) if t == 0 else int(np.argmax(mind))
+        row, iters = sweep_distances(oracle, [lm])
+        relax_iters += iters
+        if not np.isfinite(row).all():
+            bad = int(np.argmax(~np.isfinite(row[0])))
+            raise ValueError(
+                f"graph_medoid: node {bad} is unreachable from node {lm} "
+                "— the graph is disconnected, so every energy is "
+                "infinite and the medoid is undefined; restrict to a "
+                "component first (repro.core.graph.largest_component)")
+        L[t] = row[0]
+        landmarks[t] = lm
+        mind = L[t].copy() if mind is None else np.minimum(mind, L[t])
+    inst["sweeps"].inc(nl, kind="landmark")
+
+    # -- initial bounds + incumbent from the landmark rows ------------------
+    l = landmark_energy_bounds(L)                 # ALT energy bounds (E=S/N)
+    e = np.full(n, np.inf)
+    computed = np.zeros(n, bool)
+    e_lm = L.sum(axis=1) / n
+    for t in range(nl):
+        np.maximum(l, np.abs(e_lm[t] - L[t]), out=l)   # landmark = pivot
+    e[landmarks] = e_lm
+    computed[landmarks] = True
+    l[computed] = e[computed]                      # computed bounds are tight
+    b_best = int(np.argmin(e_lm))
+    m_cl, e_cl = int(landmarks[b_best]), float(e_lm[b_best])
+
+    # -- elimination rounds over batched pivot sweeps -----------------------
+    pivot_sweeps = 0
+    n_rounds = 0
+    while True:
+        margin = rel_margin * e_cl
+        surv = ~computed & (l < e_cl + margin)
+        live = int(surv.sum())
+        if live == 0:
+            break
+        b = min(block, live)
+        order = np.argsort(np.where(surv, l, np.inf), kind="stable")[:b]
+        # fixed-width source batch: pad with the first pivot so the jit
+        # program is shared across rounds (padding recomputes a known
+        # row — no new information, not charged)
+        sources = np.full(block, order[0], np.int64)
+        sources[:b] = order
+        D, iters = sweep_distances(oracle, sources)
+        oracle.rows_computed -= block - b          # padding is not progress
+        oracle.scalar_distances -= (block - b) * n
+        relax_iters += iters
+        D = D[:b].astype(np.float64)
+        eb = D.sum(axis=1) / n
+        r_best = int(np.argmin(eb))
+        if eb[r_best] < e_cl:
+            m_cl, e_cl = int(order[r_best]), float(eb[r_best])
+        np.maximum(l, np.abs(eb[:, None] - D).max(axis=0), out=l)
+        e[order] = eb
+        computed[order] = True
+        l[computed] = e[computed]
+        pivot_sweeps += b
+        n_rounds += 1
+    inst["sweeps"].inc(pivot_sweeps, kind="pivot")
+    inst["relax_iters"].inc(relax_iters)
+
+    # -- f64 finalist certification (host Dijkstra, the parity path) --------
+    margin = rel_margin * e_cl
+    finalists = np.nonzero(computed & (e <= e_cl + 2 * margin))[0]
+    best_i, best_e = -1, np.inf
+    for i in finalists:                            # ascending: stable ties
+        ei = oracle.row(int(i)).sum() / n
+        if ei < best_e:
+            best_i, best_e = int(i), float(ei)
+    inst["sweeps"].inc(len(finalists), kind="certify")
+    inst["solves"].inc()
+
+    n_computed = nl + pivot_sweeps + len(finalists)
+    result = MedoidResult(
+        best_i, best_e * n / (n - 1), n_computed, n_rounds,
+        n_distances=n_computed * n)
+    info = {
+        "landmarks": landmarks.tolist(),
+        "landmark_sweeps": nl,
+        "pivot_sweeps": pivot_sweeps,
+        "certify_rows": len(finalists),
+        "relax_iters": relax_iters,
+        "finalists": len(finalists),
+    }
+    return result, info
 
 
 def largest_component(
@@ -184,4 +533,37 @@ def sensor_network(
                         adj[i].append((j, w))
                         adj[j].append((i, w))
     adj, keep = largest_component(adj, n, directed=directed)
-    return GraphOracle(adj, len(keep)), pts[keep]
+    return GraphOracle(adj, len(keep), directed=directed), pts[keep]
+
+
+def grid_network(
+    n: int, seed: int = 0, jitter: float = 0.35
+) -> tuple[GraphOracle, np.ndarray]:
+    """Road-like grid network: ``side = round(sqrt(n))`` squared nodes on
+    a jittered lattice, 4-neighbour edges weighted by the Euclidean
+    distance between the jittered positions. Connected by construction
+    (every lattice stays one component under position jitter), so this
+    is the deterministic-size workload the CI sweep gate runs on.
+    Returns ``(GraphOracle, pts)`` with ``pts`` the (m, 2) positions."""
+    side = max(2, int(round(np.sqrt(n))))
+    m = side * side
+    rng = np.random.default_rng(seed)
+    gx, gy = np.meshgrid(np.arange(side), np.arange(side), indexing="ij")
+    pts = np.stack([gx, gy], axis=-1).reshape(m, 2).astype(np.float64)
+    pts += rng.uniform(-jitter, jitter, size=pts.shape)
+    pts /= side                                    # unit square, like SM-I
+    adj: dict[int, list[tuple[int, float]]] = {i: [] for i in range(m)}
+
+    def _link(a, b):
+        w = float(np.linalg.norm(pts[a] - pts[b]))
+        adj[a].append((b, w))
+        adj[b].append((a, w))
+
+    for r in range(side):
+        for c in range(side):
+            u = r * side + c
+            if c + 1 < side:
+                _link(u, u + 1)
+            if r + 1 < side:
+                _link(u, u + side)
+    return GraphOracle(adj, m), pts

@@ -256,5 +256,31 @@ def stream_metrics(registry: "MetricsRegistry") -> dict:
     }
 
 
+def graph_metrics(registry: "MetricsRegistry") -> dict:
+    """The graph-engine instrument family (``repro_obs_graph_*``),
+    registered idempotently on ``registry``. ``repro.core.graph`` feeds
+    these; the keys are its contract:
+
+    - ``sweeps``       counter, labeled ``kind=landmark|pivot|certify``:
+      SSSP sweeps — the graph workload's computed-element currency
+      (landmark = ALT bound seeding, pivot = elimination rounds,
+      certify = f64 host finalist rows)
+    - ``relax_iters``  counter: Bellman-Ford relaxation iterations the
+      device while_loop ran (the sweep-depth cost axis — one iteration
+      streams the whole edge list once)
+    - ``solves``       counter: graph-engine solves completed
+    """
+    return {
+        "sweeps": registry.counter(
+            "graph_sweeps_total",
+            "SSSP sweeps run by the graph engine, by kind"),
+        "relax_iters": registry.counter(
+            "graph_relax_iters_total",
+            "Bellman-Ford edge-list relaxation iterations"),
+        "solves": registry.counter(
+            "graph_solves_total", "graph-engine solves completed"),
+    }
+
+
 #: process-wide default registry for library-level counters
 REGISTRY = MetricsRegistry()

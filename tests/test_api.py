@@ -297,6 +297,9 @@ def test_solve_reaches_every_engine():
         (MedoidQuery(X, topk=4), None),                   # topk
         (MedoidQuery(X, metric="sqeuclidean"), None),     # scan
     ]
+    from repro.core.graph import grid_network
+    cases.append((MedoidQuery(grid_network(64, seed=2)[0],
+                              metric="graph"), None))     # graph
     for q, plan in cases:
         rep = solve(q, plan=plan)
         assert isinstance(rep, SolveReport)
@@ -475,8 +478,10 @@ def test_shim_medoid_dispatcher_backends():
 # metric registry
 # ---------------------------------------------------------------------------
 def test_registry_capabilities_are_single_source():
-    assert set(available_metrics()) >= {"l2", "l1", "sqeuclidean", "cosine"}
-    assert set(available_metrics(require_triangle=True)) == {"l1", "l2"}
+    assert set(available_metrics()) >= {"l2", "l1", "sqeuclidean", "cosine",
+                                        "graph"}
+    assert set(available_metrics(require_triangle=True)) == \
+        {"graph", "l1", "l2"}
     assert get_metric("l2").kernel and get_metric("l2").has_triangle
     assert not get_metric("cosine").has_triangle
     # matching error messages from the one gate, everywhere
@@ -611,7 +616,8 @@ def test_public_api_snapshot():
         EXPECTED_REPORT_FIELDS
     assert ENGINES == ("sequential", "block", "pipelined", "sharded",
                        "batched", "batched_pipelined", "batched_sharded",
-                       "bandit", "hybrid", "kmedoids", "topk", "scan")
+                       "bandit", "hybrid", "kmedoids", "topk", "scan",
+                       "graph")
 
 
 def test_query_is_a_pytree():
